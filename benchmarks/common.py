@@ -1,0 +1,72 @@
+"""Shared benchmark harness for the paper-figure reproductions.
+
+Sizes are scaled to a single-core CI box (the paper used 16-node EC2); the
+*ratios* (speedups) are the reproduction target, not absolute times.  Each
+module prints ``name,us_per_call,derived`` CSV rows via :func:`emit`.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+from contextlib import contextmanager
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
+
+from repro.core import PipeConfig, transfer, transfer_via_files
+from repro.core.directory import WorkerDirectory, set_directory
+from repro.engines import make_engine, make_paper_block
+
+DEFAULT_ROWS = 20_000
+REPEATS = 2
+
+
+def fresh() -> None:
+    set_directory(WorkerDirectory())
+
+
+def timed(fn: Callable[[], Any], repeats: int = REPEATS) -> float:
+    """Best-of-N wall time in seconds."""
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def pipe_transfer(src_name: str, dst_name: str, n_rows: int,
+                  config: Optional[PipeConfig] = None, workers: int = 1,
+                  strings: bool = False, block=None) -> float:
+    fresh()
+    src = make_engine(src_name, workers=workers)
+    dst = make_engine(dst_name, workers=workers)
+    src.put_block("t", block if block is not None
+                  else make_paper_block(n_rows, seed=1, strings=strings))
+
+    def run():
+        dst.drop("t2")
+        transfer(src, "t", dst, "t2", config=config, workers=workers,
+                 timeout=300)
+
+    return timed(run)
+
+
+def file_transfer(src_name: str, dst_name: str, n_rows: int,
+                  workers: int = 1, strings: bool = False,
+                  block=None) -> float:
+    fresh()
+    src = make_engine(src_name, workers=workers)
+    dst = make_engine(dst_name, workers=workers)
+    src.put_block("t", block if block is not None
+                  else make_paper_block(n_rows, seed=1, strings=strings))
+
+    def run():
+        dst.drop("t2")
+        transfer_via_files(src, "t", dst, "t2", workers=workers)
+
+    return timed(run)
+
+
+def emit(name: str, seconds: float, derived: str = "") -> None:
+    print(f"{name},{seconds * 1e6:.0f},{derived}")
+    sys.stdout.flush()

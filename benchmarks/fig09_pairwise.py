@@ -1,0 +1,35 @@
+"""Figure 9: total speedup, file system vs PipeGen, for every engine pair.
+
+Paper: 1e9 elements, 16 workers, CSV; avg 3.2x, max 3.8x.  Here: scaled
+rows, same 20-pair matrix, speedup = file_time / pipe_time.
+"""
+
+from __future__ import annotations
+
+from repro.core import PipeConfig
+from repro.engines import ENGINES
+
+from .common import DEFAULT_ROWS, emit, file_transfer, pipe_transfer
+
+
+def main(n_rows: int = DEFAULT_ROWS) -> dict:
+    speedups = {}
+    for s in ENGINES:
+        for d in ENGINES:
+            if s == d:
+                continue
+            tf = file_transfer(s, d, n_rows)
+            tp = pipe_transfer(s, d, n_rows, PipeConfig(mode="arrowcol"))
+            sp = tf / tp
+            speedups[(s, d)] = sp
+            emit(f"fig09.{s}->{d}.file", tf)
+            emit(f"fig09.{s}->{d}.pipe", tp, f"speedup={sp:.2f}x")
+    avg = sum(speedups.values()) / len(speedups)
+    mx = max(speedups.values())
+    emit("fig09.summary", 0.0,
+         f"avg={avg:.2f}x max={mx:.2f}x paper_avg=3.2x paper_max=3.8x")
+    return {"avg": avg, "max": mx, "speedups": speedups}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Figure 10: speedup by data type (fixed-width primitives benefit most;
+strings still win by skipping the file system)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import PipeConfig
+from repro.core.types import ColType, ColumnBlock, Field, Schema
+
+from .common import DEFAULT_ROWS, emit, file_transfer, pipe_transfer
+
+
+def _block(kind: str, n: int) -> ColumnBlock:
+    rng = np.random.default_rng(0)
+    if kind == "int":
+        cols = [rng.integers(0, 1 << 40, n) for _ in range(4)]
+        fields = [Field(f"c{i}", ColType.INT64) for i in range(4)]
+    elif kind == "float":
+        cols = [rng.standard_normal(n) for _ in range(4)]
+        fields = [Field(f"c{i}", ColType.FLOAT64) for i in range(4)]
+    elif kind == "bool":
+        cols = [rng.integers(0, 2, n).astype(bool) for _ in range(4)]
+        fields = [Field(f"c{i}", ColType.BOOL) for i in range(4)]
+    else:  # string
+        cols = [[f"s{x:012d}" for x in rng.integers(0, 1 << 40, n)]
+                for _ in range(4)]
+        fields = [Field(f"c{i}", ColType.STRING) for i in range(4)]
+    return ColumnBlock(Schema(fields), cols)
+
+
+def main(n_rows: int = DEFAULT_ROWS) -> dict:
+    out = {}
+    for kind in ("int", "float", "bool", "string"):
+        blk = _block(kind, n_rows)
+        tf = file_transfer("colstore", "dataframe", n_rows, block=blk)
+        tp = pipe_transfer("colstore", "dataframe", n_rows,
+                           PipeConfig(mode="arrowcol"), block=blk)
+        sp = tf / tp
+        out[kind] = sp
+        emit(f"fig10.{kind}.file", tf)
+        emit(f"fig10.{kind}.pipe", tp, f"speedup={sp:.2f}x")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Figure 11: optimization breakdown, Myria->Giraph analog
+(colstore -> graphstore).
+
+Rungs: file baseline -> IORedirect only (text) -> +binary primitives
+(parts) -> +delimiter removal (binary_rows) -> full PipeGen (arrowcol,
+column pivot).  A manually-optimized pipe (hand-written socket transfer of
+the typed columns, no PipeGen machinery) bounds what generation could hope
+to reach."""
+
+from __future__ import annotations
+
+import pickle
+import socket
+import threading
+
+from repro.core import PipeConfig
+from repro.core.directory import WorkerDirectory, set_directory
+from repro.engines import make_engine, make_paper_block
+
+from .common import DEFAULT_ROWS, emit, file_transfer, pipe_transfer, timed
+
+RUNGS = [
+    ("ioredirect", PipeConfig(mode="text")),
+    ("binary", PipeConfig(mode="parts")),
+    ("delim_removed", PipeConfig(mode="binary_rows")),
+    ("pipegen_full", PipeConfig(mode="arrowcol")),
+]
+
+
+def _manual_pipe(n_rows: int) -> float:
+    """Hand-optimized: typed columns pickled straight over a socket."""
+    src = make_engine("colstore")
+    dst = make_engine("graphstore")
+    src.put_block("t", make_paper_block(n_rows, seed=1))
+
+    def run():
+        lsock = socket.socket()
+        lsock.bind(("127.0.0.1", 0))
+        lsock.listen(1)
+        port = lsock.getsockname()[1]
+
+        def serve():
+            conn, _ = lsock.accept()
+            blk = src.get_block("t")
+            payload = pickle.dumps((blk.schema.to_dict(),
+                                    [list(map(float, c)) if not hasattr(c, "dtype")
+                                     else c for c in blk.columns]))
+            conn.sendall(len(payload).to_bytes(8, "little") + payload)
+            conn.close()
+
+        t = threading.Thread(target=serve)
+        t.start()
+        s = socket.create_connection(("127.0.0.1", port))
+        ln = int.from_bytes(_recv_exact(s, 8), "little")
+        schema_doc, cols = pickle.loads(_recv_exact(s, ln))
+        s.close()
+        t.join()
+        from repro.core.types import ColumnBlock, Schema
+
+        dst.put_block("t2", ColumnBlock(Schema.from_dict(schema_doc), cols))
+
+    return timed(run)
+
+
+def _recv_exact(sock, n):
+    buf = b""
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            raise IOError("eof")
+        buf += chunk
+    return buf
+
+
+def main(n_rows: int = DEFAULT_ROWS) -> dict:
+    out = {}
+    tf = file_transfer("colstore", "graphstore", n_rows)
+    out["file"] = tf
+    emit("fig11.file_baseline", tf)
+    for name, cfg in RUNGS:
+        tp = pipe_transfer("colstore", "graphstore", n_rows, cfg)
+        out[name] = tp
+        emit(f"fig11.{name}", tp, f"speedup={tf / tp:.2f}x")
+    set_directory(WorkerDirectory())
+    tm = _manual_pipe(n_rows)
+    out["manual"] = tm
+    emit("fig11.manual_pipe", tm, f"speedup={tf / tm:.2f}x")
+    return out
+
+
+if __name__ == "__main__":
+    main()

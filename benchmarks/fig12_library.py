@@ -1,0 +1,91 @@
+"""Figure 12: library-extension mode (Jackson analog) — Spark->Giraph JSON
+(dataframe -> graphstore via jsonlib AJsonGenerator).
+
+Rungs: IORedirect only -> +binary values -> +metadata removal (keys +
+delimiters) -> full (column pivot)."""
+
+from __future__ import annotations
+
+import threading
+
+from repro.core import PipeConfig, PipeEnabledEngine, adapter_for
+from repro.core.directory import WorkerDirectory, set_directory
+from repro.core.ioredirect import PipeOpenContext
+from repro.engines import make_engine, make_paper_block
+
+from .common import DEFAULT_ROWS, emit, timed
+
+RUNGS = [
+    ("ioredirect", PipeConfig(mode="text", text_format="json")),
+    ("binary", PipeConfig(mode="parts", text_format="json")),
+    ("metadata_removed", PipeConfig(mode="arrowrow", text_format="json")),
+    ("pipegen_full", PipeConfig(mode="arrowcol", text_format="json")),
+]
+
+
+def _json_file_transfer(n_rows: int) -> float:
+    import os
+    import tempfile
+
+    src, dst = make_engine("dataframe"), make_engine("graphstore")
+    src.put_block("t", make_paper_block(n_rows, seed=1))
+
+    def run():
+        with tempfile.TemporaryDirectory() as td:
+            path = os.path.join(td, "x.json")
+            src.export_json("t", path)
+            dst.import_json("t2", path)
+
+    return timed(run)
+
+
+def _json_pipe_transfer(n_rows: int, cfg: PipeConfig) -> float:
+    set_directory(WorkerDirectory())
+    src, dst = make_engine("dataframe"), make_engine("graphstore")
+    src.put_block("t", make_paper_block(n_rows, seed=1))
+    gs, gd = adapter_for(src), adapter_for(dst)
+    counter = [0]
+
+    def run():
+        counter[0] += 1
+        name = f"db://fig12?query=q{counter[0]}"
+        errs = []
+
+        def imp():
+            try:
+                with PipeEnabledEngine(gd), PipeOpenContext(cfg):
+                    dst.import_json("t2", name)
+            except BaseException as e:  # noqa: BLE001
+                errs.append(e)
+
+        def exp():
+            try:
+                with PipeEnabledEngine(gs), PipeOpenContext(cfg):
+                    src.export_json("t", name)
+            except BaseException as e:  # noqa: BLE001
+                errs.append(e)
+
+        ti = threading.Thread(target=imp)
+        te = threading.Thread(target=exp)
+        ti.start(); te.start(); ti.join(120); te.join(120)
+        if errs:
+            raise errs[0]
+        assert len(dst.get_block("t2")) == n_rows
+
+    return timed(run)
+
+
+def main(n_rows: int = DEFAULT_ROWS // 2) -> dict:
+    out = {}
+    tf = _json_file_transfer(n_rows)
+    out["file"] = tf
+    emit("fig12.file_json", tf)
+    for name, cfg in RUNGS:
+        tp = _json_pipe_transfer(n_rows, cfg)
+        out[name] = tp
+        emit(f"fig12.{name}", tp, f"speedup={tf / tp:.2f}x")
+    return out
+
+
+if __name__ == "__main__":
+    main()

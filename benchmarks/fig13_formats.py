@@ -1,0 +1,35 @@
+"""Figure 13: intermediate wire format comparison, Hadoop->Spark analog
+(mapreduce -> dataframe).
+
+Formats: custom binary (binary_rows), protobuf-analog static + dynamic
+templates (tagged), Arrow-analog row (arrowrow) and columnar (arrowcol)."""
+
+from __future__ import annotations
+
+from repro.core import PipeConfig
+
+from .common import DEFAULT_ROWS, emit, pipe_transfer
+
+FORMATS = [
+    ("custom_binary", PipeConfig(mode="binary_rows")),
+    ("proto_static", PipeConfig(mode="tagged")),
+    ("proto_dynamic", PipeConfig(mode="tagged", text_format="csv",
+                                 delimiter="\t")),
+    ("arrow_row", PipeConfig(mode="arrowrow")),
+    ("arrow_col", PipeConfig(mode="arrowcol")),
+]
+
+
+def main(n_rows: int = DEFAULT_ROWS) -> dict:
+    out = {}
+    for name, cfg in FORMATS:
+        t = pipe_transfer("mapreduce", "dataframe", n_rows, cfg)
+        out[name] = t
+        emit(f"fig13.{name}", t)
+    best = min(out, key=out.get)
+    emit("fig13.summary", 0.0, f"best={best} paper_best=arrow_col")
+    return out
+
+
+if __name__ == "__main__":
+    main()

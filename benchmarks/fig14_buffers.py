@@ -1,0 +1,26 @@
+"""Figure 14: Arrow buffer (row-block) size sweep, Myria->Giraph analog.
+
+Paper conclusion: as long as the buffer is not too small, size barely
+matters."""
+
+from __future__ import annotations
+
+from repro.core import PipeConfig
+
+from .common import DEFAULT_ROWS, emit, pipe_transfer
+
+SIZES = [64, 256, 1024, 4096, 16384, 65536]
+
+
+def main(n_rows: int = DEFAULT_ROWS) -> dict:
+    out = {}
+    for rows in SIZES:
+        t = pipe_transfer("colstore", "graphstore", n_rows,
+                          PipeConfig(mode="arrowcol", block_rows=rows))
+        out[rows] = t
+        emit(f"fig14.block_rows_{rows}", t)
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Render the §Roofline table from dry-run artifacts into EXPERIMENTS.md
+(replaces the <!-- ROOFLINE_TABLE --> marker block)."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ARTIFACTS = Path("artifacts/dryrun")
+TARGET = Path("EXPERIMENTS.md")
+MARK = "<!-- ROOFLINE_TABLE -->"
+HBM_GB = 16.0
+
+
+def fmt(v: float) -> str:
+    if v >= 100:
+        return f"{v:.0f}"
+    if v >= 1:
+        return f"{v:.2f}"
+    return f"{v:.3g}"
+
+
+def render() -> str:
+    rows = []
+    for f in sorted(ARTIFACTS.glob("*__pod16x16.json")):
+        r = json.loads(f.read_text())
+        if r["status"] == "SKIP":
+            rows.append((r["arch"], r["shape"], "SKIP", "", "", "", "", "",
+                         "by design"))
+            continue
+        if r["status"] != "OK":
+            rows.append((r["arch"], r["shape"], "FAIL", "", "", "", "", "",
+                         r.get("error", "")[:40]))
+            continue
+        t = r["roofline"]
+        dom = max(t, key=t.get)
+        mem = r["memory"]
+        state_gb = (mem.get("argument_size") or 0) / 1e9
+        temp_gb = (mem.get("temp_size") or 0) / 1e9
+        fits = "yes" if (state_gb / 2 + temp_gb) < HBM_GB else "NO"
+        note = f"{state_gb:.0f}+{temp_gb:.0f}GB"
+        rows.append((
+            r["arch"], r["shape"], r["kind"],
+            fmt(t["compute_s"]), fmt(t["memory_s"]), fmt(t["collective_s"]),
+            dom.replace("_s", ""),
+            f"{(r.get('useful_ratio') or 0):.2f}",
+            f"fit={fits} ({note})",
+        ))
+    head = ("| arch | shape | kind | compute_s | memory_s | collective_s "
+            "| dominant | useful | memory fit (args/2+temp vs 16GB) |\n"
+            "|---|---|---|---|---|---|---|---|---|")
+    body = "\n".join(
+        "| " + " | ".join(str(c) for c in row) + " |" for row in rows)
+
+    # multi-pod summary
+    mp = list(ARTIFACTS.glob("*__pod2x16x16.json"))
+    n_ok = sum(json.loads(f.read_text())["status"] == "OK" for f in mp)
+    n_skip = sum(json.loads(f.read_text())["status"] == "SKIP" for f in mp)
+    tail = (f"\n\nMulti-pod (2x16x16) pass: {n_ok} OK / {n_skip} SKIP "
+            f"/ {len(mp) - n_ok - n_skip} FAIL out of {len(mp)} cells "
+            "(full records in artifacts/dryrun/*pod2x16x16.json).\n"
+            "Terms are per-device-step seconds against per-chip peaks; "
+            "dominant-term changes from the hillclimb are in §Perf.")
+    return head + "\n" + body + tail
+
+
+def main() -> None:
+    table = render()
+    text = TARGET.read_text()
+    if MARK in text:
+        # replace marker (and anything until the next blank-line-#) once
+        text = text.replace(MARK, table, 1)
+        TARGET.write_text(text)
+        print(f"[render_roofline] wrote {len(table.splitlines())} table lines")
+    else:
+        print(table)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Roofline report: read the dry-run artifacts and print the per-cell
+three-term table (compute / memory / collective seconds, dominant term,
+useful-flops ratio).  The dry-run itself must run as its own process
+(``python -m repro.launch.dryrun --all --both-meshes``)."""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+from .common import emit
+
+ARTIFACTS = Path("artifacts/dryrun")
+
+
+def load_records(mesh: str = "pod16x16"):
+    recs = []
+    if not ARTIFACTS.exists():
+        return recs
+    for f in sorted(ARTIFACTS.glob(f"*__{mesh}.json")):
+        recs.append(json.loads(f.read_text()))
+    return recs
+
+
+def main() -> dict:
+    out = {}
+    for mesh in ("pod16x16", "pod2x16x16"):
+        recs = load_records(mesh)
+        n_ok = sum(r["status"] == "OK" for r in recs)
+        n_skip = sum(r["status"] == "SKIP" for r in recs)
+        n_fail = sum(r["status"] == "FAIL" for r in recs)
+        emit(f"roofline.{mesh}.cells", 0.0,
+             f"ok={n_ok} skip={n_skip} fail={n_fail}")
+        for r in recs:
+            key = f"{r['arch']}x{r['shape']}"
+            if r["status"] != "OK":
+                out[(mesh, key)] = r["status"]
+                continue
+            t = r["roofline"]
+            dom = max(t, key=t.get)
+            out[(mesh, key)] = dom
+            emit(
+                f"roofline.{mesh}.{key}", t[dom],
+                f"compute={t['compute_s']:.4g}s memory={t['memory_s']:.4g}s "
+                f"collective={t['collective_s']:.4g}s dominant={dom} "
+                f"useful={r.get('useful_ratio') or 0:.2f}",
+            )
+    return out
+
+
+if __name__ == "__main__":
+    main()

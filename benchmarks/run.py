@@ -1,0 +1,69 @@
+"""Benchmark runner: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Usage:
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig09,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import (
+    fig09_pairwise,
+    fig10_datatypes,
+    fig11_optimizations,
+    fig12_library,
+    fig13_formats,
+    fig14_buffers,
+    fig15_compression,
+    roofline,
+    table1_workers,
+    table2_modifications,
+)
+
+MODULES = {
+    "fig09": fig09_pairwise,
+    "fig10": fig10_datatypes,
+    "fig11": fig11_optimizations,
+    "fig12": fig12_library,
+    "fig13": fig13_formats,
+    "fig14": fig14_buffers,
+    "fig15": fig15_compression,
+    "table1": table1_workers,
+    "table2": table2_modifications,
+    "roofline": roofline,
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller row counts (CI mode)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of benchmarks")
+    args = ap.parse_args(argv)
+
+    names = list(MODULES) if not args.only else args.only.split(",")
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in names:
+        mod = MODULES[name]
+        t0 = time.time()
+        try:
+            if args.quick and name.startswith(("fig", "table1")):
+                mod.main(4000)
+            else:
+                mod.main()
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name}.ERROR,0,{type(e).__name__}: {e}")
+        print(f"{name}.elapsed,{(time.time() - t0) * 1e6:.0f},")
+        sys.stdout.flush()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,27 @@
+"""Table 1: speedup vs worker count, Myria->Spark analog
+(colstore -> dataframe).  Paper: ~3.1-3.7x across 1/4/8/16 workers."""
+
+from __future__ import annotations
+
+from repro.core import PipeConfig
+
+from .common import DEFAULT_ROWS, emit, file_transfer, pipe_transfer
+
+WORKERS = [1, 2, 4]
+
+
+def main(n_rows: int = DEFAULT_ROWS) -> dict:
+    out = {}
+    for w in WORKERS:
+        tf = file_transfer("colstore", "dataframe", n_rows, workers=w)
+        tp = pipe_transfer("colstore", "dataframe", n_rows,
+                           PipeConfig(mode="arrowcol"), workers=w)
+        sp = tf / tp
+        out[w] = sp
+        emit(f"table1.workers_{w}.file", tf)
+        emit(f"table1.workers_{w}.pipe", tp, f"speedup={sp:.2f}x")
+    return out
+
+
+if __name__ == "__main__":
+    main()

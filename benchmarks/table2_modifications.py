@@ -1,0 +1,64 @@
+"""Table 2: per-engine modification statistics from the compile loop
+(classes touched, LOC emitted, modification time)."""
+
+from __future__ import annotations
+
+import os
+import tempfile
+
+from repro.core import generate_pipe_adapter
+from repro.core.directory import WorkerDirectory, set_directory
+from repro.engines import ENGINES, make_engine
+
+from .common import emit
+
+
+def main() -> dict:
+    set_directory(WorkerDirectory())
+    out = {}
+    with tempfile.TemporaryDirectory() as td:
+        for name in ENGINES:
+            eng = make_engine(name)
+            gp = generate_pipe_adapter(
+                name, eng.unit_export_test, eng.unit_import_test,
+                os.path.join(td, f"{name}.csv"),
+                mode="string-decoration",
+                formopt_replacements=len(gp_formopt_sites(eng)),
+            )
+            s = gp.stats
+            out[name] = s
+            emit(f"table2.{name}", s.modification_time_s,
+                 f"io_classes={s.ioredirect_classes} io_loc={s.ioredirect_loc} "
+                 f"fo_classes={s.formopt_classes} fo_loc={s.formopt_loc}")
+        # library-extension mode (jsonlib on the Spark analog)
+        eng = make_engine("dataframe")
+        gp = generate_pipe_adapter(
+            "dataframe", eng.unit_export_test, eng.unit_import_test,
+            os.path.join(td, "df.csv"), mode="library-extension",
+            formopt_replacements=2,
+        )
+        s = gp.stats
+        out["dataframe-libext"] = s
+        emit("table2.dataframe.libext", s.modification_time_s,
+             f"io_classes={s.ioredirect_classes} io_loc={s.ioredirect_loc} "
+             f"fo_classes={s.formopt_classes} fo_loc={s.formopt_loc}")
+    return out
+
+
+def gp_formopt_sites(eng) -> list:
+    """Count decoration substitution sites (the _s/_lit/_parse hooks the
+    string-decoration pass rewrites) from the engine's source."""
+    import inspect
+
+    src = inspect.getsource(type(eng))
+    base_src = ""
+    for klass in type(eng).__mro__[1:]:
+        if klass.__name__ == "Engine":
+            base_src = inspect.getsource(klass)
+    hooks = ("self._s(", "self._lit(", "self._sep(", "self._nl(",
+             "self._parse_int(", "self._parse_float(", "self._parse_bool(")
+    return [h for text in (src, base_src) for h in hooks if h in text]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,120 @@
+"""The paper's motivating workflow (section 2, fig. 1), scaled down.
+
+An astronomer holds an N-body snapshot in the Myria analog (colstore),
+needs power-iteration clustering (PIC) that only the Spark analog
+(dataframe) provides:
+
+  1. compute pairwise distances under a threshold in colstore,
+  2. move the pair list to dataframe  (file system vs data pipe),
+  3. run PIC there,
+  4. move cluster assignments back,
+  5. compare against the existing clustering.
+
+    PYTHONPATH=src python examples/hybrid_astronomy.py
+"""
+
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core import PipeConfig, transfer, transfer_via_files
+from repro.core.types import ColType, ColumnBlock, Field, Schema
+from repro.engines import make_engine
+
+N_PARTICLES = 600
+EPS = 0.35
+N_CLUSTERS = 4
+
+
+def make_snapshot(n: int, seed: int = 0):
+    """Particles in 3D around N_CLUSTERS centers + an initial clustering."""
+    rng = np.random.default_rng(seed)
+    centers = rng.uniform(-2, 2, (N_CLUSTERS, 3))
+    labels = rng.integers(0, N_CLUSTERS, n)
+    pos = centers[labels] + rng.normal(0, 0.15, (n, 3))
+    return pos, labels
+
+
+def pairwise_pairs(pos: np.ndarray, eps: float) -> ColumnBlock:
+    """The colstore-side query: particle pairs closer than eps."""
+    d2 = ((pos[:, None, :] - pos[None, :, :]) ** 2).sum(-1)
+    i, j = np.where((d2 < eps * eps) & (np.arange(len(pos))[:, None]
+                                        < np.arange(len(pos))[None, :]))
+    w = np.exp(-d2[i, j])
+    return ColumnBlock(
+        Schema([Field("i", ColType.INT64), Field("j", ColType.INT64),
+                Field("w", ColType.FLOAT64)]),
+        [i.astype(np.int64), j.astype(np.int64), w],
+    )
+
+
+def pic_cluster(block: ColumnBlock, n: int, k: int) -> np.ndarray:
+    """Power-iteration clustering on the transferred affinity pairs
+    (the dataframe/Spark-side computation)."""
+    i = np.asarray(block.columns[0], np.int64)  # headerless CSV: positional
+    j = np.asarray(block.columns[1], np.int64)
+    w = np.asarray(block.columns[2], np.float64)
+    A = np.zeros((n, n))
+    A[i, j] = w
+    A[j, i] = w
+    deg = A.sum(1) + 1e-12
+    W = A / deg[:, None]
+    v = np.ones(n) / n + np.random.default_rng(1).normal(0, 1e-4, n)
+    for _ in range(60):
+        v = W @ v
+        v /= np.abs(v).max()
+    order = np.argsort(v)
+    bounds = [n * c // k for c in range(1, k)]
+    labels = np.zeros(n, np.int64)
+    for c, start in enumerate(np.split(order, bounds)):
+        labels[start] = c
+    return labels
+
+
+def run(transfer_fn, tag: str) -> float:
+    pos, existing = make_snapshot(N_PARTICLES)
+    myria = make_engine("colstore")
+    spark = make_engine("dataframe")
+
+    t0 = time.perf_counter()
+    pairs = pairwise_pairs(pos, EPS)               # step 1 (in "Myria")
+    myria.put_block("pairs", pairs)
+    transfer_fn(myria, "pairs", spark, "pairs")    # step 2 (the transfer)
+    got = spark.get_block("pairs")
+    labels = pic_cluster(got, N_PARTICLES, N_CLUSTERS)  # step 3 (in "Spark")
+    spark.put_block("assign", ColumnBlock(
+        Schema([Field("id", ColType.INT64), Field("c", ColType.INT64)]),
+        [np.arange(N_PARTICLES, dtype=np.int64), labels],
+    ))
+    transfer_fn(spark, "assign", myria, "assign")  # step 4 (back)
+    back = myria.get_block("assign")
+    new_labels = np.asarray(back.columns[1], np.int64)
+    elapsed = time.perf_counter() - t0
+
+    # step 5: compare clusterings (pair-agreement rate)
+    rng = np.random.default_rng(2)
+    a = rng.integers(0, N_PARTICLES, 4000)
+    b = rng.integers(0, N_PARTICLES, 4000)
+    agree = np.mean((existing[a] == existing[b])
+                    == (new_labels[a] == new_labels[b]))
+    print(f"[{tag}] workflow in {elapsed:.2f}s; {len(got)} pairs moved; "
+          f"pair-agreement with existing clustering: {agree:.1%}")
+    return elapsed
+
+
+def main() -> None:
+    t_file = run(
+        lambda s, t, d, t2: transfer_via_files(s, t, d, t2), "file")
+    t_pipe = run(
+        lambda s, t, d, t2: transfer(
+            s, t, d, t2, config=PipeConfig(mode="arrowcol"), timeout=120),
+        "pipe")
+    print(f"[summary] transfer-inclusive speedup: {t_file / t_pipe:.2f}x "
+          f"(paper fig. 1: 66 -> 28 minutes on 100 GB)")
+
+
+if __name__ == "__main__":
+    main()

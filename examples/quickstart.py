@@ -1,0 +1,44 @@
+"""Quickstart: auto-generate data pipes for two engines and move a table
+between them — no file-system materialization.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import PipeConfig, adapter_for, transfer, transfer_via_files
+from repro.engines import make_engine, make_paper_block
+
+
+def main() -> None:
+    # 1. two engines (the Myria / Spark analogs), some data in the source
+    src = make_engine("colstore", workers=2)
+    dst = make_engine("dataframe", workers=2)
+    src.put_block("particles", make_paper_block(50_000, seed=42))
+
+    # 2. PipeGen compile loop: run each engine's own unit tests, find the
+    #    file-IO call sites, splice in pipe-aware open (fig. 5)
+    gp = adapter_for(src)
+    print(f"[pipegen] {gp.report.summary()}")
+    print(f"[pipegen] adapter stats: {gp.stats.row()}")
+
+    # 3. baseline: export/import via the file system (CSV)
+    r_file = transfer_via_files(src, "particles", dst, "p_file", workers=2)
+    print(f"[file]  {r_file.rows} rows in {r_file.seconds:.2f}s "
+          f"({r_file.bytes_moved} bytes materialized)")
+
+    # 4. the same transfer over a generated binary data pipe
+    r_pipe = transfer(src, "particles", dst, "p_pipe",
+                      config=PipeConfig(mode="arrowcol"), workers=2)
+    print(f"[pipe]  {r_pipe.rows} rows in {r_pipe.seconds:.2f}s "
+          f"(zero bytes on disk)")
+    print(f"[pipe]  speedup: {r_file.seconds / r_pipe.seconds:.2f}x "
+          f"(paper: up to 3.8x at 1e9 rows)")
+
+    assert r_pipe.rows == r_file.rows == 50_000
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Per-architecture configs (one module per assigned arch)."""
+
+from ..models.config import ARCHS, SHAPES, get_config, get_shape
+from .common import input_specs, cache_specs_struct, supported_cells, skip_reason
+
+ARCH_MODULES = {
+    'llama4-maverick-400b-a17b': 'repro.configs.llama4_maverick_400b_a17b',
+    'grok-1-314b': 'repro.configs.grok_1_314b',
+    'rwkv6-3b': 'repro.configs.rwkv6_3b',
+    'qwen2-vl-7b': 'repro.configs.qwen2_vl_7b',
+    'stablelm-12b': 'repro.configs.stablelm_12b',
+    'smollm-360m': 'repro.configs.smollm_360m',
+    'qwen2.5-14b': 'repro.configs.qwen2_5_14b',
+    'qwen2-1.5b': 'repro.configs.qwen2_1_5b',
+    'whisper-large-v3': 'repro.configs.whisper_large_v3',
+    'zamba2-7b': 'repro.configs.zamba2_7b',
+}

@@ -1,0 +1,73 @@
+"""Shared input-spec machinery for the per-architecture config modules.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input of that (architecture x shape) cell — weak-type-correct,
+shardable, zero allocation — exactly what ``launch.dryrun`` lowers against.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models import build_model
+from ..models.config import ModelConfig, ShapeSpec, get_shape
+
+__all__ = ["input_specs", "cache_specs_struct", "supported_cells", "skip_reason"]
+
+S = jax.ShapeDtypeStruct
+
+
+def skip_reason(cfg: ModelConfig, shape: ShapeSpec) -> Optional[str]:
+    """None if the cell runs; otherwise why it is skipped by design."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return ("full quadratic attention at 524288 context; no sub-quadratic "
+                "variant claimed for this architecture (DESIGN.md "
+                "SS:Arch-applicability)")
+    return None
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Batch input ShapeDtypeStructs for one cell."""
+    B, Sq = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "vlm":
+            return {
+                "embeds": S((B, Sq, cfg.d_model), jnp.bfloat16),
+                "positions": S((3, B, Sq), jnp.int32),
+                "labels": S((B, Sq), jnp.int32),
+            }
+        if cfg.is_encdec:
+            return {
+                "frames": S((B, Sq, cfg.d_model), jnp.bfloat16),
+                "tokens": S((B, Sq), jnp.int32),
+                "labels": S((B, Sq), jnp.int32),
+            }
+        return {
+            "tokens": S((B, Sq), jnp.int32),
+            "labels": S((B, Sq), jnp.int32),
+        }
+    # decode: one new token against a cache of Sq
+    if cfg.family == "vlm":
+        return {"embed": S((B, 1, cfg.d_model), jnp.bfloat16)}
+    return {"token": S((B, 1), jnp.int32)}
+
+
+def cache_specs_struct(cfg: ModelConfig, shape: ShapeSpec) -> Any:
+    """ShapeDtypeStructs of the decode cache for one cell."""
+    model = build_model(cfg)
+    if cfg.is_encdec:
+        return jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len,
+                                     enc_len=1500))
+    return jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len))
+
+
+def supported_cells(cfg: ModelConfig) -> Dict[str, Optional[str]]:
+    """shape-name -> skip reason (None = runs)."""
+    from ..models.config import SHAPES
+
+    return {name: skip_reason(cfg, spec) for name, spec in SHAPES.items()}

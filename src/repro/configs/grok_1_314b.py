@@ -1,0 +1,24 @@
+"""Architecture config: grok-1-314b [moe].
+
+
+Source: hf:xai-org/grok-1 (unverified)
+"""
+
+from ..models.config import get_config
+from .common import input_specs as _input_specs, supported_cells, cache_specs_struct
+from ..models.config import get_shape
+
+CONFIG = get_config("grok-1-314b")
+REDUCED = CONFIG.reduced()
+
+
+def input_specs(shape_name: str):
+    return _input_specs(CONFIG, get_shape(shape_name))
+
+
+def cache_specs(shape_name: str):
+    return cache_specs_struct(CONFIG, get_shape(shape_name))
+
+
+def cells():
+    return supported_cells(CONFIG)

@@ -1,0 +1,24 @@
+"""Architecture config: llama4-maverick-400b-a17b [moe].
+
+MoE 128e top-1; early-fusion frontend out of scope (text backbone)
+Source: hf:meta-llama/Llama-4-Scout-17B-16E (unverified)
+"""
+
+from ..models.config import get_config
+from .common import input_specs as _input_specs, supported_cells, cache_specs_struct
+from ..models.config import get_shape
+
+CONFIG = get_config("llama4-maverick-400b-a17b")
+REDUCED = CONFIG.reduced()
+
+
+def input_specs(shape_name: str):
+    return _input_specs(CONFIG, get_shape(shape_name))
+
+
+def cache_specs(shape_name: str):
+    return cache_specs_struct(CONFIG, get_shape(shape_name))
+
+
+def cells():
+    return supported_cells(CONFIG)

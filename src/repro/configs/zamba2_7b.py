@@ -1,0 +1,24 @@
+"""Architecture config: zamba2-7b [hybrid].
+
+Mamba2 backbone + one shared attention block applied every 6 layers
+Source: arXiv:2411.15242 (unverified)
+"""
+
+from ..models.config import get_config
+from .common import input_specs as _input_specs, supported_cells, cache_specs_struct
+from ..models.config import get_shape
+
+CONFIG = get_config("zamba2-7b")
+REDUCED = CONFIG.reduced()
+
+
+def input_specs(shape_name: str):
+    return _input_specs(CONFIG, get_shape(shape_name))
+
+
+def cache_specs(shape_name: str):
+    return cache_specs_struct(CONFIG, get_shape(shape_name))
+
+
+def cells():
+    return supported_cells(CONFIG)

@@ -1,0 +1,38 @@
+"""PipeGen core: the paper's contribution as a composable library.
+
+Layers (paper section -> module):
+
+    S4 IORedirect   datapipe, ioredirect, directory, transport
+    S5 FormOpt      astring, formopt, wire/, compression
+    S3 compile loop capture, codegen, verify
+"""
+
+from .astring import AString
+from .capture import CaptureReport, run_capture
+from .codegen import GeneratedPipe, ModificationStats, PipeEnabledEngine, generate_pipe_adapter
+from .compression import CODECS, get_codec
+from .datapipe import (
+    DataPipeInput,
+    DataPipeOutput,
+    PipeConfig,
+    ReservedName,
+    is_reserved,
+    open_pipe_reader,
+    open_pipe_writer,
+    parse_reserved,
+)
+from .directory import (
+    DirectoryClient,
+    DirectoryServer,
+    Endpoint,
+    WorkerDirectory,
+    get_directory,
+    set_directory,
+)
+from .formopt import DelimitedAssembler, JsonAssembler, infer_delimiter
+from .ioredirect import CallSite, CallSiteRegistry, PipeOpenContext, pipegen_open
+from .transport import Channel, ChannelTransport, LinkSim, SocketTransport
+from .types import ColType, ColumnBlock, Field, RowBlock, Schema, infer_schema
+from .verify import VerificationProxy, VerificationResult, validate_generated_pipe
+from .wire import WIRE_FORMATS, get_wire_format
+from .session import TransferResult, adapter_for, transfer, transfer_via_files

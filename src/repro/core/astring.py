@@ -1,0 +1,231 @@
+"""AString -- the augmented string of paper section 5.1.
+
+An ``AString`` behaves like a string to the surrounding serializer code but
+internally stores the *sequence of typed values* that flowed into it, so the
+data pipe can recover pre-stringification primitives: given
+
+    s = str(1) + "," + "a"
+
+the decorated form
+
+    s = AString.of(1) + AString.of(",") + AString.of("a")
+
+keeps the internal state ``[1, ",", "a"]`` and only materializes the
+character representation on demand (memoized).  Fixed-width primitives in the
+internal state are what FormOpt ships in binary; delimiter parts are inferred
+and dropped (section 5.3.1).
+
+Python notes versus the paper's Java implementation (section 6.2):
+
+* Java needed a non-final ``java.lang.String`` loaded via dynamic code
+  loading; Python duck-types, so ``AString`` simply implements the string
+  protocol surface our engines use and compares equal to ``str``.
+* Java AStrings flatten into preallocated byte arrays; we keep a python list
+  of parts (numpy handles the bulk fixed-width traffic at block level, which
+  is where the time goes in this runtime).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Iterable, List, Sequence
+
+__all__ = ["AString", "materialize_part", "PRIMITIVE_TYPES"]
+
+PRIMITIVE_TYPES = (bool, int, float)
+
+
+def materialize_part(p: Any) -> str:
+    """Render one internal part exactly like the engines' text writers do."""
+    if isinstance(p, str):
+        return p
+    if isinstance(p, bool):
+        return "true" if p else "false"
+    if isinstance(p, float):
+        return repr(p)  # shortest round-trip representation
+    return str(p)
+
+
+class AString:
+    """Deferred-value string.  Immutable; concatenation produces new views.
+
+    Concatenation is O(1): views share a lazily-flattened part tree (the
+    paper's Java implementation appends into preallocated arrays, section
+    6.2 — same amortized complexity, expressed immutably)."""
+
+    __slots__ = ("_parts", "_tree", "_mat")
+
+    def __init__(self, parts: Sequence[Any]):
+        self._parts: tuple | None = tuple(parts)
+        self._tree: tuple | None = None
+        self._mat: str | None = None
+
+    @property
+    def parts(self) -> tuple:
+        if self._parts is None:
+            # flatten the concat tree iteratively (amortized once per view)
+            out: List[Any] = []
+            stack = [self._tree]
+            while stack:
+                node = stack.pop()
+                if isinstance(node, AString):
+                    if node._parts is not None:
+                        out.extend(node._parts)
+                    else:
+                        stack.append(node._tree[1])
+                        stack.append(node._tree[0])
+                elif isinstance(node, tuple) and len(node) == 2 and (
+                        isinstance(node[0], (AString, tuple))
+                        or isinstance(node[1], (AString, tuple))):
+                    stack.append(node[1])
+                    stack.append(node[0])
+                else:
+                    out.append(node)
+            self._parts = tuple(out)
+            self._tree = None
+        return self._parts
+
+    @classmethod
+    def _concat(cls, left, right) -> "AString":
+        obj = cls.__new__(cls)
+        obj._parts = None
+        obj._tree = (left, right)
+        obj._mat = None
+        return obj
+
+    # -- constructors ---------------------------------------------------------
+    @staticmethod
+    def of(value: Any) -> "AString":
+        """Wrap a single value.  Complex objects are stringified immediately
+        (paper: 'more complex types are immediately converted')."""
+        if isinstance(value, AString):
+            return value
+        if isinstance(value, (str,) + PRIMITIVE_TYPES):
+            return AString((value,))
+        return AString((str(value),))
+
+    @staticmethod
+    def literal(s: str) -> "AString":
+        return AString((s,))
+
+    # -- string protocol surface ----------------------------------------------
+    def materialize(self) -> str:
+        if self._mat is None:
+            self._mat = "".join(materialize_part(p) for p in self.parts)
+        return self._mat
+
+    def __str__(self) -> str:
+        return self.materialize()
+
+    def __repr__(self) -> str:
+        return f"AString({list(self.parts)!r})"
+
+    def __len__(self) -> int:
+        return len(self.materialize())
+
+    def __eq__(self, other) -> bool:
+        if isinstance(other, AString):
+            return self.materialize() == other.materialize()
+        if isinstance(other, str):
+            return self.materialize() == other
+        return NotImplemented
+
+    def __hash__(self) -> int:
+        return hash(self.materialize())
+
+    def __add__(self, other) -> "AString":
+        if isinstance(other, AString):
+            return AString._concat(self, other)
+        if isinstance(other, (str,) + PRIMITIVE_TYPES):
+            return AString._concat(self, AString((other,)))
+        return NotImplemented
+
+    def __radd__(self, other) -> "AString":
+        if isinstance(other, (str,) + PRIMITIVE_TYPES):
+            return AString._concat(AString((other,)), self)
+        return NotImplemented
+
+    def concat(self, other) -> "AString":
+        return self.__add__(AString.of(other))
+
+    def join(self, items: Iterable[Any]) -> "AString":
+        """Separator-join preserving typed parts (CSV writers use this)."""
+        out: List[Any] = []
+        first = True
+        for it in items:
+            if not first:
+                out.extend(self.parts)
+            first = False
+            if isinstance(it, AString):
+                out.extend(it.parts)
+            else:
+                out.append(it if isinstance(it, (str,) + PRIMITIVE_TYPES) else str(it))
+        return AString(out)
+
+    def encode(self, encoding: str = "utf-8", errors: str = "strict") -> bytes:
+        return self.materialize().encode(encoding, errors)
+
+    # -- import-side operations (section 5.1: split & parse without
+    # materializing character strings when typed parts are available) ---------
+    def split(self, sep: str) -> list:
+        vals: List[AString] = []
+        cur: List[Any] = []
+        for p in self.parts:
+            if isinstance(p, str) and p == sep:
+                vals.append(AString(cur))
+                cur = []
+            elif isinstance(p, str) and sep in p and len(p) > 1:
+                # mixed structural text: fall back to materialized split
+                return [AString((s,)) for s in self.materialize().split(sep)]
+            else:
+                cur.append(p)
+        vals.append(AString(cur))
+        return vals
+
+    def strip(self, chars: str | None = None) -> "AString":
+        parts = list(self.parts)
+        while parts and isinstance(parts[0], str) and not parts[0].strip(chars):
+            parts.pop(0)
+        while parts and isinstance(parts[-1], str) and not parts[-1].strip(chars):
+            parts.pop()
+        if parts and isinstance(parts[0], str):
+            parts[0] = parts[0].lstrip(chars)
+        if parts and isinstance(parts[-1], str):
+            parts[-1] = parts[-1].rstrip(chars)
+        return AString(parts)
+
+    # -- typed access ----------------------------------------------------------
+    @property
+    def sole_value(self) -> Any:
+        """The single typed value if this AString wraps exactly one part."""
+        if len(self.parts) == 1:
+            return self.parts[0]
+        return self.materialize()
+
+    @staticmethod
+    def parse_int(v: Any) -> int:
+        if isinstance(v, AString):
+            sv = v.sole_value
+            if isinstance(sv, bool):
+                return int(sv)
+            if isinstance(sv, int):
+                return sv  # no character parsing needed -- the paper's win
+            return int(str(sv))
+        return int(v)
+
+    @staticmethod
+    def parse_float(v: Any) -> float:
+        if isinstance(v, AString):
+            sv = v.sole_value
+            if isinstance(sv, (int, float)) and not isinstance(sv, bool):
+                return float(sv)
+            return float(str(sv))
+        return float(v)
+
+    @staticmethod
+    def parse_bool(v: Any) -> bool:
+        if isinstance(v, AString):
+            sv = v.sole_value
+            if isinstance(sv, bool):
+                return sv
+            return str(sv).strip().lower() in ("true", "1")
+        return str(v).strip().lower() in ("true", "1")

@@ -1,0 +1,122 @@
+"""Capture phase (paper sections 3.2 and 4.1): run the engine's own
+import/export unit tests with every file-open instrumented, record which
+call sites touch the test's target file, and eliminate all others.
+
+This is the test-guided discovery that lets PipeGen distinguish the
+import/export path from unrelated opens (debug logs, configs).  The JVM
+prototype instrumented ``FileInput/OutputStream`` constructors; here the
+uniform choke point is ``builtins.open``, which the engines use for all
+file IO.
+"""
+
+from __future__ import annotations
+
+import builtins
+import inspect
+import threading
+import time
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Set, Tuple
+
+from .ioredirect import CallSite
+
+__all__ = ["OpenEvent", "CaptureReport", "instrumented_open", "run_capture"]
+
+
+@dataclass(frozen=True)
+class OpenEvent:
+    site: CallSite
+    filename: str
+    mode: str
+
+
+@dataclass
+class CaptureReport:
+    """Outcome of one capture run over an engine's unit tests."""
+
+    engine: str = "?"
+    events: List[OpenEvent] = field(default_factory=list)
+    export_sites: Set[CallSite] = field(default_factory=set)
+    import_sites: Set[CallSite] = field(default_factory=set)
+    rejected_sites: Set[CallSite] = field(default_factory=set)
+    elapsed_s: float = 0.0
+
+    @property
+    def sites(self) -> Set[CallSite]:
+        return self.export_sites | self.import_sites
+
+    def summary(self) -> str:
+        return (
+            f"[capture:{self.engine}] {len(self.events)} opens observed, "
+            f"{len(self.export_sites)} export + {len(self.import_sites)} import "
+            f"sites kept, {len(self.rejected_sites)} unrelated rejected "
+            f"({self.elapsed_s:.2f}s)"
+        )
+
+
+_capture_lock = threading.Lock()
+
+
+def _site_of_caller() -> CallSite:
+    # stack[0]=_site_of_caller, [1]=wrapper, [2]=engine code
+    fr = inspect.stack()[2]
+    return CallSite(fr.frame.f_globals.get("__name__", "?"), fr.function, fr.lineno)
+
+
+@contextmanager
+def instrumented_open(events: List[OpenEvent]):
+    """Patch ``builtins.open`` to record (call-site, filename, mode)."""
+    real_open = builtins.open
+
+    def recording_open(file, mode="r", *a, **kw):
+        try:
+            events.append(OpenEvent(_site_of_caller(), str(file), mode))
+        except Exception:
+            pass  # never let instrumentation break the engine under test
+        return real_open(file, mode, *a, **kw)
+
+    with _capture_lock:
+        builtins.open = recording_open
+        try:
+            yield
+        finally:
+            builtins.open = real_open
+
+
+def run_capture(
+    engine_name: str,
+    export_test: Callable[[str], None],
+    import_test: Callable[[str], None],
+    target_filename: str,
+) -> CaptureReport:
+    """Execute the engine's export and import unit tests against
+    ``target_filename`` with instrumentation, then classify call sites.
+
+    A site is kept iff it was observed opening the target (paper: "all calls
+    with filenames other than the target of the import/export are
+    eliminated").  Write-ish modes classify it as an export site, read-ish
+    as import.
+    """
+    report = CaptureReport(engine=engine_name)
+    t0 = time.perf_counter()
+    with instrumented_open(report.events):
+        export_test(target_filename)
+    n_export_events = len(report.events)
+    with instrumented_open(report.events):
+        import_test(target_filename)
+    report.elapsed_s = time.perf_counter() - t0
+
+    for i, ev in enumerate(report.events):
+        on_target = target_filename in ev.filename
+        if not on_target:
+            report.rejected_sites.add(ev.site)
+            continue
+        if any(m in ev.mode for m in ("w", "a", "x")):
+            report.export_sites.add(ev.site)
+        else:
+            report.import_sites.add(ev.site)
+    # a site both read and written on-target stays in both sets; a site seen
+    # on-target is never "rejected"
+    report.rejected_sites -= report.sites
+    return report

@@ -1,0 +1,129 @@
+"""Wire compression codecs (paper section 7.4).
+
+The paper evaluates run-length encoding, dictionary-based compression
+("zip"), and uncompressed transfer, finding compression a net loss for
+colocated workers and a modest win for dictionary compression at 40 ms
+latency.  We implement the same three plus zstd as a modern beyond-paper
+option (used also by the checkpoint substrate).
+"""
+
+from __future__ import annotations
+
+import zlib
+from typing import Callable, Dict
+
+import numpy as np
+
+try:
+    import zstandard as _zstd
+except Exception:  # pragma: no cover
+    _zstd = None
+
+__all__ = ["Codec", "get_codec", "CODECS"]
+
+
+class Codec:
+    name: str = "none"
+
+    def compress(self, data: bytes) -> bytes:
+        return data
+
+    def decompress(self, data: bytes) -> bytes:
+        return data
+
+
+class NoneCodec(Codec):
+    name = "none"
+
+
+class RleCodec(Codec):
+    """Byte-level run-length encoding, vectorized with numpy.
+
+    Layout: sequence of (count: uint8 in [1,255], value: uint8) pairs.
+    """
+
+    name = "rle"
+
+    def compress(self, data: bytes) -> bytes:
+        if not data:
+            return b""
+        a = np.frombuffer(data, dtype=np.uint8)
+        # boundaries where the value changes
+        change = np.nonzero(np.diff(a))[0] + 1
+        starts = np.concatenate(([0], change))
+        ends = np.concatenate((change, [len(a)]))
+        lengths = ends - starts
+        values = a[starts]
+        # split runs longer than 255
+        reps = (lengths + 254) // 255
+        out_vals = np.repeat(values, reps)
+        out_lens = np.empty(out_vals.shape, dtype=np.uint8)
+        idx = 0
+        # vectorized fill: each run contributes (reps-1) copies of 255 + remainder
+        rem = lengths - (reps - 1) * 255
+        pos = np.concatenate(([0], np.cumsum(reps)))
+        full = np.full(int(reps.sum()), 255, dtype=np.uint8)
+        full[pos[1:] - 1] = rem.astype(np.uint8)
+        out_lens = full
+        del idx
+        interleaved = np.empty(out_vals.size * 2, dtype=np.uint8)
+        interleaved[0::2] = out_lens
+        interleaved[1::2] = out_vals
+        return interleaved.tobytes()
+
+    def decompress(self, data: bytes) -> bytes:
+        if not data:
+            return b""
+        a = np.frombuffer(data, dtype=np.uint8)
+        lens = a[0::2].astype(np.int64)
+        vals = a[1::2]
+        return np.repeat(vals, lens).tobytes()
+
+
+class ZipCodec(Codec):
+    """Dictionary-based compression; the paper's 'zip'."""
+
+    name = "zip"
+
+    def __init__(self, level: int = 6):
+        self.level = level
+
+    def compress(self, data: bytes) -> bytes:
+        return zlib.compress(data, self.level)
+
+    def decompress(self, data: bytes) -> bytes:
+        return zlib.decompress(data)
+
+
+class ZstdCodec(Codec):
+    """Beyond-paper: zstd, the format a 2026 deployment would actually use."""
+
+    name = "zstd"
+
+    def __init__(self, level: int = 3):
+        if _zstd is None:  # pragma: no cover
+            raise RuntimeError("zstandard not available")
+        self._c = _zstd.ZstdCompressor(level=level)
+        self._d = _zstd.ZstdDecompressor()
+
+    def compress(self, data: bytes) -> bytes:
+        return self._c.compress(data)
+
+    def decompress(self, data: bytes) -> bytes:
+        return self._d.decompress(data)
+
+
+CODECS: Dict[str, Callable[[], Codec]] = {
+    "none": NoneCodec,
+    "rle": RleCodec,
+    "zip": ZipCodec,
+}
+if _zstd is not None:
+    CODECS["zstd"] = ZstdCodec
+
+
+def get_codec(name: str) -> Codec:
+    try:
+        return CODECS[name]()
+    except KeyError:
+        raise ValueError(f"unknown codec {name!r}; have {sorted(CODECS)}") from None

@@ -1,0 +1,812 @@
+"""Data pipes (paper sections 4 and 5): the streams IORedirect substitutes
+for file streams when an engine imports/exports a *reserved filename*.
+
+``DataPipeOutput`` stands in for a file opened for writing.  Depending on
+the negotiated :class:`PipeConfig` it operates at one of the fig. 11 rungs:
+
+    text        raw characters forwarded in T frames (IORedirect only)
+    parts       AString typed parts, delimiters retained, binary primitives
+    binary_rows delimiters removed, row-major custom binary
+    tagged      protobuf-analog (static/dynamic templates; fig. 13)
+    arrowrow    Arrow-analog row-major typed buffers
+    arrowcol    Arrow-analog columnar pivot (full PipeGen; default)
+
+``DataPipeInput`` is the matching read side.  Decorated importers consume
+typed blocks (:meth:`DataPipeInput.blocks`) or AString lines with typed
+parts (:meth:`astring_lines`); undecorated importers read rendered
+characters via the ordinary file protocol (``read``/``readline``/iter),
+reproducing the engine's original text byte-for-byte from the schema frame
+metadata.
+
+Reserved filenames follow the paper's ``db://<dataset>?workers=N&query=Q``
+syntax (section 4.2); :func:`parse_reserved` also accepts the
+``/tmp/__reserved__<dataset>`` template used for engines that reject custom
+URI schemes (section 6.1).
+"""
+
+from __future__ import annotations
+
+import io
+import re
+import socket
+import threading
+from dataclasses import dataclass, field, replace
+from typing import Any, Iterator, List, Optional, Sequence, Tuple
+from urllib.parse import parse_qs, urlparse
+
+from .astring import AString
+from .compression import Codec, get_codec
+from .directory import DirectoryLike, Endpoint, get_directory
+from .formopt import (
+    DelimitedAssembler,
+    FormOptError,
+    JsonAssembler,
+    render_delimited,
+    render_json,
+)
+from .transport import (
+    FRAME_BLOCK,
+    FRAME_EOF,
+    FRAME_PARTS,
+    FRAME_SCHEMA,
+    FRAME_TEXT,
+    FRAME_VERIFY,
+    Channel,
+    ChannelTransport,
+    LinkSim,
+    SocketTransport,
+    Transport,
+    listen_socket,
+)
+from .types import ColumnBlock, RowBlock, Schema
+from .wire import decode_schema, encode_schema, get_wire_format
+from .wire.parts_rows import PartsRowsFormat
+
+__all__ = [
+    "PipeConfig",
+    "ReservedName",
+    "parse_reserved",
+    "is_reserved",
+    "DataPipeOutput",
+    "DataPipeInput",
+    "open_pipe_writer",
+    "open_pipe_reader",
+    "PipeStats",
+]
+
+RESERVED_SCHEME = "db"
+RESERVED_TEMPLATE = "/tmp/__reserved__"
+
+
+@dataclass(frozen=True)
+class ReservedName:
+    dataset: str
+    workers: Optional[int] = None
+    query_id: str = "0"
+
+    def __str__(self) -> str:  # pragma: no cover - debugging aid
+        return f"db://{self.dataset}?workers={self.workers}&query={self.query_id}"
+
+
+def parse_reserved(filename: str) -> Optional[ReservedName]:
+    """Return the ReservedName if ``filename`` activates a data pipe."""
+    filename = str(filename)
+    if filename.startswith(f"{RESERVED_SCHEME}://"):
+        u = urlparse(filename)
+        qs = parse_qs(u.query)
+        workers = int(qs["workers"][0]) if "workers" in qs else None
+        query_id = qs.get("query", ["0"])[0]
+        return ReservedName(u.netloc or u.path.lstrip("/"), workers, query_id)
+    if filename.startswith(RESERVED_TEMPLATE):
+        tail = filename[len(RESERVED_TEMPLATE):]
+        m = re.match(r"([^?]+)(?:\?(.*))?$", tail)
+        if not m:
+            return None
+        qs = parse_qs(m.group(2) or "")
+        workers = int(qs["workers"][0]) if "workers" in qs else None
+        query_id = qs.get("query", ["0"])[0]
+        return ReservedName(m.group(1), workers, query_id)
+    return None
+
+
+def is_reserved(filename: str) -> bool:
+    return parse_reserved(filename) is not None
+
+
+@dataclass
+class PipeConfig:
+    """Negotiated pipe behaviour; travels in the schema frame meta."""
+
+    mode: str = "arrowcol"  # text | parts | binary_rows | tagged | arrowrow | arrowcol
+    codec: str = "none"  # none | rle | zip | zstd
+    block_rows: int = 65536
+    text_format: str = "csv"  # csv | json  (what the engine's serializer speaks)
+    delimiter: Optional[str] = None  # inferred when None (section 5.3.1)
+    verify_first_n: int = 0  # probabilistic runtime check (section 4.1)
+    link: Optional[LinkSim] = None
+    connect_timeout: float = 30.0
+
+    def meta(self) -> dict:
+        return {
+            "mode": self.mode,
+            "codec": self.codec,
+            "text_format": self.text_format,
+            "delimiter": self.delimiter,
+            "verify_first_n": self.verify_first_n,
+        }
+
+
+@dataclass
+class PipeStats:
+    bytes_sent: int = 0
+    frames_sent: int = 0
+    rows: int = 0
+    blocks: int = 0
+
+
+class DataPipeOutput:
+    """File-like write end of a data pipe (subtype-substitutable for the
+    engines' text writers, per fig. 5)."""
+
+    def __init__(
+        self,
+        filename: str,
+        config: Optional[PipeConfig] = None,
+        directory: Optional[DirectoryLike] = None,
+        endpoint: Optional[Endpoint] = None,
+    ):
+        rn = parse_reserved(filename)
+        if rn is None:
+            raise ValueError(f"{filename!r} is not a reserved pipe name")
+        self.reserved = rn
+        self.config = config or PipeConfig()
+        self.stats = PipeStats()
+        self.closed = False
+        self._verify_rows: List[tuple] = []
+        directory = directory or get_directory()
+        if endpoint is None:
+            endpoint = directory.query(
+                rn.dataset,
+                rn.query_id,
+                export_workers=rn.workers,
+                timeout=self.config.connect_timeout,
+            )
+        self._transport = _connect(endpoint, self.config.link)
+        self._wire = (
+            get_wire_format(self.config.mode)
+            if self.config.mode not in ("text", "parts", "bytes")
+            else None
+        )
+        self._parts_wire = PartsRowsFormat()
+        self._text_buf: List[str] = []
+        self._text_len = 0
+        self._part_rows: List[List[Any]] = []
+        self._cur_parts: List[Any] = []
+        if self.config.text_format == "json":
+            self._asm: Any = JsonAssembler()
+        else:
+            self._asm = DelimitedAssembler()
+            if self.config.delimiter is not None:
+                self._asm.delimiter = self.config.delimiter
+                self._asm._sampling = False
+        self._schema_sent = False
+        self._schema: Optional[Schema] = None
+        self._codec: Codec = get_codec(self.config.codec)
+        self._byte_buf: List[bytes] = []
+        self._byte_len = 0
+        if self.config.mode in ("text", "bytes"):
+            # schema frame still opens the stream so the reader can negotiate
+            self._send_schema(Schema([]))
+
+    # -- file protocol ---------------------------------------------------------
+    def write(self, s: Any) -> int:
+        if self.closed:
+            raise ValueError("write to closed data pipe")
+        if self.config.mode == "bytes":
+            b = s if isinstance(s, (bytes, bytearray, memoryview)) else str(s).encode("latin-1")
+            self._byte_buf.append(bytes(b))
+            self._byte_len += len(b)
+            if self._byte_len >= 1 << 20:
+                self._flush_bytes()
+            return len(b)
+        if self.config.mode == "text":
+            text = str(s)
+            self._text_buf.append(text)
+            self._text_len += len(text)
+            if self._text_len >= 1 << 20:
+                self._flush_text()
+            return len(text)
+        if self.config.mode == "parts":
+            self._write_parts(s)
+            return _cheap_len(s)
+        self._asm.write(s if isinstance(s, (AString, str)) else str(s))
+        if isinstance(self._asm, JsonAssembler) and len(self._asm._parts) >= 1 << 16:
+            self._asm.flush()  # retains any incomplete trailing document
+        self._maybe_flush_rows()
+        return _cheap_len(s)
+
+    def writelines(self, lines: Sequence[Any]) -> None:
+        for l in lines:
+            self.write(l)
+
+    def flush(self) -> None:
+        if self.config.mode == "text":
+            self._flush_text()
+        elif self.config.mode == "bytes":
+            self._flush_bytes()
+
+    def close(self) -> None:
+        if self.closed:
+            return
+        try:
+            if self.config.mode == "text":
+                self._flush_text()
+            elif self.config.mode == "bytes":
+                self._flush_bytes()
+            elif self.config.mode == "parts":
+                self._flush_parts(final=True)
+            else:
+                self._flush_rows(final=True)
+            self._transport.send_frame(FRAME_EOF, b"")
+        finally:
+            self.closed = True
+            self.stats.bytes_sent = self._transport.bytes_sent
+            self.stats.frames_sent = self._transport.frames_sent
+            self._transport.close()
+
+    def __enter__(self) -> "DataPipeOutput":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- text rung ---------------------------------------------------------------
+    def _flush_text(self) -> None:
+        if not self._text_buf:
+            return
+        payload = "".join(self._text_buf).encode("utf-8", "surrogatepass")
+        self._text_buf, self._text_len = [], 0
+        self._transport.send_frame(FRAME_TEXT, self._codec.compress(payload))
+
+    # -- bytes rung (shared-binary-format passthrough, e.g. seqfiles) --------------
+    def _flush_bytes(self) -> None:
+        if not self._byte_buf:
+            return
+        payload = b"".join(self._byte_buf)
+        self._byte_buf, self._byte_len = [], 0
+        self._transport.send_frame(FRAME_TEXT, self._codec.compress(payload))
+
+    # -- parts rung (binary primitives, delimiters retained) ----------------------
+    def _write_parts(self, s: Any) -> None:
+        parts = s.parts if isinstance(s, AString) else (str(s),)
+        for p in parts:
+            if isinstance(p, str) and p.endswith("\n"):
+                if p[:-1]:
+                    self._cur_parts.append(p[:-1])
+                self._part_rows.append(self._cur_parts)
+                self._cur_parts = []
+            else:
+                self._cur_parts.append(p)
+        if len(self._part_rows) >= self.config.block_rows:
+            self._flush_parts()
+
+    def _flush_parts(self, final: bool = False) -> None:
+        if final and self._cur_parts:
+            self._part_rows.append(self._cur_parts)
+            self._cur_parts = []
+        if not self._part_rows:
+            return
+        if not self._schema_sent:
+            self._send_schema(Schema([]))
+        payload = self._parts_wire.encode_parts(self._part_rows)
+        self.stats.rows += len(self._part_rows)
+        self._part_rows = []
+        self._transport.send_frame(FRAME_PARTS, self._codec.compress(payload))
+        self.stats.blocks += 1
+
+    # -- typed-rows rungs ----------------------------------------------------------
+    def _maybe_flush_rows(self) -> None:
+        if len(self._asm.rows) >= self.config.block_rows:
+            self._flush_rows()
+
+    def _flush_rows(self, final: bool = False) -> None:
+        if final:
+            try:
+                self._asm.flush()
+            except FormOptError:
+                pass  # trailing partial row: nothing further to emit
+        if not self._asm.rows:
+            return
+        rb: RowBlock = self._asm.take_rows()
+        if self._schema is None:
+            self._schema = rb.schema
+            self._send_schema(rb.schema)
+        block = rb.to_columns()  # section 5.4 pivot
+        if self.config.verify_first_n and len(self._verify_rows) < self.config.verify_first_n:
+            take = self.config.verify_first_n - len(self._verify_rows)
+            self._verify_rows.extend(rb.rows[:take])
+            self._send_verify(RowBlock(rb.schema, rb.rows[:take]))
+        payload = self._wire.encode_block(block)
+        self._transport.send_frame(FRAME_BLOCK, self._codec.compress(payload))
+        self.stats.rows += len(block)
+        self.stats.blocks += 1
+
+    def _send_schema(self, schema: Schema) -> None:
+        meta = self.config.meta()
+        if isinstance(self._asm, DelimitedAssembler) and self._asm.delimiter:
+            meta["delimiter"] = self._asm.delimiter
+        if getattr(self._asm, "header_names", None):
+            meta["header"] = list(self._asm.header_names)
+        self._transport.send_frame(FRAME_SCHEMA, encode_schema(schema, meta))
+        self._schema_sent = True
+
+    def _send_verify(self, rb: RowBlock) -> None:
+        """Probabilistic runtime check: ship the original text rendering of
+        the first n rows so the importer can compare (section 4.1)."""
+        if self.config.text_format == "json":
+            text = render_json(rb)
+        else:
+            text = render_delimited(rb, self._asm.delimiter or ",")
+        self._transport.send_frame(FRAME_VERIFY, text.encode("utf-8"))
+
+
+class DataPipeInput:
+    """File-like read end of a data pipe.
+
+    Decorated importers use :meth:`blocks` (typed ColumnBlocks, zero text) or
+    :meth:`astring_lines` (AStrings with typed parts).  Undecorated importers
+    read characters; we regenerate them from blocks + schema-frame metadata.
+
+    Both protocols consume from a *single* decoded-block queue, so a
+    header-probing client may ``read`` a few characters, :meth:`unread` them
+    (bounded rewind, one block deep — the HDFS sequence-file sniff of
+    section 6.1), and then switch to the typed protocol without losing data.
+    """
+
+    def __init__(
+        self,
+        filename: str,
+        directory: Optional[DirectoryLike] = None,
+        link: Optional[LinkSim] = None,
+        host: str = "127.0.0.1",
+        channel: Optional[Channel] = None,
+        import_workers: Optional[int] = None,
+    ):
+        rn = parse_reserved(filename)
+        if rn is None:
+            raise ValueError(f"{filename!r} is not a reserved pipe name")
+        self.reserved = rn
+        directory = directory or get_directory()
+        if channel is not None:
+            directory.register(
+                rn.dataset, Endpoint(channel=channel), rn.query_id,
+                import_workers=import_workers or rn.workers,
+            )
+            self._transport: Transport = ChannelTransport(channel, link)
+        else:
+            lsock = listen_socket(host)
+            h, p = lsock.getsockname()
+            directory.register(
+                rn.dataset, Endpoint(h, p), rn.query_id,
+                import_workers=import_workers or rn.workers,
+            )
+            lsock.settimeout(60.0)
+            conn, _ = lsock.accept()
+            lsock.close()
+            self._transport = SocketTransport(conn, link)
+        self.schema: Optional[Schema] = None
+        self.meta: dict = {}
+        self._codec: Codec = get_codec("none")
+        self._eof = False
+        self._started = False
+        self._verify_expected: List[str] = []
+        self.verify_failures: List[str] = []
+        # unified consumption state
+        self._raw_tail = ""          # text rung: undelivered raw characters
+        self._raw_chunks: List[bytes] = []  # bytes rung (binary passthrough)
+        self._head_block: Optional[ColumnBlock] = None
+        self._head_astrs: Optional[List[AString]] = None  # parts-mode head frame
+        self._head_text: Optional[str] = None  # head block rendered (memoized)
+        self._head_off = 0           # chars of head text consumed by read()
+        self._header_pending = False  # header line not yet delivered as text
+
+    # -- negotiation -------------------------------------------------------------
+    def _start(self) -> None:
+        if self._started:
+            return
+        kind, payload = self._transport.recv_frame()
+        if kind == FRAME_EOF:
+            self._eof = True  # stub socket: orphaned importer (section 4.2)
+            self._started = True
+            return
+        if kind != FRAME_SCHEMA:
+            raise IOError(f"pipe stream must begin with schema frame, got {kind!r}")
+        self.schema, self.meta = decode_schema(payload)
+        self._codec = get_codec(self.meta.get("codec", "none"))
+        mode = self.meta.get("mode", "arrowcol")
+        self._wire = (
+            get_wire_format(mode) if mode not in ("text", "parts", "bytes") else None
+        )
+        self._parts_wire = PartsRowsFormat()
+        self._header_pending = bool(self.meta.get("header"))
+        self._started = True
+
+    @property
+    def mode(self) -> str:
+        self._start()
+        return self.meta.get("mode", "arrowcol")
+
+    # -- frame pump (all protocols drain through here) -----------------------------
+    def _recv_data_frame(self) -> Optional[Tuple[bytes, bytes]]:
+        """Next (kind, decompressed payload) data frame, or None at EOF.
+        VERIFY frames are absorbed into the expected-text buffer."""
+        while not self._eof:
+            kind, payload = self._transport.recv_frame()
+            if kind == FRAME_EOF:
+                self._eof = True
+                return None
+            if kind == FRAME_VERIFY:
+                self._verify_expected.extend(payload.decode("utf-8").splitlines())
+                continue
+            return kind, self._codec.decompress(payload)
+        return None
+
+    def _next_block(self) -> Optional[ColumnBlock]:
+        """Decode the next typed block (non-text modes)."""
+        frame = self._recv_data_frame()
+        if frame is None:
+            return None
+        kind, data = frame
+        if kind == FRAME_BLOCK:
+            block = self._wire.decode_block(data, self.schema)
+            self._check_verify(block)
+            return block
+        if kind == FRAME_PARTS:
+            return self._parts_to_block(data)
+        if kind == FRAME_TEXT:
+            return self._text_to_block(data.decode("utf-8", "surrogatepass"))
+        raise IOError(f"unexpected frame kind {kind!r}")  # pragma: no cover
+
+    # -- typed fast path -----------------------------------------------------------
+    def blocks(self) -> Iterator[ColumnBlock]:
+        """Yield typed ColumnBlocks (the PipeGen fast path)."""
+        self._start()
+        if self.mode == "text":
+            # text rung: raw characters; parse per line-batch (drain any
+            # characters a header probe already pulled into the raw tail)
+            tail, self._raw_tail = self._raw_tail, ""
+            while True:
+                cut = tail.rfind("\n")
+                if cut >= 0:
+                    blk = self._text_to_block(tail[: cut + 1])
+                    tail = tail[cut + 1:]
+                    if len(blk):
+                        yield blk
+                frame = self._recv_data_frame()
+                if frame is None:
+                    if tail:
+                        blk = self._text_to_block(tail)
+                        if len(blk):
+                            yield blk
+                    return
+                tail += frame[1].decode("utf-8", "surrogatepass")
+        # serve the (possibly partially peeked) head frame first
+        head = self._take_head_typed()
+        if head is not None:
+            yield head
+        while True:
+            blk = self._next_block()
+            if blk is None:
+                return
+            yield blk
+
+    def astring_lines(self) -> Iterator[AString]:
+        """Yield one AString per row with typed parts + delimiters restored,
+        for decorated importers (AString.parse_* skips character parsing)."""
+        self._start()
+        mode = self.mode
+        if mode == "text":
+            # raw characters: one single-part AString per line (the importer
+            # parses characters exactly as it would from a file); drain any
+            # characters a header probe already pulled into the raw tail
+            tail, self._raw_tail = self._raw_tail, ""
+            while True:
+                lines = tail.split("\n")
+                tail = lines.pop()
+                for line in lines:
+                    yield AString((line,))
+                frame = self._recv_data_frame()
+                if frame is None:
+                    if tail:
+                        yield AString((tail,))
+                    return
+                tail += frame[1].decode("utf-8", "surrogatepass")
+        if mode == "parts":
+            head = self._take_head_astrs()
+            if head is not None:
+                for astr in head:
+                    yield astr
+            while True:
+                frame = self._recv_data_frame()
+                if frame is None:
+                    return
+                for astr in self._parts_wire.decode_parts(frame[1]):
+                    yield astr
+            return
+        d = self.meta.get("delimiter") or ","
+        hdr = self.meta.get("header")
+        if hdr and self._header_pending:
+            self._header_pending = False
+            parts: List[Any] = []
+            for j, nm in enumerate(hdr):
+                if j:
+                    parts.append(d)
+                parts.append(nm)
+            yield AString(parts)
+        for block in self.blocks():
+            rb = block.to_rows()
+            for row in rb.rows:
+                parts = []
+                for j, v in enumerate(row):
+                    if j:
+                        parts.append(d)
+                    parts.append(v)
+                yield AString(parts)
+
+    # -- character protocol ----------------------------------------------------------
+    def _render(self, rb: RowBlock) -> str:
+        if self.meta.get("text_format") == "json":
+            return render_json(rb)
+        return render_delimited(rb, self.meta.get("delimiter") or ",")
+
+    def _take_head_typed(self) -> Optional[ColumnBlock]:
+        """Pop the peeked head frame as a typed block (None if no head)."""
+        if self._head_block is None and self._head_astrs is None:
+            return None
+        if self._head_off:
+            raise IOError(
+                "typed read after unbalanced character peek "
+                f"({self._head_off} chars consumed)"
+            )
+        if self._head_block is not None:
+            blk, self._head_block, self._head_text = self._head_block, None, None
+            return blk
+        astrs, self._head_astrs, self._head_text = self._head_astrs, None, None
+        return self._astrs_to_block(astrs)
+
+    def _take_head_astrs(self) -> Optional[List[AString]]:
+        """Pop the peeked head frame as AStrings (parts mode)."""
+        if self._head_astrs is None:
+            return None
+        if self._head_off:
+            raise IOError(
+                "typed read after unbalanced character peek "
+                f"({self._head_off} chars consumed)"
+            )
+        astrs, self._head_astrs, self._head_text = self._head_astrs, None, None
+        return astrs
+
+    def _pop_head(self) -> None:
+        self._head_block = None
+        self._head_astrs = None
+        self._head_text = None
+        self._head_off = 0
+
+    def _ensure_head_text(self) -> Optional[str]:
+        """Rendered text of the current head frame (fetch one if needed)."""
+        if self.mode == "text":
+            raise AssertionError("_ensure_head_text is for typed modes")
+        if self.mode == "parts":
+            if self._head_astrs is None:
+                frame = self._recv_data_frame()
+                if frame is None:
+                    return None
+                self._head_astrs = list(self._parts_wire.decode_parts(frame[1]))
+                self._head_text = None
+            if self._head_text is None:
+                self._head_text = "".join(
+                    str(a) + "\n" for a in self._head_astrs
+                )
+            return self._head_text
+        if self._head_block is None:
+            self._head_block = self._next_block()
+            self._head_text = None
+            if self._head_block is None:
+                return None
+        if self._head_text is None:
+            text = self._render(self._head_block.to_rows())
+            if self._header_pending:
+                hdr = self.meta.get("header")
+                d = self.meta.get("delimiter") or ","
+                text = d.join(hdr) + "\n" + text
+                self._header_pending = False
+            self._head_text = text
+        return self._head_text
+
+    def _pump_raw(self) -> bool:
+        """Text/bytes rung: pull one frame of raw characters into the tail."""
+        frame = self._recv_data_frame()
+        if frame is None:
+            return False
+        enc = "latin-1" if self.mode == "bytes" else "utf-8"
+        self._raw_tail += frame[1].decode(enc, "surrogatepass")
+        return True
+
+    def read(self, size: int = -1) -> str:
+        self._start()
+        if self.mode in ("text", "bytes"):
+            while (size < 0 or len(self._raw_tail) < size) and self._pump_raw():
+                pass
+            if size < 0:
+                s, self._raw_tail = self._raw_tail, ""
+                return s
+            s, self._raw_tail = self._raw_tail[:size], self._raw_tail[size:]
+            return s
+        out: List[str] = []
+        got = 0
+        while size < 0 or got < size:
+            text = self._ensure_head_text()
+            if text is None:
+                break
+            avail = text[self._head_off:]
+            if size >= 0 and got + len(avail) > size:
+                take = size - got
+                out.append(avail[:take])
+                self._head_off += take
+                got += take
+                break
+            out.append(avail)
+            got += len(avail)
+            self._pop_head()
+        return "".join(out)
+
+    def unread(self, text: str) -> None:
+        """Bounded pushback for header-probing clients (section 6.1: the
+        HDFS client's read/rewind to sniff sequence-file magic).  Rewind is
+        limited to characters consumed from the current head block."""
+        if self.mode in ("text", "bytes"):
+            self._raw_tail = text + self._raw_tail
+            return
+        if len(text) > self._head_off:
+            raise IOError(
+                f"unread({len(text)} chars) exceeds bounded rewind "
+                f"({self._head_off} available)"
+            )
+        self._head_off -= len(text)
+
+    def readline(self) -> str:
+        self._start()
+        if self.mode in ("text", "bytes"):
+            while "\n" not in self._raw_tail:
+                if not self._pump_raw():
+                    s, self._raw_tail = self._raw_tail, ""
+                    return s
+            i = self._raw_tail.index("\n") + 1
+            s, self._raw_tail = self._raw_tail[:i], self._raw_tail[i:]
+            return s
+        out: List[str] = []
+        while True:
+            text = self._ensure_head_text()
+            if text is None:
+                return "".join(out)
+            nl = text.find("\n", self._head_off)
+            if nl >= 0:
+                out.append(text[self._head_off: nl + 1])
+                self._head_off = nl + 1
+                if self._head_off >= len(text):
+                    self._pop_head()
+                return "".join(out)
+            out.append(text[self._head_off:])
+            self._pop_head()
+
+    def read_bytes(self, size: int = -1) -> bytes:
+        """Binary passthrough (shared-binary-format pipes, e.g. seqfiles)."""
+        self._start()
+        buf = self._raw_tail.encode("latin-1", "surrogatepass") + b"".join(self._raw_chunks)
+        self._raw_tail = ""
+        self._raw_chunks = []
+        while size < 0 or len(buf) < size:
+            frame = self._recv_data_frame()
+            if frame is None:
+                break
+            buf += frame[1]
+        if size >= 0 and len(buf) > size:
+            self._raw_chunks = [buf[size:]]
+            buf = buf[:size]
+        return buf
+
+    def __iter__(self) -> Iterator[str]:
+        while True:
+            line = self.readline()
+            if not line:
+                return
+            yield line
+
+    def close(self) -> None:
+        self._transport.close()
+
+    def __enter__(self) -> "DataPipeInput":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- helpers ---------------------------------------------------------------------
+    def _parts_to_block(self, data: bytes) -> ColumnBlock:
+        return self._astrs_to_block(self._parts_wire.decode_parts(data))
+
+    def _astrs_to_block(self, astrs) -> ColumnBlock:
+        asm = DelimitedAssembler(sample_rows=8)
+        if self.meta.get("delimiter"):
+            asm.delimiter = self.meta["delimiter"]
+            asm._sampling = False
+        for astr in astrs:
+            asm.write(astr)
+            asm.write(AString(("\n",)))
+        asm.flush()
+        return asm.take_rows().to_columns()
+
+    _TEXT_DELIMS = (",", "\t", ";", "|")
+
+    def _text_to_block(self, text: str) -> ColumnBlock:
+        """Text rung (IORedirect only): the payload is raw characters, so
+        parse it the way the receiving engine would — split lines, sniff the
+        delimiter, keep cells as strings (the importer re-parses types)."""
+        lines = [l for l in text.split("\n") if l != ""]
+        if not lines:
+            return ColumnBlock(Schema([]), [])
+        d = self.meta.get("delimiter")
+        if not d:
+            for cand in self._TEXT_DELIMS:
+                widths = {l.count(cand) for l in lines}
+                if len(widths) == 1 and widths.pop() > 0:
+                    d = cand
+                    break
+            d = d or ","
+        rows = [tuple(l.split(d)) for l in lines]
+        width = max(len(r) for r in rows)
+        from .types import Field, ColType
+        schema = Schema([Field(f"column{i+1}", ColType.STRING) for i in range(width)])
+        rows = [r + ("",) * (width - len(r)) for r in rows]
+        return RowBlock(schema, rows).to_columns()
+
+    def _check_verify(self, block: ColumnBlock) -> None:
+        if not self._verify_expected:
+            return
+        rb = block.to_rows()
+        n = min(len(self._verify_expected), len(rb.rows))
+        got = self._render(RowBlock(rb.schema, rb.rows[:n])).splitlines()
+        for want, have in zip(self._verify_expected[:n], got):
+            if want != have:
+                self.verify_failures.append(f"want {want!r} got {have!r}")
+        del self._verify_expected[:n]
+        if self.verify_failures:
+            raise IOError(
+                "data pipe verification failed: " + "; ".join(self.verify_failures)
+            )
+
+
+def _cheap_len(s: Any) -> int:
+    """File-protocol return value without materializing the AString (the
+    write() return is the number of characters a file would have taken;
+    engines ignore it, so a cheap proxy suffices)."""
+    if isinstance(s, AString):
+        return len(s.parts)
+    return len(s) if isinstance(s, str) else 1
+
+
+def _connect(ep: Endpoint, link: Optional[LinkSim]) -> Transport:
+    if ep.is_channel:
+        return ChannelTransport(ep.channel, link)
+    s = socket.create_connection((ep.host, ep.port), timeout=30.0)
+    return SocketTransport(s, link)
+
+
+# -- convenience API (used by engines' generated adapters) ------------------------
+
+def open_pipe_writer(filename: str, config: Optional[PipeConfig] = None, **kw) -> DataPipeOutput:
+    return DataPipeOutput(filename, config=config, **kw)
+
+
+def open_pipe_reader(filename: str, **kw) -> DataPipeInput:
+    return DataPipeInput(filename, **kw)

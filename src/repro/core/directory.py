@@ -1,0 +1,327 @@
+"""Worker directory (paper section 4.2).
+
+Pairs parallel import workers with parallel export workers:
+
+* each importing worker registers an endpoint (host, port) -- or an
+  in-process Channel -- under a (dataset, query_id) key and then blocks in
+  ``accept`` waiting for its exporter;
+* each exporting worker calls :meth:`query`, which blocks until an entry is
+  available, pops it, and connects.
+
+N:M mismatches follow the paper:
+
+* importers > exporters: once the declared exporter count has been matched,
+  the directory opens a *stub* connection to each orphaned importer that
+  immediately signals end-of-file, so the extra importers idle gracefully;
+* exporters > importers: the paper leaves this as future work; we raise by
+  default and offer an explicit beyond-paper ``multiplex`` mode in which
+  surplus exporters round-robin onto existing importer endpoints (importers
+  then merge multiple streams).
+
+Per-query identifiers disambiguate concurrent transfers between the same
+pair of engines.  A TCP ``DirectoryServer``/``DirectoryClient`` pair extends
+the same API across processes (used by the multi-process examples).
+"""
+
+from __future__ import annotations
+
+import json
+import socket
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple, Union
+
+from .transport import (
+    FRAME_EOF,
+    Channel,
+    ChannelTransport,
+    SocketTransport,
+)
+
+__all__ = [
+    "Endpoint",
+    "WorkerDirectory",
+    "DirectoryServer",
+    "DirectoryClient",
+    "get_directory",
+    "set_directory",
+]
+
+
+@dataclass(frozen=True)
+class Endpoint:
+    """An importer's rendezvous point."""
+
+    host: str = ""
+    port: int = 0
+    channel: Optional[Channel] = None  # in-process fast path
+
+    @property
+    def is_channel(self) -> bool:
+        return self.channel is not None
+
+
+@dataclass
+class _QueryState:
+    entries: List[Endpoint] = field(default_factory=list)
+    popped: int = 0
+    registered: int = 0
+    export_workers: Optional[int] = None  # declared via db://X?workers=N
+    import_workers: Optional[int] = None
+    stubbed: bool = False
+
+
+class WorkerDirectory:
+    """In-process, thread-safe worker directory."""
+
+    def __init__(self, multiplex: bool = False):
+        self._lock = threading.Condition()
+        self._queries: Dict[Tuple[str, str], _QueryState] = {}
+        self.multiplex = multiplex
+        self._all_popped: Dict[Tuple[str, str], List[Endpoint]] = {}
+
+    def _state(self, dataset: str, query_id: str) -> _QueryState:
+        return self._queries.setdefault((dataset, query_id), _QueryState())
+
+    # -- importer side ---------------------------------------------------------
+    def register(
+        self,
+        dataset: str,
+        endpoint: Endpoint,
+        query_id: str = "0",
+        import_workers: Optional[int] = None,
+    ) -> None:
+        with self._lock:
+            st = self._state(dataset, query_id)
+            st.entries.append(endpoint)
+            st.registered += 1
+            if import_workers is not None:
+                st.import_workers = import_workers
+            self._lock.notify_all()
+            self._maybe_stub_locked(dataset, query_id)
+
+    # -- exporter side ---------------------------------------------------------
+    def query(
+        self,
+        dataset: str,
+        query_id: str = "0",
+        export_workers: Optional[int] = None,
+        timeout: float = 30.0,
+    ) -> Endpoint:
+        """Blocks until an importer endpoint is available, then pops it."""
+        deadline = time.monotonic() + timeout
+        with self._lock:
+            st = self._state(dataset, query_id)
+            if export_workers is not None:
+                st.export_workers = export_workers
+            while not st.entries:
+                if (
+                    self.multiplex
+                    and st.export_workers is not None
+                    and st.popped >= (st.import_workers or 0) > 0
+                ):
+                    # beyond-paper: surplus exporter reuses an earlier endpoint
+                    pool = self._all_popped.get((dataset, query_id), [])
+                    if pool:
+                        ep = pool[st.popped % len(pool)]
+                        st.popped += 1
+                        return ep
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise TimeoutError(
+                        f"no import worker registered for {dataset!r} "
+                        f"(query {query_id!r}) within timeout"
+                    )
+                self._lock.wait(remaining)
+            ep = st.entries.pop(0)
+            st.popped += 1
+            self._all_popped.setdefault((dataset, query_id), []).append(ep)
+            self._maybe_stub_locked(dataset, query_id)
+            return ep
+
+    # -- stub handling (importers > exporters) ----------------------------------
+    def _maybe_stub_locked(self, dataset: str, query_id: str) -> None:
+        st = self._state(dataset, query_id)
+        if st.export_workers is None or st.stubbed:
+            return
+        if st.popped >= st.export_workers and st.entries:
+            want = st.import_workers
+            if want is None or st.registered >= want:
+                orphans = list(st.entries)
+                st.entries.clear()
+                st.stubbed = True
+                for ep in orphans:
+                    threading.Thread(
+                        target=_send_stub_eof, args=(ep,), daemon=True
+                    ).start()
+
+    # -- bookkeeping -------------------------------------------------------------
+    def reset(self, dataset: Optional[str] = None) -> None:
+        with self._lock:
+            if dataset is None:
+                self._queries.clear()
+                self._all_popped.clear()
+            else:
+                for k in [k for k in self._queries if k[0] == dataset]:
+                    del self._queries[k]
+                for k in [k for k in self._all_popped if k[0] == dataset]:
+                    del self._all_popped[k]
+
+
+def _send_stub_eof(ep: Endpoint) -> None:
+    """Open a stub connection that immediately signals end-of-file."""
+    try:
+        if ep.is_channel:
+            ChannelTransport(ep.channel).send_frame(FRAME_EOF, b"")
+        else:
+            s = socket.create_connection((ep.host, ep.port), timeout=5.0)
+            SocketTransport(s).send_frame(FRAME_EOF, b"")
+            s.close()
+    except OSError:
+        pass
+
+
+# -- cross-process directory ----------------------------------------------------
+
+
+class DirectoryServer:
+    """Tiny JSON-lines TCP server exposing register/query across processes."""
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 0):
+        self.directory = WorkerDirectory()
+        self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._sock.bind((host, port))
+        self._sock.listen(64)
+        self.host, self.port = self._sock.getsockname()
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._serve, daemon=True)
+
+    def start(self) -> "DirectoryServer":
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+
+    def _serve(self) -> None:
+        while not self._stop.is_set():
+            try:
+                conn, _ = self._sock.accept()
+            except OSError:
+                return
+            threading.Thread(
+                target=self._handle, args=(conn,), daemon=True
+            ).start()
+
+    def _handle(self, conn: socket.socket) -> None:
+        f = conn.makefile("rwb")
+        try:
+            line = f.readline()
+            if not line:
+                return
+            req = json.loads(line)
+            if req["op"] == "register":
+                self.directory.register(
+                    req["dataset"],
+                    Endpoint(req["host"], req["port"]),
+                    req.get("query_id", "0"),
+                    req.get("import_workers"),
+                )
+                resp = {"ok": True}
+            elif req["op"] == "query":
+                try:
+                    ep = self.directory.query(
+                        req["dataset"],
+                        req.get("query_id", "0"),
+                        req.get("export_workers"),
+                        timeout=float(req.get("timeout", 30.0)),
+                    )
+                    resp = {"ok": True, "host": ep.host, "port": ep.port}
+                except TimeoutError as e:
+                    resp = {"ok": False, "error": str(e)}
+            else:
+                resp = {"ok": False, "error": f"bad op {req['op']!r}"}
+            f.write(json.dumps(resp).encode() + b"\n")
+            f.flush()
+        except (OSError, json.JSONDecodeError):
+            pass
+        finally:
+            try:
+                conn.close()
+            except OSError:
+                pass
+
+
+class DirectoryClient:
+    """Client with the WorkerDirectory API, speaking to a DirectoryServer."""
+
+    def __init__(self, host: str, port: int):
+        self.addr = (host, port)
+
+    def _rpc(self, req: dict) -> dict:
+        s = socket.create_connection(self.addr, timeout=60.0)
+        f = s.makefile("rwb")
+        f.write(json.dumps(req).encode() + b"\n")
+        f.flush()
+        resp = json.loads(f.readline())
+        s.close()
+        return resp
+
+    def register(
+        self,
+        dataset: str,
+        endpoint: Endpoint,
+        query_id: str = "0",
+        import_workers: Optional[int] = None,
+    ) -> None:
+        assert not endpoint.is_channel, "channels cannot cross processes"
+        self._rpc(
+            {
+                "op": "register",
+                "dataset": dataset,
+                "host": endpoint.host,
+                "port": endpoint.port,
+                "query_id": query_id,
+                "import_workers": import_workers,
+            }
+        )
+
+    def query(
+        self,
+        dataset: str,
+        query_id: str = "0",
+        export_workers: Optional[int] = None,
+        timeout: float = 30.0,
+    ) -> Endpoint:
+        resp = self._rpc(
+            {
+                "op": "query",
+                "dataset": dataset,
+                "query_id": query_id,
+                "export_workers": export_workers,
+                "timeout": timeout,
+            }
+        )
+        if not resp.get("ok"):
+            raise TimeoutError(resp.get("error", "directory query failed"))
+        return Endpoint(resp["host"], resp["port"])
+
+
+DirectoryLike = Union[WorkerDirectory, DirectoryClient]
+
+_GLOBAL = WorkerDirectory()
+
+
+def get_directory() -> DirectoryLike:
+    return _GLOBAL
+
+
+def set_directory(d: DirectoryLike) -> None:
+    global _GLOBAL
+    _GLOBAL = d

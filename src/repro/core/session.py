@@ -1,0 +1,217 @@
+"""Transfer session: the user-facing surface of PipeGen (paper section 3.1).
+
+The paper's usage model is two queries — an export on the source DBMS and an
+import on the target — with PipeGen's worker directory pairing the two sides
+at runtime.  :func:`transfer` packages exactly that: it runs the export and
+import concurrently (each under its engine's generated pipe splice), matches
+the destination's text dialect the way a user would configure the export,
+and returns timing/byte statistics for the benchmarks.
+
+:func:`transfer_via_files` is the baseline the paper compares against: the
+same export/import through real files on the file system.
+"""
+
+from __future__ import annotations
+
+import itertools
+import os
+import tempfile
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+from .codegen import GeneratedPipe, PipeEnabledEngine, generate_pipe_adapter
+from .datapipe import PipeConfig
+from .directory import WorkerDirectory, set_directory
+from .ioredirect import PipeOpenContext
+
+__all__ = ["TransferResult", "transfer", "transfer_via_files", "adapter_for",
+           "negotiate_pipe_mode"]
+
+_query_counter = itertools.count(1)
+_adapter_cache: Dict[str, GeneratedPipe] = {}
+_adapter_lock = threading.Lock()
+
+
+@dataclass
+class TransferResult:
+    source: str
+    target: str
+    mode: str
+    codec: str
+    rows: int
+    seconds: float
+    export_seconds: float = 0.0
+    import_seconds: float = 0.0
+    bytes_moved: int = 0
+    errors: List[str] = field(default_factory=list)
+
+
+def adapter_for(engine: Any) -> GeneratedPipe:
+    """Generate (once per engine class) the pipe adapter via the compile
+    loop: run the engine's unit tests, locate IO call sites, emit adapter."""
+    key = engine.name
+    with _adapter_lock:
+        gp = _adapter_cache.get(key)
+        if gp is None:
+            with tempfile.TemporaryDirectory() as td:
+                gp = generate_pipe_adapter(
+                    engine.name,
+                    engine.unit_export_test,
+                    engine.unit_import_test,
+                    os.path.join(td, "unit.csv"),
+                )
+            _adapter_cache[key] = gp
+        return gp
+
+
+#: FormOpt optimization ladder, most-optimized first (paper sections 5.1/5.2:
+#: if the generated code fails the unit tests, disable the optimization and
+#: fall back — ultimately to the basic IORedirect text pipe).
+MODE_LADDER = ("arrowcol", "arrowrow", "binary_rows", "parts", "text")
+
+
+def negotiate_pipe_mode(engine: Any, spool_dir: Optional[str] = None) -> PipeConfig:
+    """Run the engine's own round-trip unit tests across the verification
+    proxy for each FormOpt rung, most-optimized first; return the first
+    configuration that validates (the paper's disable-on-failure loop)."""
+    import tempfile
+
+    from .verify import validate_generated_pipe
+
+    gp = adapter_for(engine)
+    own_tmp = spool_dir is None
+    td = spool_dir or tempfile.mkdtemp(prefix="pipegen-verify-")
+    try:
+        for mode in MODE_LADDER:
+            cfg = PipeConfig(mode=mode)
+            with PipeEnabledEngine(gp), PipeOpenContext(cfg):
+                res = validate_generated_pipe(
+                    engine.name, engine.unit_roundtrip_test, td,
+                    dataset=f"neg-{engine.name}-{mode}", config=cfg)
+            if res.passed:
+                return cfg
+        raise RuntimeError(
+            f"no pipe mode validates for engine {engine.name!r}")
+    finally:
+        if own_tmp:
+            import shutil
+
+            shutil.rmtree(td, ignore_errors=True)
+
+
+def transfer(
+    src: Any,
+    table: str,
+    dst: Any,
+    dst_table: str,
+    config: Optional[PipeConfig] = None,
+    workers: int = 1,
+    import_workers: Optional[int] = None,
+    dataset: Optional[str] = None,
+    directory: Optional[WorkerDirectory] = None,
+    timeout: float = 120.0,
+) -> TransferResult:
+    """Move ``src:table`` into ``dst:dst_table`` over a generated data pipe.
+
+    The export runs with the destination's dialect (header/delimiter), the
+    way the paper's users configure their export queries.  ``workers`` /
+    ``import_workers`` reproduce the section 4.2 N:M pairing.
+    """
+    config = config or PipeConfig()
+    if directory is not None:
+        set_directory(directory)
+    gp_src, gp_dst = adapter_for(src), adapter_for(dst)
+    qid = f"q{next(_query_counter)}"
+    ds = dataset or f"{src.name}2{dst.name}"
+    imp_workers = import_workers if import_workers is not None else workers
+    name_exp = f"db://{ds}?workers={workers}&query={qid}"
+    name_imp = f"db://{ds}?workers={imp_workers}&query={qid}"
+    errs: List[BaseException] = []
+    times = {"export": 0.0, "import": 0.0}
+    stats_holder: List[Any] = []
+
+    def run_import() -> None:
+        t0 = time.perf_counter()
+        try:
+            with PipeEnabledEngine(gp_dst), PipeOpenContext(config):
+                dst.import_csv_parallel(dst_table, name_imp, workers=imp_workers)
+        except BaseException as e:  # noqa: BLE001 - surfaced via result
+            errs.append(e)
+        times["import"] = time.perf_counter() - t0
+
+    def run_export() -> None:
+        t0 = time.perf_counter()
+        try:
+            with PipeEnabledEngine(gp_src), PipeOpenContext(config):
+                src.export_csv_parallel(
+                    table, name_exp, workers=workers,
+                    header=dst.writes_header, delimiter=dst.csv_delimiter,
+                )
+        except BaseException as e:  # noqa: BLE001
+            errs.append(e)
+        times["export"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    ti = threading.Thread(target=run_import, name=f"pipegen-import-{qid}")
+    te = threading.Thread(target=run_export, name=f"pipegen-export-{qid}")
+    ti.start()
+    te.start()
+    ti.join(timeout)
+    te.join(timeout)
+    elapsed = time.perf_counter() - t0
+    if errs:
+        raise errs[0]
+    if ti.is_alive() or te.is_alive():
+        raise TimeoutError(f"transfer {ds} did not complete within {timeout}s")
+    rows = len(dst.get_block(dst_table))
+    return TransferResult(
+        source=src.name, target=dst.name, mode=config.mode, codec=config.codec,
+        rows=rows, seconds=elapsed,
+        export_seconds=times["export"], import_seconds=times["import"],
+    )
+
+
+def transfer_via_files(
+    src: Any,
+    table: str,
+    dst: Any,
+    dst_table: str,
+    workers: int = 1,
+    tmpdir: Optional[str] = None,
+) -> TransferResult:
+    """The paper's baseline: export to CSV files on disk, then import them.
+    Fully sequential (the importer cannot start until the files exist)."""
+    own_tmp = tmpdir is None
+    td = tmpdir or tempfile.mkdtemp(prefix="pipegen-fs-")
+    base = os.path.join(td, f"{src.name}2{dst.name}.csv")
+    t0 = time.perf_counter()
+    src.export_csv_parallel(
+        table, base, workers=workers,
+        header=dst.writes_header, delimiter=dst.csv_delimiter,
+    )
+    t1 = time.perf_counter()
+    # single-worker export writes `base` itself; parallel writes part files
+    if workers <= 1:
+        if not os.path.exists(base):
+            raise FileNotFoundError(base)
+        dst.import_csv(dst_table, base)
+    else:
+        dst.import_csv_parallel(dst_table, base, workers=workers)
+    t2 = time.perf_counter()
+    bytes_moved = 0
+    for fn in os.listdir(td):
+        if fn.startswith(os.path.basename(base)):
+            bytes_moved += os.path.getsize(os.path.join(td, fn))
+    if own_tmp:
+        for fn in os.listdir(td):
+            os.unlink(os.path.join(td, fn))
+        os.rmdir(td)
+    rows = len(dst.get_block(dst_table))
+    return TransferResult(
+        source=src.name, target=dst.name, mode="file-csv", codec="none",
+        rows=rows, seconds=t2 - t0,
+        export_seconds=t1 - t0, import_seconds=t2 - t1,
+        bytes_moved=bytes_moved,
+    )

@@ -1,0 +1,267 @@
+"""Core value/schema/block types shared by the PipeGen data plane.
+
+The paper's pipes move relational tuples whose attributes are fixed-width
+primitives or strings.  We model that with an explicit column-typed schema
+and two block representations:
+
+* ``RowBlock``   -- a list of row tuples (what text serializers naturally
+  produce/consume, row-major).
+* ``ColumnBlock`` -- column-major numpy buffers + a string heap (what the
+  Arrow-analog wire format and the JAX input pipeline consume).
+
+Blocks are the unit of transfer on a data pipe: exporters accumulate rows
+into blocks, the FormOpt layer pivots them (paper section 5.4), and the wire
+format serializes whole blocks.
+"""
+
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass
+from typing import Any, Iterable, Sequence
+
+import numpy as np
+
+__all__ = [
+    "ColType",
+    "Field",
+    "Schema",
+    "RowBlock",
+    "ColumnBlock",
+    "infer_schema",
+    "schema_of_value",
+]
+
+
+class ColType(enum.Enum):
+    """Column types supported on the wire (paper: ints, doubles, strings)."""
+
+    INT32 = "int32"
+    INT64 = "int64"
+    FLOAT32 = "float32"
+    FLOAT64 = "float64"
+    BOOL = "bool"
+    STRING = "string"
+
+    @property
+    def is_fixed_width(self) -> bool:
+        return self is not ColType.STRING
+
+    @property
+    def np_dtype(self) -> np.dtype:
+        if self is ColType.STRING:
+            # string columns are materialized as object arrays host-side
+            return np.dtype(object)
+        return np.dtype(self.value)
+
+    @property
+    def width(self) -> int:
+        """Fixed byte width (0 for variable-length strings)."""
+        return {
+            ColType.INT32: 4,
+            ColType.INT64: 8,
+            ColType.FLOAT32: 4,
+            ColType.FLOAT64: 8,
+            ColType.BOOL: 1,
+            ColType.STRING: 0,
+        }[self]
+
+
+@dataclass(frozen=True)
+class Field:
+    name: str
+    type: ColType
+
+    def to_dict(self) -> dict:
+        return {"name": self.name, "type": self.type.value}
+
+    @staticmethod
+    def from_dict(d: dict) -> "Field":
+        return Field(d["name"], ColType(d["type"]))
+
+
+class Schema:
+    """An ordered collection of named, typed columns."""
+
+    __slots__ = ("fields", "_name_index")
+
+    def __init__(self, fields: Sequence[Field]):
+        self.fields = tuple(fields)
+        self._name_index = {f.name: i for i, f in enumerate(self.fields)}
+
+    # -- construction helpers -------------------------------------------------
+    @staticmethod
+    def of(*pairs: tuple) -> "Schema":
+        return Schema([Field(name, ct) for name, ct in pairs])
+
+    @staticmethod
+    def from_dict(d: dict) -> "Schema":
+        return Schema([Field.from_dict(f) for f in d["fields"]])
+
+    def to_dict(self) -> dict:
+        return {"fields": [f.to_dict() for f in self.fields]}
+
+    # -- protocol -------------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self.fields)
+
+    def __iter__(self):
+        return iter(self.fields)
+
+    def __getitem__(self, i):
+        if isinstance(i, str):
+            return self.fields[self._name_index[i]]
+        return self.fields[i]
+
+    def __eq__(self, other) -> bool:
+        return isinstance(other, Schema) and self.fields == other.fields
+
+    def __hash__(self) -> int:
+        return hash(self.fields)
+
+    def __repr__(self) -> str:
+        inner = ", ".join(f"{f.name}:{f.type.value}" for f in self.fields)
+        return f"Schema({inner})"
+
+    def index_of(self, name: str) -> int:
+        return self._name_index[name]
+
+    @property
+    def names(self) -> tuple:
+        return tuple(f.name for f in self.fields)
+
+    @property
+    def types(self) -> tuple:
+        return tuple(f.type for f in self.fields)
+
+    @property
+    def fixed_row_width(self) -> int:
+        """Bytes per row counting only fixed-width columns."""
+        return sum(f.type.width for f in self.fields)
+
+
+_PY_TO_COLTYPE = {
+    bool: ColType.BOOL,
+    int: ColType.INT64,
+    float: ColType.FLOAT64,
+    str: ColType.STRING,
+}
+
+
+def schema_of_value(v: Any) -> ColType:
+    for py, ct in _PY_TO_COLTYPE.items():
+        if isinstance(v, py):
+            return ct
+    if isinstance(v, (np.integer,)):
+        return ColType.INT64
+    if isinstance(v, (np.floating,)):
+        return ColType.FLOAT64
+    raise TypeError(f"unsupported value type: {type(v)!r}")
+
+
+def infer_schema(row: Sequence[Any], names: Sequence[str] | None = None) -> Schema:
+    names = names or [f"column{i + 1}" for i in range(len(row))]
+    return Schema([Field(n, schema_of_value(v)) for n, v in zip(names, row)])
+
+
+class RowBlock:
+    """Row-major block: what text serializers produce one line at a time."""
+
+    __slots__ = ("schema", "rows")
+
+    def __init__(self, schema: Schema, rows: list):
+        self.schema = schema
+        self.rows = rows
+
+    def __len__(self) -> int:
+        return len(self.rows)
+
+    def to_columns(self) -> "ColumnBlock":
+        """Pivot row-major -> column-major (paper section 5.4, host side)."""
+        n = len(self.rows)
+        cols: list = []
+        if n == 0:
+            for f in self.schema:
+                cols.append(
+                    [] if f.type is ColType.STRING else np.empty(0, f.type.np_dtype)
+                )
+            return ColumnBlock(self.schema, cols)
+        for j, f in enumerate(self.schema):
+            vals = [r[j] for r in self.rows]
+            if f.type is ColType.STRING:
+                cols.append(vals)
+            else:
+                cols.append(np.asarray(vals, dtype=f.type.np_dtype))
+        return ColumnBlock(self.schema, cols)
+
+
+class ColumnBlock:
+    """Column-major block: numpy buffers per fixed-width column, python list
+    for string columns.  The unit the Arrow-analog wire format serializes."""
+
+    __slots__ = ("schema", "columns")
+
+    def __init__(self, schema: Schema, columns: Sequence[Any]):
+        assert len(columns) == len(schema)
+        self.schema = schema
+        self.columns = list(columns)
+
+    def __len__(self) -> int:
+        if not self.columns:
+            return 0
+        c0 = self.columns[0]
+        return len(c0)
+
+    @property
+    def nbytes(self) -> int:
+        total = 0
+        for f, c in zip(self.schema, self.columns):
+            if f.type is ColType.STRING:
+                total += sum(len(s.encode("utf-8", "surrogatepass")) + 4 for s in c)
+            else:
+                total += c.nbytes
+        return total
+
+    def to_rows(self) -> RowBlock:
+        n = len(self)
+        pycols = []
+        for f, c in zip(self.schema, self.columns):
+            if f.type is ColType.STRING:
+                pycols.append(c)
+            else:
+                pycols.append(c.tolist())
+        rows = list(zip(*pycols)) if pycols else [()] * n
+        return RowBlock(self.schema, rows)
+
+    def column(self, name: str):
+        return self.columns[self.schema.index_of(name)]
+
+    @staticmethod
+    def concat(blocks: Sequence["ColumnBlock"]) -> "ColumnBlock":
+        blocks = [b for b in blocks if len(b)]
+        if not blocks:
+            raise ValueError("no non-empty blocks to concat")
+        schema = blocks[0].schema
+        cols = []
+        for j, f in enumerate(schema):
+            if f.type is ColType.STRING:
+                out: list = []
+                for b in blocks:
+                    out.extend(b.columns[j])
+                cols.append(out)
+            else:
+                cols.append(np.concatenate([b.columns[j] for b in blocks]))
+        return ColumnBlock(schema, cols)
+
+    @staticmethod
+    def from_arrays(names: Sequence[str], arrays: Sequence[Any]) -> "ColumnBlock":
+        fields = []
+        cols = []
+        for n, a in zip(names, arrays):
+            if isinstance(a, np.ndarray):
+                fields.append(Field(n, ColType(str(a.dtype))))
+                cols.append(a)
+            else:
+                fields.append(Field(n, ColType.STRING))
+                cols.append(list(a))
+        return ColumnBlock(Schema(fields), cols)

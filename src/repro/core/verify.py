@@ -1,0 +1,156 @@
+"""Verification proxy (paper section 4.1).
+
+After PipeGen generates a pipe, it validates the modified engine by running
+the engine's own unit tests with the pipe activated while a *proxy* plays
+the role of the remote DBMS:
+
+* export leg — the proxy registers as an importer, receives everything the
+  engine pushes down the pipe, and spools it to a real disk file using the
+  original text rendering;
+* import leg — the proxy reads that spool file and transmits it through a
+  pipe into the engine's importer.
+
+The engine's existing test assertions (exported data == imported data) then
+validate the generated pipe end to end: if FormOpt mis-inferred a delimiter
+or dropped a value, the spooled text differs and the test fails, which makes
+PipeGen disable the offending optimization (sections 5.1/5.3.1).
+
+The *probabilistic runtime check* (first-n rows shipped in V frames and
+compared on the import side) lives in the data pipe itself
+(``PipeConfig.verify_first_n``); this module provides the compile-time
+proxy.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Callable, List, Optional
+
+from .astring import AString
+from .datapipe import DataPipeInput, DataPipeOutput, PipeConfig
+from .directory import DirectoryLike, get_directory
+
+__all__ = ["VerificationProxy", "VerificationResult", "validate_generated_pipe"]
+
+EXPORT_LEG = "pgv-export"
+IMPORT_LEG = "pgv-import"
+
+
+@dataclass
+class VerificationResult:
+    engine: str
+    passed: bool
+    detail: str = ""
+    spool_bytes: int = 0
+
+
+class VerificationProxy:
+    """Plays the remote DBMS for both legs of a round-trip unit test."""
+
+    def __init__(
+        self,
+        spool_dir: Path,
+        directory: Optional[DirectoryLike] = None,
+        config: Optional[PipeConfig] = None,
+    ):
+        self.spool_dir = Path(spool_dir)
+        self.spool_dir.mkdir(parents=True, exist_ok=True)
+        self.directory = directory or get_directory()
+        self.config = config or PipeConfig()
+        self.errors: List[str] = []
+        self._spooled: dict = {}
+
+    def _spool_event(self, dataset: str) -> threading.Event:
+        return self._spooled.setdefault(dataset, threading.Event())
+
+    # -- export leg: pipe -> disk ------------------------------------------------
+    def start_sink(self, dataset: str) -> threading.Thread:
+        """Register as importer for the export leg; spool received data to
+        disk exactly as the file path would have."""
+
+        def run() -> None:
+            try:
+                pipe = DataPipeInput(
+                    f"db://{dataset}?query={EXPORT_LEG}", directory=self.directory
+                )
+                text = pipe.read()
+                pipe.close()
+                self.spool_path(dataset).write_text(text)
+            except Exception as e:  # noqa: BLE001 - surfaced via self.errors
+                self.errors.append(f"sink({dataset}): {e!r}")
+            finally:
+                self._spool_event(dataset).set()
+
+        t = threading.Thread(target=run, daemon=True)
+        t.start()
+        return t
+
+    # -- import leg: disk -> pipe ------------------------------------------------
+    def start_source(self, dataset: str) -> threading.Thread:
+        """Read the spool file and transmit it through a pipe into the
+        engine's importer (which registers with the directory)."""
+
+        def run() -> None:
+            try:
+                # connect first (blocks until the engine's importer registers),
+                # by which time the sink has spooled the export leg
+                pipe = DataPipeOutput(
+                    f"db://{dataset}?query={IMPORT_LEG}",
+                    config=self.config,
+                    directory=self.directory,
+                )
+                if not self._spool_event(dataset).wait(timeout=30):
+                    raise TimeoutError("export leg never spooled")
+                text = self.spool_path(dataset).read_text()
+                for line in text.splitlines(keepends=True):
+                    # feed as AStrings so FormOpt modes work on the proxy side
+                    pipe.write(AString((line,)))
+                pipe.close()
+            except Exception as e:  # noqa: BLE001
+                self.errors.append(f"source({dataset}): {e!r}")
+
+        t = threading.Thread(target=run, daemon=True)
+        t.start()
+        return t
+
+    def spool_path(self, dataset: str) -> Path:
+        return self.spool_dir / f"{dataset}.spool"
+
+
+def validate_generated_pipe(
+    engine_name: str,
+    roundtrip_test: Callable[[str, str], None],
+    spool_dir: Path,
+    dataset: Optional[str] = None,
+    directory: Optional[DirectoryLike] = None,
+    config: Optional[PipeConfig] = None,
+) -> VerificationResult:
+    """Run one engine round-trip unit test across the verification proxy.
+
+    ``roundtrip_test(export_target, import_target)`` must export known data
+    to the first name, import from the second, and assert equality — the
+    engine's own unit-test logic.  We hand it reserved names wired through
+    the proxy; any assertion failure means the generated pipe corrupted
+    data and the caller disables the optimization under test.
+    """
+    dataset = dataset or f"verify-{engine_name}"
+    proxy = VerificationProxy(spool_dir, directory=directory, config=config)
+    sink = proxy.start_sink(dataset)
+    source = proxy.start_source(dataset)
+
+    export_name = f"db://{dataset}?query={EXPORT_LEG}"
+    import_name = f"db://{dataset}?query={IMPORT_LEG}"
+    try:
+        roundtrip_test(export_name, import_name)
+    except Exception as e:  # noqa: BLE001 - verification outcome, not a crash
+        return VerificationResult(engine_name, False, f"unit test failed: {e!r}")
+    finally:
+        sink.join(timeout=30)
+        source.join(timeout=30)
+    if proxy.errors:
+        return VerificationResult(engine_name, False, "; ".join(proxy.errors))
+    spool = proxy.spool_path(dataset)
+    size = spool.stat().st_size if spool.exists() else 0
+    return VerificationResult(engine_name, True, "round-trip matched", size)

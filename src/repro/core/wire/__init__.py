@@ -1,0 +1,40 @@
+"""Intermediate wire formats (paper sections 5.4 and 7.3).
+
+The paper compares a custom row-major binary format, protocol buffers
+(static and dynamic message templates), and Apache Arrow (row and column
+oriented), finding Arrow-columnar fastest.  We implement analogs of each so
+the fig. 13 benchmark reproduces the comparison:
+
+* ``parts_rows``   -- typed AString parts, delimiters retained (the
+                      "+binary, no delimiter removal" rung of fig. 11)
+* ``binary_rows``  -- custom format: schema header, fixed-width values in
+                      binary, length-prefixed strings, row-major
+* ``tagged``       -- protobuf-like tag/varint encoding, static or dynamic
+                      message templates
+* ``arrowrow``     -- preallocated typed buffers, row-major interleaved
+                      (numpy structured arrays; Arrow row-oriented analog)
+* ``arrowcol``     -- per-column contiguous buffers + string heaps (Arrow
+                      columnar analog; the winner and PipeGen's default)
+
+Every format encodes/decodes ``ColumnBlock``s; a stream begins with a schema
+frame produced by :func:`encode_schema`.
+"""
+
+from .base import WireFormat, encode_schema, decode_schema, get_wire_format, WIRE_FORMATS
+from .binary_rows import BinaryRowsFormat
+from .parts_rows import PartsRowsFormat
+from .tagged import TaggedFormat
+from .arrowcol import ArrowColFormat, ArrowRowFormat
+
+__all__ = [
+    "WireFormat",
+    "encode_schema",
+    "decode_schema",
+    "get_wire_format",
+    "WIRE_FORMATS",
+    "BinaryRowsFormat",
+    "PartsRowsFormat",
+    "TaggedFormat",
+    "ArrowColFormat",
+    "ArrowRowFormat",
+]

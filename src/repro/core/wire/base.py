@@ -1,0 +1,62 @@
+"""Wire format interface + schema frame codec."""
+
+from __future__ import annotations
+
+import json
+from typing import Dict, Type
+
+from ..types import ColumnBlock, Schema
+
+__all__ = [
+    "WireFormat",
+    "encode_schema",
+    "decode_schema",
+    "WIRE_FORMATS",
+    "get_wire_format",
+    "register_wire_format",
+]
+
+
+class WireFormat:
+    """Serializes/deserializes one ColumnBlock payload (framing is the
+    transport's job; schema travels once per stream in a schema frame)."""
+
+    name: str = "abstract"
+
+    def encode_block(self, block: ColumnBlock) -> bytes:
+        raise NotImplementedError
+
+    def decode_block(self, data: bytes, schema: Schema) -> ColumnBlock:
+        raise NotImplementedError
+
+
+def encode_schema(schema: Schema, meta: dict | None = None) -> bytes:
+    """Schema frame: transmitted exactly once per stream.  ``meta`` carries
+    the text-format profile (delimiter, json flavor) so the importing side
+    can regenerate byte-identical text when the engine insists on characters
+    -- this is the 'key header'/metadata-once idea of section 5.3.2 applied
+    to the whole stream."""
+    doc = {"schema": schema.to_dict(), "meta": meta or {}}
+    return json.dumps(doc).encode("utf-8")
+
+
+def decode_schema(data: bytes) -> tuple:
+    doc = json.loads(data.decode("utf-8"))
+    return Schema.from_dict(doc["schema"]), doc.get("meta", {})
+
+
+WIRE_FORMATS: Dict[str, Type[WireFormat]] = {}
+
+
+def register_wire_format(cls: Type[WireFormat]) -> Type[WireFormat]:
+    WIRE_FORMATS[cls.name] = cls
+    return cls
+
+
+def get_wire_format(name: str, **kw) -> WireFormat:
+    try:
+        return WIRE_FORMATS[name](**kw)
+    except KeyError:
+        raise ValueError(
+            f"unknown wire format {name!r}; have {sorted(WIRE_FORMATS)}"
+        ) from None

@@ -1,0 +1,17 @@
+"""Distribution: mesh axes, sharding rules, compressed collectives."""
+
+from .sharding import (
+    batch_axes,
+    batch_spec,
+    cache_specs,
+    named_sharding,
+    param_specs,
+    spec_for_leaf,
+)
+from .compress import compressed_psum, quantize_q8, dequantize_q8
+
+__all__ = [
+    "batch_axes", "batch_spec", "cache_specs", "named_sharding",
+    "param_specs", "spec_for_leaf",
+    "compressed_psum", "quantize_q8", "dequantize_q8",
+]

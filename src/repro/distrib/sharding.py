@@ -1,0 +1,207 @@
+"""Sharding rule engine: map every param / cache / batch leaf to a
+PartitionSpec on the production mesh.
+
+Rules are *preference lists*: the first candidate whose named axes all
+divide the corresponding tensor dims wins; otherwise fall through, ending at
+full replication.  That makes every architecture lowerable on a fixed mesh
+(40 heads on a 16-way model axis falls back from head-sharding to
+d_model-sharding, 8 grok experts fall to the EPxTP path, etc.) — the same
+policy a production framework needs when one mesh must serve many models.
+
+Axis conventions
+----------------
+``pod``    slowest axis, crosses DCN (multi-pod only)
+``data``   batch / ZeRO axis
+``model``  tensor / expert / sequence-parallel axis
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..models.config import ModelConfig
+
+__all__ = [
+    "batch_axes", "batch_spec", "param_specs", "cache_specs",
+    "spec_for_leaf", "named_sharding",
+]
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Mesh axes that shard the global batch (everything but `model`)."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+# -- rule tables ---------------------------------------------------------------
+# leaf-name -> list of candidate specs (shapes WITHOUT the stacked layer dim;
+# a leading None is prepended automatically for stacked per-layer leaves).
+
+_PARAM_RULES: Dict[str, Sequence[P]] = {
+    # embeddings
+    "embed": [P("model", None), P(None, "model")],
+    "unembed": [P(None, "model"), P("model", None)],
+    # attention projections [d, H, hd] / [H, hd, d]
+    "wq": [P(None, "model", None), P("model", None, None)],
+    "wk": [P(None, "model", None), P("model", None, None)],
+    "wv": [P(None, "model", None), P("model", None, None)],
+    "wo": [P("model", None, None), P(None, None, "model")],
+    # dense MLP [d, f] / [f, d]
+    "w_gate": [P(None, "model")],
+    "w_up": [P(None, "model")],
+    "w_down": [P("model", None)],
+    # MoE (parent-qualified below): [E, d, f] / [E, f, d]
+    "moe/w_gate": [P("model", None, None), P(None, None, "model")],
+    "moe/w_up": [P("model", None, None), P(None, None, "model")],
+    "moe/w_down": [P("model", None, None), P(None, "model", None)],
+    "moe/router": [P(None, None)],
+    # rwkv6: column-parallel projections (bf16-pinned gathers), value-
+    # channel-sharded gate, row-parallel output
+    "ck": [P(None, "model")],
+    "cv": [P("model", None)],
+    "cr": [P(None, "model")],
+    "ssm/wr": [P(None, "model")],
+    "ssm/wk": [P(None, "model")],
+    "ssm/wv": [P(None, None, "model")],   # [d, H, hd]: shard value channels
+    "ssm/wg": [P(None, None, "model")],
+    "ssm/wo": [P(None, "model", None)],   # [H, hd, d]: contract sharded hd
+    # mamba2
+    "w_in": [P(None, "model")],
+    "conv_w": [P(None, "model")],
+    "w_out": [P("model", None)],
+    # whisper gelu mlp
+    "w1": [P(None, "model")],
+    "w2": [P("model", None)],
+}
+
+
+def _fits(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> bool:
+    if len(spec) > len(shape):
+        return False
+    for dim, names in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if names is None:
+            continue
+        names = names if isinstance(names, tuple) else (names,)
+        size = int(np.prod([mesh.shape[n] for n in names]))
+        if dim % size != 0:
+            return False
+    return True
+
+
+def spec_for_leaf(path: Tuple[str, ...], shape: Tuple[int, ...],
+                  mesh: Mesh, cfg: Optional[ModelConfig] = None) -> P:
+    """PartitionSpec for one param leaf (path of dict keys)."""
+    name = path[-1]
+    parent = path[-2] if len(path) > 1 else ""
+    stacked = any(s in ("layers", "enc_layers", "dec_layers") for s in path)
+    is_ssm = cfg is not None and cfg.family == "ssm"
+    keys = []
+    if parent == "moe":
+        keys.append(f"moe/{name}")
+    if is_ssm:
+        keys.append(f"ssm/{name}")
+    keys.append(name)
+    for key in keys:
+        for cand in _PARAM_RULES.get(key, ()):  # preference order
+            spec = P(*((None,) + tuple(cand))) if stacked else cand
+            if _fits(spec, shape, mesh):
+                return spec
+    return P()  # replicate
+
+
+def param_specs(params: Any, mesh: Mesh,
+                cfg: Optional[ModelConfig] = None) -> Any:
+    """Pytree of PartitionSpecs matching ``params`` (works on shape structs)."""
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+    specs = []
+    for keypath, leaf in flat:
+        path = tuple(
+            k.key if hasattr(k, "key") else str(k) for k in keypath
+        )
+        specs.append(spec_for_leaf(path, tuple(leaf.shape), mesh, cfg))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_spec(mesh: Mesh, ndim: int, batch_dim: int = 0,
+               batch_size: Optional[int] = None) -> P:
+    """Shard the batch dim over (pod, data); replicate the rest.  With a
+    known ``batch_size``, fall back to fewer axes (then replication) when
+    the batch does not divide — the batch=1 long-context cells."""
+    axes = batch_axes(mesh)
+    dims: list = [None] * ndim
+    candidates = [axes] + [axes[i:] for i in range(1, len(axes))] + [()]
+    for cand in candidates:
+        size = int(np.prod([mesh.shape[a] for a in cand])) if cand else 1
+        if batch_size is None or batch_size % size == 0:
+            dims[batch_dim] = (cand if len(cand) > 1 else
+                               (cand[0] if cand else None))
+            return P(*dims)
+    return P(*([None] * ndim))
+
+
+def _first_fitting(shape, mesh, candidates):
+    for c in candidates:
+        if _fits(c, shape, mesh):
+            return c
+    return P()
+
+
+def cache_specs(cache: Any, mesh: Mesh, cfg: ModelConfig) -> Any:
+    """Decode cache sharding: batch over (pod,data) when divisible; KV cache
+    sequence over `model` as fallback (sequence-parallel KV for batch=1
+    long-context decode); states sharded on their widest divisible dim."""
+    axes = batch_axes(mesh)
+    baxes = axes if len(axes) > 1 else axes[0]
+
+    def leaf_spec(keypath, leaf) -> P:
+        name = keypath[-1].key if hasattr(keypath[-1], "key") else str(keypath[-1])
+        shape = tuple(leaf.shape)
+        if name == "index":
+            return P()
+        if name in ("k", "v", "shared_k", "shared_v", "cross_k", "cross_v"):
+            # [L/apps, B, S, KV, hd]
+            return _first_fitting(shape, mesh, [
+                P(None, baxes, "model", None, None),   # batch + seq(SP)
+                P(None, baxes, None, "model", None),   # batch + kv heads
+                P(None, baxes, None, None, "model"),   # batch + head dim
+                P(None, None, "model", None, None),    # seq only (B=1)
+                P(None, None, None, None, "model"),
+            ])
+        if name == "wkv":       # [L, B, H, hd, hd]
+            return _first_fitting(shape, mesh, [
+                P(None, baxes, "model", None, None),
+                P(None, baxes, None, "model", None),
+                P(None, None, "model", None, None),
+                P(None, None, None, "model", None),
+            ])
+        if name == "ssm":       # [L, B, H, hd, N]
+            return _first_fitting(shape, mesh, [
+                P(None, baxes, "model", None, None),
+                P(None, None, "model", None, None),
+                P(None, None, None, "model", None),
+            ])
+        if name == "conv":      # [L, B, K-1, C]
+            return _first_fitting(shape, mesh, [
+                P(None, baxes, None, "model"),
+                P(None, None, None, "model"),
+            ])
+        if name in ("xp_att", "xp_ffn"):  # [L, B, d]
+            return _first_fitting(shape, mesh, [
+                P(None, baxes, "model"),
+                P(None, None, "model"),
+            ])
+        return P()
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache)
+
+
+def named_sharding(mesh: Mesh, tree_of_specs: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree_of_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

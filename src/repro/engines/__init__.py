@@ -1,0 +1,45 @@
+"""Five mini-DBMS analogs (paper section 7's evaluation set).
+
+Each engine has a real file import/export path and its own unit tests; the
+PipeGen compile loop (capture → codegen → verify) turns those paths into
+data pipes without the engines knowing about sockets.
+"""
+
+from typing import Dict, Type
+
+from .base import Engine, EngineWriter, assert_blocks_equal, make_paper_block
+from .colstore import ColStore
+from .dataframe import DataFrame
+from .graphstore import GraphStore
+from .mapreduce import MapReduce
+from .rowstore import RowStore
+
+ENGINES: Dict[str, Type[Engine]] = {
+    "rowstore": RowStore,
+    "colstore": ColStore,
+    "graphstore": GraphStore,
+    "mapreduce": MapReduce,
+    "dataframe": DataFrame,
+}
+
+
+def make_engine(name: str, **kw) -> Engine:
+    try:
+        return ENGINES[name](**kw)
+    except KeyError:
+        raise ValueError(f"unknown engine {name!r}; have {sorted(ENGINES)}") from None
+
+
+__all__ = [
+    "Engine",
+    "EngineWriter",
+    "ENGINES",
+    "make_engine",
+    "make_paper_block",
+    "assert_blocks_equal",
+    "RowStore",
+    "ColStore",
+    "GraphStore",
+    "MapReduce",
+    "DataFrame",
+]

@@ -1,0 +1,146 @@
+"""dataframe — the Spark analog: distributed collection of row dicts.
+
+Internal representation: a list of dicts (an RDD of Rows).  CSV without
+header; JSON is document-per-line produced through the external
+:mod:`repro.engines.jsonlib` streaming library (the Jackson stand-in), which
+makes this engine the library-extension example (section 5.2): FormOpt swaps
+``JsonGenerator``/``JsonParser`` for their PipeGen-aware ``A*`` subtypes via
+the ``json_generator_cls``/``json_parser_cls`` hooks — the Python rendering
+of replacing the library instantiation call site.
+
+Also carries the ``map``/``group_by``/PIC-clustering surface used by the
+astronomy example (section 2).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional, Type
+
+import numpy as np
+
+from ..core.types import ColType, ColumnBlock, Field, RowBlock, Schema
+from .base import Engine, EngineWriter
+from .jsonlib import AJsonGenerator, AJsonParser, JsonGenerator, JsonParser
+
+__all__ = ["DataFrame"]
+
+
+class DataFrame(Engine):
+    name = "dataframe"
+    csv_delimiter = ","
+    writes_header = False
+    supports_json = True
+    json_flavor = "per-line"
+
+    # library-extension hooks: codegen swaps these for the A* subtypes
+    json_generator_cls: Type[JsonGenerator] = JsonGenerator
+    json_parser_cls: Type[JsonParser] = JsonParser
+
+    def __init__(self, workers: int = 4, decorated: bool = True):
+        super().__init__(workers=workers, decorated=decorated)
+        self._rdds: Dict[str, List[dict]] = {}
+
+    # -- rdd <-> block ----------------------------------------------------------
+    def put_block(self, table: str, block: ColumnBlock) -> None:
+        super().put_block(table, block)
+        rb = block.to_rows()
+        names = rb.schema.names
+        self._rdds[table] = [dict(zip(names, r)) for r in rb.rows]
+
+    def rdd(self, table: str) -> List[dict]:
+        return self._rdds.get(table, [])
+
+    # -- JSON via the external library (section 5.2) ------------------------------
+    def export_json(self, table: str, filename: str) -> None:
+        block = self.get_block(table)
+        rb = block.to_rows()
+        names = rb.schema.names
+        w = EngineWriter(open(filename, "w"))  # IORedirect call site
+        g = self.json_generator_cls(w)
+        try:
+            for row in rb.rows:
+                g.start_object()
+                for nm, v in zip(names, row):
+                    g.field(nm, v)
+                g.end_object()
+        finally:
+            w.close()
+
+    def import_json(self, table: str, filename: str) -> None:
+        stream = open(filename, "r")  # IORedirect call site
+        p = self.json_parser_cls()
+        try:
+            docs = list(p.parse_lines(stream))
+        finally:
+            stream.close()
+        if not docs:
+            self.put_block(table, ColumnBlock(Schema([]), []))
+            return
+        names = list(docs[0].keys())
+        rows = [tuple(d.get(n) for n in names) for d in docs]
+        from ..core.types import infer_schema
+
+        self._store_imported(table, rows, names, infer_schema(rows[0], names))
+
+    # -- RDD surface for the examples ----------------------------------------------
+    def map_rows(self, table: str, out: str, fn: Callable[[dict], dict]) -> None:
+        rows = [fn(dict(r)) for r in self.rdd(table)]
+        if not rows:
+            return
+        names = list(rows[0].keys())
+        tuples = [tuple(r[n] for n in names) for r in rows]
+        from ..core.types import infer_schema
+
+        self.put_block(out, RowBlock(infer_schema(tuples[0], names), tuples).to_columns())
+
+    def power_iteration_clustering(
+        self, table: str, src: str, dst: str, weight: str,
+        k: int = 2, iters: int = 20, seed: int = 0,
+    ) -> Dict[int, int]:
+        """PIC [Lin & Cohen, ICML'10] over an affinity edge list — the
+        algorithm the astronomer borrows Spark for (sections 1-2)."""
+        block = self.get_block(table)
+        s = np.asarray(block.column(src), dtype=np.int64)
+        d = np.asarray(block.column(dst), dtype=np.int64)
+        w = np.asarray(block.column(weight), dtype=np.float64)
+        ids = np.unique(np.concatenate([s, d]))
+        idx = {v: i for i, v in enumerate(ids.tolist())}
+        n = len(ids)
+        si = np.array([idx[v] for v in s.tolist()])
+        di = np.array([idx[v] for v in d.tolist()])
+        # symmetric affinity, row-normalized power iteration
+        deg = np.zeros(n)
+        np.add.at(deg, si, w)
+        np.add.at(deg, di, w)
+        deg[deg == 0] = 1.0
+        rng = np.random.default_rng(seed)
+        v = rng.random(n)
+        v /= np.abs(v).sum()
+        for _ in range(iters):
+            nv = np.zeros(n)
+            np.add.at(nv, si, w * v[di])
+            np.add.at(nv, di, w * v[si])
+            nv /= deg
+            norm = np.abs(nv).sum()
+            if norm == 0:
+                break
+            v = nv / norm
+        # k-means (1-D) on the embedding
+        cents = np.quantile(v, np.linspace(0, 1, k + 2)[1:-1])
+        for _ in range(10):
+            assign = np.argmin(np.abs(v[:, None] - cents[None, :]), axis=1)
+            for c in range(k):
+                sel = v[assign == c]
+                if len(sel):
+                    cents[c] = sel.mean()
+        assign = np.argmin(np.abs(v[:, None] - cents[None, :]), axis=1)
+        return {int(ids[i]): int(assign[i]) for i in range(n)}
+
+    def unit_json_roundtrip_test(self, export_path: str, import_path: str) -> None:
+        from .base import assert_blocks_equal, make_paper_block
+
+        block = make_paper_block(64, seed=13)
+        self.put_block("jrt", block)
+        self.export_json("jrt", export_path)
+        self.import_json("jrt_in", import_path)
+        assert_blocks_equal(block, self.get_block("jrt_in"))

@@ -1,0 +1,127 @@
+"""Minimal streaming JSON library — the Jackson analog (paper section 5.2).
+
+``JsonGenerator`` is the external library an engine (dataframe/Spark) uses
+to serialize JSON: it builds *character* output through a writer.
+``AJsonGenerator`` is the PipeGen-aware subtype FormOpt substitutes in
+library-extension mode: same API, but it emits AStrings whose parts keep
+keys and primitive values un-stringified, so the data pipe receives typed
+values and the JsonAssembler can strip structural text and redundant keys
+(sections 5.2/5.3.2).
+
+``JsonParser`` is the import-side counterpart; its PipeGen-aware subtype
+``AJsonParser`` consumes AString lines from a pipe and yields dicts without
+character parsing when typed parts are available.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, Iterator, List, Optional
+
+from ..core.astring import AString
+
+__all__ = ["JsonGenerator", "AJsonGenerator", "JsonParser", "AJsonParser"]
+
+
+class JsonGenerator:
+    """Document-per-line streaming generator (Spark-flavored)."""
+
+    def __init__(self, writer: Any):
+        self.writer = writer
+        self._first_field = True
+
+    # -- structural -------------------------------------------------------------
+    def start_object(self) -> None:
+        self.writer.write("{")
+        self._first_field = True
+
+    def end_object(self) -> None:
+        self.writer.write("}\n")
+
+    # -- fields -----------------------------------------------------------------
+    def field(self, name: str, value: Any) -> None:
+        if not self._first_field:
+            self.writer.write(", ")
+        self._first_field = False
+        self.writer.write('"' + name + '": ')
+        self.write_value(value)
+
+    def write_value(self, value: Any) -> None:
+        if isinstance(value, bool):
+            self.writer.write("true" if value else "false")
+        elif isinstance(value, (int, float)):
+            self.writer.write(repr(value) if isinstance(value, float) else str(value))
+        elif value is None:
+            self.writer.write("null")
+        else:
+            self.writer.write(json.dumps(str(value)))
+
+    def flush(self) -> None:
+        if hasattr(self.writer, "flush"):
+            self.writer.flush()
+
+
+class AJsonGenerator(JsonGenerator):
+    """PipeGen-aware subtype: identical call surface, AString output."""
+
+    def start_object(self) -> None:
+        self.writer.write(AString.literal("{"))
+        self._first_field = True
+
+    def end_object(self) -> None:
+        self.writer.write(AString.literal("}\n"))
+
+    def field(self, name: str, value: Any) -> None:
+        if not self._first_field:
+            self.writer.write(AString.literal(", "))
+        self._first_field = False
+        self.writer.write(AString.literal('"') + AString.of(name) + AString.literal('": '))
+        self.write_value(value)
+
+    def write_value(self, value: Any) -> None:
+        if isinstance(value, (bool, int, float)):
+            self.writer.write(AString.of(value))  # typed part: FormOpt's win
+        elif value is None:
+            self.writer.write(AString.literal("null"))
+        else:
+            self.writer.write(
+                AString.literal('"') + AString.of(str(value)) + AString.literal('"')
+            )
+
+
+class JsonParser:
+    """Import side: parse document-per-line JSON text into dicts."""
+
+    def parse_lines(self, stream: Any) -> Iterator[Dict[str, Any]]:
+        for line in stream:
+            line = str(line).strip()
+            if line:
+                yield json.loads(line)
+
+
+class AJsonParser(JsonParser):
+    """PipeGen-aware subtype: prefers the pipe's typed AString lines."""
+
+    def parse_lines(self, stream: Any) -> Iterator[Dict[str, Any]]:
+        astr_iter = getattr(stream, "astring_lines", None)
+        if astr_iter is None:
+            yield from super().parse_lines(stream)
+            return
+        for astr in astr_iter():
+            d: Dict[str, Any] = {}
+            # typed fast path: reconstruct the dict from parts if each cell is
+            # a sole typed value; otherwise fall back to character parsing
+            if _parts_are_typed_row(astr):
+                names = getattr(stream, "schema", None)
+                cells = astr.split(str(stream.meta.get("delimiter") or ","))
+                for f, c in zip(names, cells):
+                    d[f.name] = c.sole_value
+                yield d
+            else:
+                s = str(astr).strip()
+                if s:
+                    yield json.loads(s)
+
+
+def _parts_are_typed_row(astr: AString) -> bool:
+    return any(not isinstance(p, str) for p in astr.parts)

@@ -1,0 +1,54 @@
+"""rowstore — the Derby analog: single-node relational engine.
+
+Internal representation: row tuples + schema.  CSV with a header row is the
+only bulk format (Derby supports no binary or JSON bulk path, section 5).
+Like Derby it rejects custom URI schemes, so its reserved filename uses the
+``/tmp/__reserved__<name>`` template and it checks file existence before
+importing — PipeGen's stub files satisfy that check (section 6.1).
+"""
+
+from __future__ import annotations
+
+from pathlib import Path
+from typing import List, Optional
+
+from ..core.datapipe import RESERVED_TEMPLATE, is_reserved
+from ..core.types import ColumnBlock, RowBlock, Schema
+from .base import Engine
+
+__all__ = ["RowStore"]
+
+
+class RowStore(Engine):
+    name = "rowstore"
+    csv_delimiter = ","
+    writes_header = True
+    supports_json = False
+
+    def __init__(self, workers: int = 1, decorated: bool = True):
+        super().__init__(workers=1, decorated=decorated)  # single-node engine
+
+    @staticmethod
+    def reserved_name(dataset: str, query_id: str = "0") -> str:
+        """Derby-style reserved filename (template form, section 6.1)."""
+        return f"{RESERVED_TEMPLATE}{dataset}?query={query_id}"
+
+    def import_csv(self, table: str, filename: str,
+                   schema: Optional[Schema] = None) -> None:
+        # Derby checks that the import file exists before starting; PipeGen
+        # creates a stub so reserved names pass (section 6.1).
+        if not is_reserved(filename) and not Path(filename).exists():
+            raise FileNotFoundError(filename)
+        super().import_csv(table, filename, schema)
+
+    # -- a sliver of relational surface for the examples -------------------------
+    def select(self, table: str, columns: List[str]) -> ColumnBlock:
+        block = self.get_block(table)
+        idx = [block.schema.index_of(c) for c in columns]
+        return ColumnBlock(
+            Schema([block.schema[i] for i in idx]),
+            [block.columns[i] for i in idx],
+        )
+
+    def row_count(self, table: str) -> int:
+        return len(self.get_block(table))

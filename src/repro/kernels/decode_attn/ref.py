@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for single-token decode attention over a long KV cache."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["decode_attention_ref"]
+
+
+def decode_attention_ref(q: jnp.ndarray, k_cache: jnp.ndarray,
+                         v_cache: jnp.ndarray, length: int) -> jnp.ndarray:
+    """q: [B,H,hd] (one token); k_cache/v_cache: [B,S,KV,hd];
+    ``length``: valid prefix of the cache.  Returns [B,H,hd]."""
+    B, H, hd = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    g = H // KV
+    qf = q.astype(jnp.float32).reshape(B, KV, g, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", qf, k_cache.astype(jnp.float32))
+    s = s / math.sqrt(hd)
+    valid = jnp.arange(S) < length
+    s = jnp.where(valid[None, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", w, v_cache.astype(jnp.float32))
+    return o.reshape(B, H, hd).astype(q.dtype)

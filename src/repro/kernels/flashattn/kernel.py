@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: blockwise causal attention (FlashAttention-style).
+
+TPU adaptation notes (vs the CUDA original): no shared-memory banking or
+warp shuffles — the analogue is VMEM-resident [BLK_Q, hd] / [BLK_K, hd]
+tiles feeding the 128x128 MXU, with the online-softmax running max/sum kept
+in VMEM scratch (f32).  Block sizes are MXU-aligned (multiples of 128 on
+the contracting dims); the K/V loop is the pallas grid's innermost axis so
+the revisit pattern is sequential in HBM.
+
+Grid: (batch*heads, q_blocks, k_blocks); the accumulator lives in VMEM
+scratch (revisited across the k axis for fixed q) and is normalized into
+the output on the last K block.  Causal masking zeroes fully-masked K
+blocks via ``pl.when``.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention", "BLK_Q", "BLK_K"]
+
+BLK_Q = 128
+BLK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                  *, scale: float, causal: bool, blk_q: int, blk_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    if causal:
+        run = (ki * blk_k) <= (qi * blk_q + blk_q - 1)
+    else:
+        run = True
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)             # [BLK_Q, hd]
+        k = k_ref[0].astype(jnp.float32)             # [BLK_K, hd]
+        v = v_ref[0].astype(jnp.float32)             # [BLK_K, hd]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # [BLK_Q, BLK_K]
+        if causal:
+            rows = qi * blk_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            cols = ki * blk_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(cols <= rows, s, NEG_INF)
+        m_prev = m_ref[...]                           # [BLK_Q, 1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                        # [BLK_Q, BLK_K]
+        alpha = jnp.exp(m_prev - m_new)               # [BLK_Q, 1]
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _finish():
+        o_ref[0, ...] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                         ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "blk_q", "blk_k", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, blk_q: int = BLK_Q,
+                    blk_k: int = BLK_K, interpret: bool = False) -> jnp.ndarray:
+    """q: [B,Sq,H,hd]; k,v: [B,Sk,KV,hd] (GQA: KV divides H).
+    Sq % blk_q == 0 and Sk % blk_k == 0 (callers pad)."""
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    g = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), g, axis=1).reshape(B * H, Sk, hd)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), g, axis=1).reshape(B * H, Sk, hd)
+
+    blk_q = min(blk_q, Sq)
+    blk_k = min(blk_k, Sk)
+    grid = (B * H, Sq // blk_q, Sk // blk_k)
+    kernel = functools.partial(_flash_kernel, scale=scale, causal=causal,
+                               blk_q=blk_q, blk_k=blk_k)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, blk_q, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, blk_k, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, blk_k, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q, 1), jnp.float32),   # running max
+            pltpu.VMEM((blk_q, 1), jnp.float32),   # running sum
+            pltpu.VMEM((blk_q, hd), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for blockwise (flash) causal GQA attention."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref"]
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool = True) -> jnp.ndarray:
+    """q: [B,Sq,H,hd]; k,v: [B,Sk,KV,hd]; GQA via head grouping.
+    Returns [B,Sq,H,hd] (f32 accumulation, cast back to q.dtype)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    g = H // KV
+    qf = q.astype(jnp.float32).reshape(B, Sq, KV, g, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qf, k.astype(jnp.float32))
+    s = s / math.sqrt(hd)
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, k.shape[1]), bool), k.shape[1] - Sq)
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", w, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, hd).astype(q.dtype)

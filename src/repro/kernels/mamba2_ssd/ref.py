@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the Mamba-2 selective state-space scan."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ssd_ref"]
+
+
+def ssd_ref(x, dt, A, B, C, D, state):
+    """x: [B,S,H,hd]; dt: [B,S,H] (post-softplus); A: [H] (negative);
+    B,C: [B,S,N]; D: [H]; state: [B,H,hd,N].
+    Identical math to ``repro.models.mamba2._ssd_scan``."""
+    def step(s, inp):
+        xt, dtt, Bt, Ct = inp
+        da = jnp.exp(dtt * A)
+        dBx = jnp.einsum("bh,bhp,bn->bhpn", dtt, xt, Bt)
+        s = da[..., None, None] * s + dBx
+        yt = jnp.einsum("bhpn,bn->bhp", s, Ct) + D[None, :, None] * xt
+        return s, yt
+
+    xs = jnp.moveaxis(x, 1, 0)
+    dts = jnp.moveaxis(dt, 1, 0)
+    Bs = jnp.moveaxis(B, 1, 0)
+    Cs = jnp.moveaxis(C, 1, 0)
+    state, ys = jax.lax.scan(step, state, (xs, dts, Bs, Cs))
+    return jnp.moveaxis(ys, 0, 1), state

@@ -1,0 +1,52 @@
+"""Pallas TPU kernel: row-major wire block -> column-major device tensors.
+
+This is FormOpt's section 5.4 pivot executed on device: a pipe lands a
+row-major [N, W] block of fixed-width words in HBM; the consumer (input
+pipeline -> trainer) wants column-major tensors.  On TPU the transform is
+HBM -> VMEM tiled copies with a transpose in VREGs.
+
+Tiling: grid over (row tiles, column-group tiles).  Each program instance
+reads a [TILE_N, TILE_W] row-major tile into VMEM and writes the transposed
+[TILE_W, TILE_N] tile of the column-major output.  TILE_N x TILE_W x 4B
+must fit VMEM with double buffering: 256 x 256 x 4 x 2buf = 512 KiB.
+Both tile dims are multiples of the 8x128 VREG lane layout, so the
+transpose lowers to full-lane shuffles rather than gathers.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["pivot_tiled", "TILE_N", "TILE_W"]
+
+TILE_N = 256
+TILE_W = 256
+
+
+def _pivot_kernel(rows_ref, out_ref):
+    """rows_ref: [TILE_N, TILE_W] VMEM tile; out_ref: [TILE_W, TILE_N]."""
+    out_ref[...] = rows_ref[...].T
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pivot_tiled(rows: jnp.ndarray, interpret: bool = False) -> jnp.ndarray:
+    """Transpose [N, W] -> [W, N] via VMEM tiles (N, W padded to tiles)."""
+    N, W = rows.shape
+    pad_n = (-N) % TILE_N
+    pad_w = (-W) % TILE_W
+    padded = jnp.pad(rows, ((0, pad_n), (0, pad_w)))
+    Np, Wp = padded.shape
+    grid = (Np // TILE_N, Wp // TILE_W)
+    out = pl.pallas_call(
+        _pivot_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((TILE_N, TILE_W), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((TILE_W, TILE_N), lambda i, j: (j, i)),
+        out_shape=jax.ShapeDtypeStruct((Wp, Np), rows.dtype),
+        interpret=interpret,
+    )(padded)
+    return out[:W, :N]

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the row->column pivot (paper section 5.4 on device).
+
+The wire delivers a row-major block of fixed-width records
+``rows [N, W]`` (W = packed row width in 4-byte words); the device wants
+column-major tensors.  The pivot is a strided transpose; the oracle is just
+``jnp.transpose`` plus the per-column slice, but specified explicitly so
+the Pallas kernel has a bit-exact reference.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax.numpy as jnp
+
+__all__ = ["pivot_ref"]
+
+
+def pivot_ref(rows: jnp.ndarray, widths: Sequence[int]) -> List[jnp.ndarray]:
+    """rows: [N, W] int32 words; widths: words per column (sum == W).
+    Returns per-column arrays [N, w_i] (column-major layout)."""
+    out = []
+    off = 0
+    for w in widths:
+        out.append(rows[:, off: off + w])
+        off += w
+    return [jnp.asarray(c) for c in out]
+
+
+def unpivot_ref(cols: Sequence[jnp.ndarray]) -> jnp.ndarray:
+    """Inverse: concatenate column blocks back to row-major [N, W]."""
+    return jnp.concatenate(list(cols), axis=1)

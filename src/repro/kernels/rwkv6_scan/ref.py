@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the RWKV-6 WKV recurrence (time-step scan)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["wkv_ref"]
+
+
+def wkv_ref(r, k, v, w, u, state):
+    """r,k,v,w: [B,S,H,hd] (f32; w is the per-step decay in (0,1));
+    u: [H,hd] bonus; state: [B,H,hd,hd] key-major.
+    Returns (y [B,S,H,hd], final state) — identical math to
+    ``repro.models.rwkv6._wkv_scan``."""
+    def step(s, inp):
+        rt, kt, vt, wt = inp
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        yt = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., None] * s + kv
+        return s, yt
+
+    rs, ks, vs, ws = (jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state, (rs, ks, vs, ws))
+    return jnp.moveaxis(ys, 0, 1), state

@@ -1,0 +1,402 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+cell on the production meshes, print memory/cost analysis, and dump the
+roofline raw terms to JSON artifacts.
+
+MUST be run as its own process (the XLA_FLAGS line above executes before
+any other import so the 512 placeholder host devices exist before jax
+initializes).  Usage:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-360m --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out artifacts/]
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.common import cache_specs_struct, input_specs, skip_reason
+from repro.distrib.sharding import (
+    batch_spec, cache_specs, named_sharding, param_specs,
+)
+from repro.launch.hlo_stats import HW, parse_collectives, roofline_terms
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model, get_config, get_shape
+from repro.models.config import ARCHS, SHAPES
+from repro.train.optimizer import adamw_init
+from repro.train.step import TrainState, make_train_step
+
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def _batch_shardings(mesh, batch_tree):
+    def leaf(x):
+        nd = len(x.shape)
+        if nd >= 2 and x.shape[0] == 3:  # [3,B,S] M-RoPE ids
+            inner = batch_spec(mesh, nd - 1, batch_dim=0,
+                               batch_size=x.shape[1])
+            spec = P(None, *tuple(inner))
+        else:
+            spec = batch_spec(mesh, nd, batch_size=x.shape[0])
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map(leaf, batch_tree)
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, zero1: bool = False,
+               fsdp: bool = False, microbatches: int = 1, cfg_override=None):
+    """Lower one cell; returns (lowered, aux) without compiling."""
+    cfg = cfg_override or get_config(arch)
+    shape = get_shape(shape_name)
+    model = build_model(cfg)
+    batch = input_specs(cfg, shape)
+    bshard = _batch_shardings(mesh, batch)
+
+    if shape.kind == "train":
+        step = make_train_step(model, mesh, zero1=zero1, fsdp=fsdp,
+                               microbatches=microbatches)
+        state_shape = jax.eval_shape(
+            lambda rng: TrainState(p := model.init(rng), adamw_init(p)),
+            jax.random.PRNGKey(0),
+        )
+        jitted = jax.jit(
+            step.step_fn,
+            in_shardings=(step.state_shardings, bshard),
+            out_shardings=(step.state_shardings, None),
+            donate_argnums=(0,),
+        )
+        lowered = jitted.lower(state_shape, batch)
+        return lowered, {"kind": "train"}
+
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pshard = named_sharding(mesh, param_specs(params_shape, mesh, cfg))
+
+    if shape.kind == "prefill":
+        jitted = jax.jit(
+            lambda p, b: model.forward(p, b, mesh),
+            in_shardings=(pshard, bshard),
+        )
+        lowered = jitted.lower(params_shape, batch)
+        return lowered, {"kind": "prefill"}
+
+    # decode
+    cache_shape = cache_specs_struct(cfg, shape)
+    cshard = named_sharding(mesh, cache_specs(cache_shape, mesh, cfg))
+    jitted = jax.jit(
+        lambda p, c, b: model.decode_step(p, c, b, mesh),
+        in_shardings=(pshard, cshard, bshard),
+        out_shardings=(None, cshard),
+        donate_argnums=(1,),
+    )
+    lowered = jitted.lower(params_shape, cache_shape, batch)
+    return lowered, {"kind": "decode"}
+
+
+def _cell_metrics(arch, shape_name, mesh, cfg, *, zero1, microbatches,
+                  fsdp=False):
+    """Compile one (possibly layer-reduced) variant; return raw metrics."""
+    lowered, aux = lower_cell(arch, shape_name, mesh, zero1=zero1, fsdp=fsdp,
+                              microbatches=microbatches, cfg_override=cfg)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = lowered.as_text()
+    coll = parse_collectives(hlo)
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_hbm": float(cost.get("bytes accessed", 0.0)),
+        "collective_bytes": float(coll.total_bytes),
+    }, compiled, aux, coll
+
+
+_PROBE_KEYS = ("flops", "bytes_hbm", "collective_bytes")
+
+
+def probe_trip_corrected(arch: str, shape_name: str, mesh, *,
+                         zero1: bool = False, fsdp: bool = False,
+                         microbatches: int = 1):
+    """XLA's cost_analysis counts loop bodies once regardless of trip count.
+
+    Probe compiles run with the *layer scan unrolled* at small L so every
+    layer is counted, then a linear model in L extrapolates to the full
+    depth.  SSM/hybrid families additionally carry an inner *time* scan
+    (counted once per layer instance); for their train/prefill cells we also
+    probe at two sequence lengths and solve the analytic model
+
+        m(L, S) = e*S  +  apps(L)*(q*S^2 + c*S)  +  L*(p*S + tb)
+
+    (q=c=0 for attention-free rwkv6), then evaluate at the full (L, S).
+    """
+    from dataclasses import replace as _rep
+
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+
+    def compile_probe(L, S=None):
+        c = _rep(cfg, n_layers=L, scan_unroll=True,
+                 **({"encoder_layers": L} if cfg.is_encdec else {}))
+        sspec = shape if S is None else _rep(shape, seq_len=S)
+        # lower with a possibly-reduced sequence
+        lowered, _ = _lower_with(arch, sspec, mesh, c, zero1, microbatches,
+                                 fsdp=fsdp)
+        compiled = lowered.compile()
+        cost = compiled.cost_analysis()
+        try:
+            hlo = compiled.as_text()
+        except Exception:
+            hlo = lowered.as_text()
+        return {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_hbm": float(cost.get("bytes accessed", 0.0)),
+            "collective_bytes": float(parse_collectives(hlo).total_bytes),
+        }
+
+    def apps(L):
+        k = cfg.shared_attn_every
+        return (L + k - 1) // k if k else 0
+
+    needs_time_probe = (cfg.family in ("ssm", "hybrid")
+                        and shape.kind in ("train", "prefill"))
+    out = {}
+    points = {}
+    if not needs_time_probe:
+        m2, m4 = compile_probe(2), compile_probe(4)
+        points = {"L2": m2, "L4": m4}
+        if cfg.family == "hybrid":
+            # decode: attention term is linear in L via apps(); use L=8 too
+            m8 = compile_probe(8)
+            points["L8"] = m8
+            for k in _PROBE_KEYS:
+                mamba = (m4[k] - m2[k]) / 2.0
+                attn = (m8[k] - m4[k]) - 4.0 * mamba
+                base = m2[k] - 2.0 * mamba - apps(2) * attn
+                out[k] = max(base + cfg.n_layers * mamba
+                             + apps(cfg.n_layers) * attn, 0.0)
+        else:
+            for k in _PROBE_KEYS:
+                unit = (m4[k] - m2[k]) / 2.0
+                out[k] = max(m2[k] + (cfg.n_layers - 2) * unit, 0.0)
+    else:
+        S0 = 512
+        S1 = 1024
+        Sf = shape.seq_len
+        Lf = cfg.n_layers
+        if cfg.family == "ssm":
+            mA, mB, mC, mD = (compile_probe(2, S0), compile_probe(4, S0),
+                              compile_probe(4, S1), compile_probe(2, S1))
+            points = {"L2S512": mA, "L4S512": mB, "L4S1024": mC,
+                      "L2S1024": mD}
+            for k in _PROBE_KEYS:
+                # m(L, S) = base + e*S + L*(p*S + tb)
+                u0 = (mB[k] - mA[k]) / 2.0          # p*S0 + tb
+                u1 = (mC[k] - mD[k]) / 2.0          # p*S1 + tb
+                p = (u1 - u0) / (S1 - S0)
+                tb = u0 - p * S0
+                e = (mD[k] - mA[k]) / (S1 - S0) - 2.0 * p
+                base0 = mA[k] - e * S0 - 2.0 * (p * S0 + tb)
+                out[k] = max(base0 + e * Sf + Lf * (p * Sf + tb), 0.0)
+        else:  # hybrid: + apps(L)*(q*S^2 + c*S)
+            pts = {(L, S): compile_probe(L, S)
+                   for L in (2, 4, 8) for S in (S0, S1)}
+            points = {f"L{L}S{S}": v for (L, S), v in pts.items()}
+            for k in _PROBE_KEYS:
+                def attn_term(S):
+                    return (pts[(8, S)][k] - pts[(4, S)][k]
+                            - 2.0 * (pts[(4, S)][k] - pts[(2, S)][k]))
+                u0 = (pts[(4, S0)][k] - pts[(2, S0)][k]) / 2.0  # p*S0+tb
+                u1 = (pts[(4, S1)][k] - pts[(2, S1)][k]) / 2.0
+                p = (u1 - u0) / (S1 - S0)
+                tb = u0 - p * S0
+                a0, a1 = attn_term(S0), attn_term(S1)           # q*S^2+c*S
+                q = (a1 / S1 - a0 / S0) / (S1 - S0)
+                ccoef = a0 / S0 - q * S0
+                e_base0 = pts[(2, S0)][k] - apps(2) * a0 - 2.0 * (p * S0 + tb)
+                e_base1 = pts[(2, S1)][k] - apps(2) * a1 - 2.0 * (p * S1 + tb)
+                e = (e_base1 - e_base0) / (S1 - S0)
+                base = e_base0 - e * S0
+                out[k] = max(
+                    base + e * Sf
+                    + apps(Lf) * (q * Sf * Sf + ccoef * Sf)
+                    + Lf * (p * Sf + tb), 0.0)
+    out["probe_points"] = points
+    return out
+
+
+def _lower_with(arch, shape_spec, mesh, cfg, zero1, microbatches, fsdp=False):
+    """lower_cell against an explicit ShapeSpec (possibly reduced seq)."""
+    from repro.models.config import SHAPES
+    key = "__probe__"
+    SHAPES[key] = shape_spec
+    try:
+        return lower_cell(arch, key, mesh, zero1=zero1, fsdp=fsdp,
+                          microbatches=microbatches, cfg_override=cfg)
+    finally:
+        SHAPES.pop(key, None)
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             out_dir: str = "artifacts/dryrun", zero1: bool = False,
+             fsdp: bool = False, microbatches: int = 1, verbose: bool = True):
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    reason = skip_reason(cfg, shape)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "zero1": zero1, "fsdp": fsdp, "microbatches": microbatches,
+    }
+    if reason:
+        rec.update(status="SKIP", reason=reason)
+        _write(out_dir, rec)
+        if verbose:
+            print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: SKIP ({reason})")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    t0 = time.time()
+    try:
+        with mesh:
+            lowered, aux = lower_cell(arch, shape_name, mesh, zero1=zero1,
+                                      fsdp=fsdp, microbatches=microbatches)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            try:
+                hlo = compiled.as_text()
+            except Exception:
+                hlo = lowered.as_text()
+            coll = parse_collectives(hlo)
+            # XLA cost analysis counts loop bodies once; reconstruct the
+            # whole-step numbers from layer-reduced probe compiles
+            probe = probe_trip_corrected(arch, shape_name, mesh,
+                                         zero1=zero1, fsdp=fsdp,
+                                         microbatches=microbatches)
+            t_probe = time.time() - t0 - t_lower - t_compile
+
+        # All numbers describe the per-device SPMD module, so the roofline
+        # terms are per-device numerators over per-chip peaks (n_chips=1);
+        # cluster totals are per-device x n_chips.
+        flops = probe["flops"]
+        bytes_hbm = probe["bytes_hbm"]
+        coll_bytes = probe["collective_bytes"]
+        terms = roofline_terms(flops, bytes_hbm, coll_bytes, 1)
+        mf = _model_flops(cfg, shape)
+        rec.update(
+            status="OK", kind=aux["kind"],
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            probe_s=round(t_probe, 1),
+            flops=flops, bytes_hbm=bytes_hbm,
+            collective_bytes=coll_bytes,
+            raw_full_compile={
+                "flops": float(cost.get("flops", 0.0)),
+                "bytes_hbm": float(cost.get("bytes accessed", 0.0)),
+                "collective_bytes": coll.total_bytes,
+                "collective_counts": coll.count_by_kind,
+                "collective_bytes_by_kind": coll.bytes_by_kind,
+            },
+            probe_points=probe["probe_points"],
+            roofline=terms,
+            memory={
+                "argument_size": getattr(mem, "argument_size_in_bytes", None),
+                "output_size": getattr(mem, "output_size_in_bytes", None),
+                "temp_size": getattr(mem, "temp_size_in_bytes", None),
+                "generated_code_size": getattr(mem, "generated_code_size_in_bytes", None),
+            },
+            n_chips=n_chips,
+            cluster_flops=flops * n_chips,
+            model_flops_6nd=mf,
+            useful_ratio=(mf / (flops * n_chips) if flops else None),
+        )
+        if verbose:
+            dom = max(terms, key=terms.get)
+            print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: OK "
+                  f"kind={aux['kind']} compile={t_compile:.0f}s "
+                  f"flops/dev={flops:.3e} hbmB={bytes_hbm:.3e} "
+                  f"collB={coll_bytes:.3e} dominant={dom} "
+                  f"useful={rec['useful_ratio']:.2f}")
+    except Exception as e:  # noqa: BLE001 - recorded as FAIL
+        rec.update(status="FAIL", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+        if verbose:
+            print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: FAIL {e}")
+    _write(out_dir, rec)
+    return rec
+
+
+def _model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE); decode D=B tokens."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        toks = shape.global_batch * shape.seq_len
+        return 6.0 * n * toks
+    if shape.kind == "prefill":
+        toks = shape.global_batch * shape.seq_len
+        return 2.0 * n * toks  # forward only
+    return 2.0 * n * shape.global_batch  # one token per sequence
+
+
+def _write(out_dir: str, rec: dict) -> None:
+    d = Path(out_dir)
+    d.mkdir(parents=True, exist_ok=True)
+    name = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}"
+    if rec.get("zero1"):
+        name += "__zero1"
+    if rec.get("fsdp"):
+        name += "__fsdp"
+    if rec.get("microbatches", 1) > 1:
+        name += f"__mb{rec['microbatches']}"
+    (d / f"{name}.json").write_text(json.dumps(rec, indent=1))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args(argv)
+
+    cells = []
+    if args.all:
+        for a in ARCHS:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells.append((args.arch, args.shape))
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            rec = run_cell(arch, shape, multi_pod=mp, out_dir=args.out,
+                           zero1=args.zero1, fsdp=args.fsdp,
+                           microbatches=args.microbatches)
+            failures += rec["status"] == "FAIL"
+    print(f"[dryrun] done; {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,125 @@
+"""Roofline-term extraction from lowered/compiled artifacts.
+
+``collective_bytes`` is NOT in cost_analysis: we parse the (optimized when
+available) HLO text and sum operand bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute op.
+
+Hardware model (TPU v5e-class, per chip):
+    peak bf16   197e12 FLOP/s
+    HBM bw      819e9  B/s
+    ICI link    50e9   B/s
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+__all__ = ["HW", "CollectiveStats", "parse_collectives", "roofline_terms"]
+
+
+@dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12
+    hbm_bw: float = 819e9
+    link_bw: float = 50e9
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVE_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """bytes of one 'dtype[dims]' shape string."""
+    m = _SHAPE_RE.match(shape_str.strip())
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def _result_bytes(line: str) -> int:
+    """Sum the bytes of the result shape(s) on an HLO op line."""
+    eq = line.find("=")
+    if eq < 0:
+        return 0
+    lhs_end = eq
+    # result shape appears between '=' and the op name:  %x = f32[...]{...} op-name(
+    rhs = line[eq + 1:]
+    total = 0
+    for m in _SHAPE_RE.finditer(rhs):
+        # stop at the op name: shapes before the first alpha token that is
+        # the op; simpler: take shapes up to the collective kind keyword
+        break
+    # robust approach: shapes in the segment before the op keyword
+    for kind in _COLLECTIVE_KINDS:
+        k = rhs.find(kind)
+        if k >= 0:
+            seg = rhs[:k]
+            for m in _SHAPE_RE.finditer(seg):
+                total += _shape_bytes(m.group(0))
+            return total
+    return 0
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int] = field(default_factory=dict)
+    count_by_kind: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum result-shape bytes of every collective op in an HLO dump.
+
+    Uses the *result* shape (for all-gather that is the gathered size, for
+    reduce-scatter the scattered size) as the per-device traffic proxy.
+    `-start` variants are counted; their `-done` halves are skipped so
+    nothing is double-counted.
+    """
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if "-done" in ls:
+            continue
+        for kind in _COLLECTIVE_KINDS:
+            tok = f" {kind}" if not ls.startswith(kind) else kind
+            if f"{kind}(" in ls or f"{kind}-start(" in ls:
+                b = _result_bytes(ls)
+                stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0) + b
+                stats.count_by_kind[kind] = stats.count_by_kind.get(kind, 0) + 1
+                break
+    return stats
+
+
+def roofline_terms(flops: float, bytes_hbm: float, coll_bytes: float,
+                   n_chips: int, hw: HW = HW()) -> Dict[str, float]:
+    """The three §Roofline terms, in seconds (whole-step, cluster-wide
+    numerator over cluster-wide denominator)."""
+    return {
+        "compute_s": flops / (n_chips * hw.peak_flops),
+        "memory_s": bytes_hbm / (n_chips * hw.hbm_bw),
+        "collective_s": coll_bytes / (n_chips * hw.link_bw),
+    }

@@ -1,0 +1,101 @@
+"""Production training launcher.
+
+On a real pod this runs under one process per host with
+``jax.distributed.initialize`` (args --coordinator/--num-processes); on CPU
+it degrades to the local mesh.  The step itself is the same
+``make_train_step`` the dry-run lowers for the 512-chip mesh.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
+        --steps 100 --batch 8 --seq 64 [--reduced] [--zero1] [--microbatches 2]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..models import build_model, get_config
+from ..pipeline import PipeFeeder, SyntheticSource
+from ..train import CheckpointManager, TrainState, adamw_init, make_train_step
+from .mesh import make_local_mesh, make_production_mesh
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--reduced", action="store_true",
+                    help="tiny same-family config (CPU)")
+    ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="16x16 mesh (requires 256 devices)")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    mesh = (make_production_mesh() if args.production_mesh
+            else make_local_mesh())
+
+    params = model.init(jax.random.PRNGKey(0))
+    state = TrainState(params, adamw_init(params))
+    start = 0
+    mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    if mgr and args.resume:
+        try:
+            restored, start = mgr.restore(jax.eval_shape(lambda: state))
+            state = jax.tree_util.tree_map(jnp.asarray, restored)
+            print(f"[launch.train] resumed at step {start}")
+        except FileNotFoundError:
+            pass
+
+    step_mod = make_train_step(model, mesh, zero1=args.zero1,
+                               microbatches=args.microbatches,
+                               lr_total=max(args.steps, 100))
+    jitted = jax.jit(step_mod.step_fn)
+
+    import threading
+
+    pipe_name = "db://launch-train?query=t0"
+    n_rows = (args.steps - start + 1) * args.batch
+    feeder = PipeFeeder([pipe_name], batch_size=args.batch,
+                        seq_len=args.seq).start()
+    threading.Thread(
+        target=SyntheticSource(cfg.vocab, args.seq, seed=1).serve,
+        args=(pipe_name, n_rows), daemon=True).start()
+
+    step = start
+    t0 = time.time()
+    with mesh:
+        for batch in feeder.batches():
+            if step >= args.steps:
+                break
+            jb = {k: jnp.asarray(v) for k, v in batch.data.items()}
+            state, metrics = jitted(state, jb)
+            step += 1
+            if step % 10 == 0:
+                print(f"[launch.train] step {step} "
+                      f"loss={float(metrics['loss']):.4f}")
+            if mgr and step % args.ckpt_every == 0:
+                mgr.save(step, state, blocking=False)
+    if mgr:
+        mgr.wait()
+        mgr.save(step, state)
+    dt = time.time() - t0
+    print(f"[launch.train] {step - start} steps in {dt:.1f}s "
+          f"({(step - start) / max(dt, 1e-9):.2f} steps/s)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,46 @@
+"""Model zoo facade: ``build_model(cfg)`` -> family-dispatched functions."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+from . import encdec, lm
+from .config import ARCHS, SHAPES, ModelConfig, ShapeSpec, get_config, get_shape
+
+__all__ = [
+    "ARCHS", "SHAPES", "ModelConfig", "ShapeSpec", "get_config", "get_shape",
+    "Model", "build_model",
+]
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    forward: Callable
+    loss_fn: Callable
+    init_cache: Callable
+    decode_step: Callable
+    precompute_cross: Optional[Callable] = None
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.is_encdec:
+        return Model(
+            cfg=cfg,
+            init=lambda rng: encdec.init(rng, cfg),
+            forward=lambda p, batch, mesh=None: encdec.forward(p, cfg, batch, mesh),
+            loss_fn=lambda p, batch, mesh=None: encdec.loss_fn(p, cfg, batch, mesh),
+            init_cache=lambda batch, seq, **kw: encdec.init_cache(cfg, batch, seq, **kw),
+            decode_step=lambda p, cache, batch, mesh=None: encdec.decode_step(p, cfg, cache, batch, mesh),
+            precompute_cross=lambda p, enc, cache: encdec.precompute_cross(p, cfg, enc, cache),
+        )
+    return Model(
+        cfg=cfg,
+        init=lambda rng: lm.init(rng, cfg),
+        forward=lambda p, batch, mesh=None: lm.forward(p, cfg, batch, mesh),
+        loss_fn=lambda p, batch, mesh=None: lm.loss_fn(p, cfg, batch, mesh),
+        init_cache=lambda batch, seq: lm.init_cache(cfg, batch, seq),
+        decode_step=lambda p, cache, batch, mesh=None: lm.decode_step(p, cfg, cache, batch, mesh),
+    )

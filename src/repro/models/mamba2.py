@@ -1,0 +1,132 @@
+"""Mamba-2 (SSD) block — the zamba2 backbone layer.
+
+Pure-JAX reference: selective state-space recurrence as ``lax.scan`` over
+time (the Pallas chunked kernel in ``repro.kernels.mamba2_ssd`` implements
+the chunk-parallel SSD form for TPU).
+
+State per layer (decode): (conv_state [B, K-1, d_conv_in], ssm_state
+[B, nheads, hd, N]).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import _dense_init, dtype_of, rmsnorm, rmsnorm_init
+
+Params = Dict[str, Any]
+
+CONV_K = 4   # depthwise causal conv window
+NGROUPS = 1  # B/C groups
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    d_in = cfg.expand * cfg.d_model
+    hd = cfg.ssm_head_dim
+    nheads = d_in // hd
+    N = cfg.ssm_state
+    return d_in, hd, nheads, N
+
+
+def mamba2_block_init(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    d_in, hd, nheads, N = _dims(cfg)
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 6)
+    conv_dim = d_in + 2 * NGROUPS * N
+    return {
+        "ln": rmsnorm_init(cfg),
+        # in_proj: x -> [z (d_in), xBC (conv_dim), dt (nheads)]
+        "w_in": _dense_init(ks[0], (d, 2 * d_in + 2 * NGROUPS * N + nheads), dt),
+        "conv_w": _dense_init(ks[1], (CONV_K, conv_dim), dt, scale=0.5),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "A_log": jnp.zeros((nheads,), jnp.float32),       # A = -exp(A_log)
+        "D": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.full((nheads,), -4.6, jnp.float32),  # softplus^-1(0.01)
+        "ln_out": rmsnorm_init(cfg, d_in),
+        "w_out": _dense_init(ks[2], (d_in, d), dt),
+    }
+
+
+def _split_in(cfg: ModelConfig, proj: jnp.ndarray):
+    d_in, hd, nheads, N = _dims(cfg)
+    z = proj[..., :d_in]
+    xBC = proj[..., d_in: 2 * d_in + 2 * NGROUPS * N]
+    dt = proj[..., 2 * d_in + 2 * NGROUPS * N:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC: jnp.ndarray, conv_state: jnp.ndarray,
+                 w: jnp.ndarray, b: jnp.ndarray):
+    """Depthwise causal conv (window CONV_K) via shifted adds.
+
+    xBC: [B,S,C]; conv_state: [B,K-1,C] (inputs before position 0).
+    Returns (out [B,S,C], new_conv_state [B,K-1,C])."""
+    full = jnp.concatenate([conv_state.astype(xBC.dtype), xBC], axis=1)
+    S = xBC.shape[1]
+    out = b
+    for i in range(CONV_K):
+        out = out + full[:, i: i + S, :] * w[i]
+    new_state = full[:, S:, :]  # last K-1 inputs
+    return jax.nn.silu(out.astype(jnp.float32)).astype(xBC.dtype), new_state
+
+
+def _ssd_scan(x, dt, A, B, C, D, state):
+    """Selective scan.
+
+    x: [B,S,H,hd]; dt: [B,S,H] (post-softplus); A: [H] (negative);
+    B,C: [B,S,N] (ngroups=1, shared across heads); D: [H];
+    state: [B,H,hd,N].  Returns (y [B,S,H,hd], new state).
+    """
+    def step(s, inp):
+        xt, dtt, Bt, Ct = inp          # [B,H,hd], [B,H], [B,N], [B,N]
+        da = jnp.exp(dtt * A)          # [B,H]
+        dBx = jnp.einsum("bh,bhp,bn->bhpn", dtt, xt, Bt)
+        s = da[..., None, None] * s + dBx
+        yt = jnp.einsum("bhpn,bn->bhp", s, Ct) + D[None, :, None] * xt
+        return s, yt
+
+    xs = jnp.moveaxis(x, 1, 0)
+    dts = jnp.moveaxis(dt, 1, 0)
+    Bs = jnp.moveaxis(B, 1, 0)
+    Cs = jnp.moveaxis(C, 1, 0)
+    state, ys = jax.lax.scan(step, state, (xs, dts, Bs, Cs))
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+def mamba2_block(p: Params, cfg: ModelConfig, x: jnp.ndarray, state: Tuple):
+    """x: [B,S,d]; state: (conv_state, ssm_state)."""
+    conv_state, ssm_state = state
+    B_, S, d = x.shape
+    d_in, hd, nheads, N = _dims(cfg)
+    h = rmsnorm(p["ln"], x, cfg.norm_eps)
+    proj = jnp.einsum("bsd,de->bse", h, p["w_in"])
+    z, xBC, dt_raw = _split_in(cfg, proj)
+    xBC, conv_state = _causal_conv(xBC, conv_state, p["conv_w"], p["conv_b"])
+    xin = xBC[..., :d_in].reshape(B_, S, nheads, hd)
+    Bmat = xBC[..., d_in: d_in + NGROUPS * N].astype(jnp.float32)
+    Cmat = xBC[..., d_in + NGROUPS * N:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # [B,S,H]
+    A = -jnp.exp(p["A_log"])
+    y, ssm_state = _ssd_scan(
+        xin.astype(jnp.float32), dt, A, Bmat, Cmat, p["D"], ssm_state
+    )
+    y = y.reshape(B_, S, d_in).astype(x.dtype)
+    y = rmsnorm(p["ln_out"], y, cfg.norm_eps)
+    y = (y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    return x + out, (conv_state, ssm_state)
+
+
+def mamba2_init_state(cfg: ModelConfig, batch: int, dtype=None):
+    d_in, hd, nheads, N = _dims(cfg)
+    conv_dim = d_in + 2 * NGROUPS * N
+    dt = dtype or jnp.dtype(cfg.dtype)
+    return (
+        jnp.zeros((batch, CONV_K - 1, conv_dim), dt),
+        jnp.zeros((batch, nheads, hd, N), jnp.float32),
+    )

@@ -1,0 +1,195 @@
+"""RWKV-6 ("Finch", arXiv:2404.05892) block: attention-free time mixing with
+data-dependent decay, plus the squared-ReLU channel mix.
+
+Pure-JAX reference implementation; the recurrence runs as ``lax.scan`` over
+time (vectorized over batch/heads).  The Pallas chunked-scan kernel in
+``repro.kernels.rwkv6_scan`` accelerates the same math on TPU.
+
+State per layer (decode): (x_prev_att [B,d], x_prev_ffn [B,d],
+wkv_state [B,H,hd,hd]).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import _dense_init, dtype_of, rmsnorm, rmsnorm_init
+
+Params = Dict[str, Any]
+
+LORA_RANK = 32
+
+
+def rwkv6_block_init(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    f = cfg.d_ff
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 16)
+    r = LORA_RANK
+    return {
+        "ln_att": rmsnorm_init(cfg),
+        "ln_ffn": rmsnorm_init(cfg),
+        # data-dependent token-shift mix (5 targets: w,k,v,r,g)
+        "mu_x": jnp.zeros((5, d), jnp.float32),
+        "lora_A": _dense_init(ks[0], (d, 5 * r), dt),
+        "lora_B": _dense_init(ks[1], (5, r, d), dt),
+        # projections.  wv/wg/wo carry explicit [H, hd] structure so the
+        # value-channel dim can be sharded over `model` (hd divides the
+        # axis even when H does not — see distrib.sharding rwkv rules)
+        "wr": _dense_init(ks[2], (d, d), dt),
+        "wk": _dense_init(ks[3], (d, d), dt),
+        "wv": _dense_init(ks[4], (d, H, hd), dt),
+        "wg": _dense_init(ks[5], (d, H, hd), dt),
+        "wo": _dense_init(ks[6], (H, hd, d), dt),
+        # decay: w = exp(-exp(w0 + tanh(xw A_w) B_w))
+        "w0": jnp.full((d,), -6.0, jnp.float32),
+        "wA": _dense_init(ks[7], (d, r), dt),
+        "wB": _dense_init(ks[8], (r, d), dt),
+        # per-head bonus u
+        "u": jnp.zeros((H, hd), jnp.float32),
+        "ln_head": rmsnorm_init(cfg, hd),
+        # channel mix
+        "ck": _dense_init(ks[9], (d, f), dt),
+        "cv": _dense_init(ks[10], (f, d), dt),
+        "cr": _dense_init(ks[11], (d, d), dt),
+        "mu_ck": jnp.zeros((d,), jnp.float32),
+        "mu_cr": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def _shift(x: jnp.ndarray, x_prev: jnp.ndarray) -> jnp.ndarray:
+    """Token shift: previous token's activation (x_prev for position 0)."""
+    return jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _time_mix_inputs(p: Params, x: jnp.ndarray, shifted: jnp.ndarray):
+    """Data-dependent lerp producing the 5 mixed inputs (w,k,v,r,g)."""
+    xx = (shifted - x).astype(jnp.float32)
+    base = x.astype(jnp.float32) + xx * p["mu_x"][:, None, None, :]  # [5,B,S,d]
+    # one shared lora trunk, 5 heads
+    trunk = jnp.tanh(jnp.einsum("bsd,dk->bsk", x, p["lora_A"]))
+    trunk = trunk.reshape(x.shape[0], x.shape[1], 5, LORA_RANK)
+    adj = jnp.einsum("bskr,krd->kbsd", trunk, p["lora_B"])  # [5,B,S,d]
+    mixed = base + adj.astype(jnp.float32)
+    return mixed.astype(x.dtype)  # [5, B, S, d] -> w,k,v,r,g
+
+
+def _wkv_scan(r, k, v, w, u, state):
+    """The WKV recurrence over time.
+
+    r,k,v: [B,S,H,hd] (any float dtype; upcast per step so the TP gathers
+    feeding the scan move bf16, not f32 — SS:Perf); w: [B,S,H,hd] decay in
+    (0,1) f32; u: [H,hd]; state: [B,H,hd,hd] f32 (key-major).
+    Returns (y [B,S,H,hd] f32, new state).
+    """
+    def step(s, inp):
+        rt, kt, vt, wt = inp  # [B,H,hd] each
+        rt = rt.astype(jnp.float32)
+        kt = kt.astype(jnp.float32)
+        vt = vt.astype(jnp.float32)
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)          # outer product
+        yt = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., None] * s + kv
+        return s, yt
+
+    rs, ks, vs, ws = (jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state, (rs, ks, vs, ws))
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+def _pin(t: jnp.ndarray, mesh, vdim: Optional[int] = None) -> jnp.ndarray:
+    """Anchor a tensor batch-sharded on the data axes and (optionally)
+    value-channel-sharded over `model` on dim ``vdim``.
+
+    The WKV recurrence is independent per value channel, so v/g/y and the
+    scan state shard on hd even when the head count does not divide the
+    axis; anchoring the *carry* too is essential — a replicated zero-init
+    carry otherwise flips the entire scan to batch-replicated execution."""
+    if mesh is None or "model" not in mesh.axis_names:
+        return t
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    baxes = tuple(a for a in mesh.axis_names if a != "model")
+    dims: list = [None] * t.ndim
+    bsize = 1
+    for a in baxes:
+        bsize *= mesh.shape[a]
+    if baxes and t.shape[0] % bsize == 0:
+        dims[0] = baxes if len(baxes) > 1 else baxes[0]
+    if vdim is not None and t.shape[vdim] % mesh.shape["model"] == 0:
+        dims[vdim] = "model"
+    return jax.lax.with_sharding_constraint(
+        t, NamedSharding(mesh, P(*dims)))
+
+
+def rwkv6_time_mix(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+                   x_prev: jnp.ndarray, state: jnp.ndarray, mesh=None):
+    """x: [B,S,d] -> (out [B,S,d], new_x_prev [B,d], new_state).
+
+    Distribution (SS:Perf): column-parallel projections; all cross-`model`
+    gathers move bf16 tensors (the f32 upcasts happen inside the scan step
+    and after gating products), and the rank-32 decay lora is computed
+    replicated so the decay tensor needs no collective at all."""
+    B, S, d = x.shape
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    shifted = _shift(x, x_prev)
+    xw, xk, xv, xr, xg = _time_mix_inputs(p, x, shifted)
+    r = jnp.einsum("bsd,de->bse", xr, p["wr"]).reshape(B, S, H, hd)
+    k = jnp.einsum("bsd,de->bse", xk, p["wk"]).reshape(B, S, H, hd)
+    v = jnp.einsum("bsd,dhe->bshe", xv, p["wv"])
+    g = jnp.einsum("bsd,dhe->bshe", xg, p["wg"])
+    g = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    # data-dependent decay: rank-32 lora, replicated compute, no collective
+    dw = jnp.einsum("bsr,rd->bsd", jnp.tanh(jnp.einsum("bsd,dr->bsr", xw, p["wA"])), p["wB"])
+    w = jnp.exp(-jnp.exp(p["w0"] + dw.astype(jnp.float32)))  # (0,1)
+    w = w.reshape(B, S, H, hd)
+    y, state = _wkv_scan(r, k, v, w, p["u"], state)
+    y = rmsnorm(p["ln_head"], y, cfg.norm_eps).astype(x.dtype)
+    y = y * g
+    out = jnp.einsum("bshe,hed->bsd", y, p["wo"])
+    return out, x[:, -1, :], state
+
+
+def rwkv6_channel_mix(p: Params, x: jnp.ndarray, x_prev: jnp.ndarray,
+                      mesh=None):
+    shifted = _shift(x, x_prev)
+    xx = (shifted - x).astype(jnp.float32)
+    xk = (x.astype(jnp.float32) + xx * p["mu_ck"]).astype(x.dtype)
+    xr = (x.astype(jnp.float32) + xx * p["mu_cr"]).astype(x.dtype)
+    k = jnp.einsum("bsd,df->bsf", xk, p["ck"])
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    v = jnp.einsum("bsf,fd->bsd", k, p["cv"])
+    rg = jnp.einsum("bsd,de->bse", xr, p["cr"])
+    r = jax.nn.sigmoid(rg.astype(jnp.float32)).astype(x.dtype)
+    return r * v, x[:, -1, :]
+
+
+def rwkv6_block(p: Params, cfg: ModelConfig, x: jnp.ndarray, state: Tuple,
+                mesh=None):
+    """Full block. state: (x_prev_att, x_prev_ffn, wkv_state)."""
+    xp_att, xp_ffn, wkv = state
+    h = rmsnorm(p["ln_att"], x, cfg.norm_eps)
+    att, xp_att, wkv = rwkv6_time_mix(p, cfg, h, xp_att, wkv, mesh=mesh)
+    x = x + att
+    h = rmsnorm(p["ln_ffn"], x, cfg.norm_eps)
+    ffn, xp_ffn = rwkv6_channel_mix(p, h, xp_ffn, mesh=mesh)
+    x = x + ffn
+    return x, (xp_att, xp_ffn, wkv)
+
+
+def rwkv6_init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    return (
+        jnp.zeros((batch, d), dtype),
+        jnp.zeros((batch, d), dtype),
+        jnp.zeros((batch, H, hd, hd), jnp.float32),
+    )

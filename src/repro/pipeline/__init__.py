@@ -1,0 +1,5 @@
+"""Input pipeline: PipeGen-fed, double-buffered, straggler-tolerant."""
+
+from .feeder import PipeFeeder, SyntheticSource, EngineSource, BatchQueue
+
+__all__ = ["PipeFeeder", "SyntheticSource", "EngineSource", "BatchQueue"]

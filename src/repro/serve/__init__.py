@@ -1,0 +1,5 @@
+"""Serving: batched KV-cache decode loop."""
+
+from .engine import ServeEngine, GenerationResult
+
+__all__ = ["ServeEngine", "GenerationResult"]

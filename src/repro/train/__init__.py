@@ -1,0 +1,11 @@
+"""Training substrate: optimizer, schedules, steps, checkpointing, elastic."""
+
+from .optimizer import adamw_init, adamw_update, OptState, lr_schedule
+from .step import make_train_step, make_eval_step, TrainState, train_state_specs
+from .checkpoint import CheckpointManager
+
+__all__ = [
+    "adamw_init", "adamw_update", "OptState", "lr_schedule",
+    "make_train_step", "make_eval_step", "TrainState", "train_state_specs",
+    "CheckpointManager",
+]

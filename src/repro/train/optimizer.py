@@ -1,0 +1,79 @@
+"""AdamW with decoupled weight decay, built directly on jnp (no optax dep).
+
+Moments are f32 regardless of param dtype (mixed-precision convention).
+``zero1`` support lives in the sharding of the moment pytrees (see
+``train.step.train_state_specs``), not here — the update is elementwise and
+works on whatever shards XLA hands it.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptState", "adamw_init", "adamw_update", "lr_schedule"]
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def adamw_init(params: Any) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree_util.tree_map(zeros, params),
+        v=jax.tree_util.tree_map(zeros, params),
+    )
+
+
+def adamw_update(params: Any, grads: Any, state: OptState, lr: jnp.ndarray,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1,
+                 grad_clip: Optional[float] = 1.0):
+    """Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    gnorm_sq = sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32)))
+        for g in jax.tree_util.tree_leaves(grads)
+    )
+    gnorm = jnp.sqrt(gnorm_sq)
+    scale = jnp.ones((), jnp.float32)
+    if grad_clip is not None:
+        scale = jnp.minimum(1.0, grad_clip / (gnorm + 1e-9))
+
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    out = jax.tree_util.tree_map(upd, params, grads, state.m, state.v)
+    new_params = jax.tree_util.tree_map(
+        lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree_util.tree_map(
+        lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree_util.tree_map(
+        lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, OptState(step, new_m, new_v), {"grad_norm": gnorm}
+
+
+def lr_schedule(step: jnp.ndarray, *, peak: float = 3e-4, warmup: int = 100,
+                total: int = 10_000, floor: float = 3e-5) -> jnp.ndarray:
+    """Linear warmup + cosine decay."""
+    s = step.astype(jnp.float32)
+    warm = peak * s / max(warmup, 1)
+    prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = floor + 0.5 * (peak - floor) * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(s < warmup, warm, cos)

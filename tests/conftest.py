@@ -1,0 +1,20 @@
+import os
+import sys
+
+# tests run on the single real CPU device (the dry-run owns the 512-device
+# flag); make jax deterministic and quiet
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import pytest
+
+from repro.core.directory import WorkerDirectory, set_directory
+
+
+@pytest.fixture(autouse=True)
+def fresh_directory():
+    """Each test gets its own worker directory (no cross-test rendezvous)."""
+    d = WorkerDirectory()
+    set_directory(d)
+    yield d

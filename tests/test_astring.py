@@ -1,0 +1,81 @@
+"""AString (section 5.1): string-protocol fidelity + typed-part recovery."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.astring import AString, materialize_part
+
+
+def test_concat_keeps_parts():
+    s = AString.of(1) + AString.literal(",") + AString.of("a")
+    assert list(s.parts) == [1, ",", "a"]
+    assert str(s) == "1,a"
+
+
+def test_paper_example_internal_state():
+    # fig. 8(c): accumulated values after one loop iteration
+    s = AString.of(1) + AString.literal(",") + AString.of(2.5)
+    assert s.parts[0] == 1 and s.parts[1] == "," and s.parts[2] == 2.5
+
+
+def test_parse_skips_materialization():
+    assert AString.parse_int(AString.of(42)) == 42
+    assert AString.parse_float(AString.of(2.5)) == 2.5
+    assert AString.parse_bool(AString.of(True)) is True
+
+
+def test_parse_from_characters():
+    assert AString.parse_int(AString(("17",))) == 17
+    assert AString.parse_float(AString(("-2.5",))) == -2.5
+
+
+def test_split_on_delimiter_typed():
+    s = AString((1, ",", 2.5, ",", "x"))
+    cells = s.split(",")
+    assert [c.sole_value for c in cells] == [1, 2.5, "x"]
+
+
+def test_split_character_fallback():
+    s = AString(("1,2,3",))
+    cells = s.split(",")
+    assert [str(c) for c in cells] == ["1", "2", "3"]
+
+
+def test_float_text_roundtrip_exact():
+    # repr-based rendering must round-trip doubles exactly (the paper's
+    # 24-byte float example)
+    v = -2.2250738585072020e-308
+    assert float(materialize_part(v)) == v
+
+
+@given(st.lists(st.one_of(
+    st.integers(-2**63, 2**63 - 1),
+    st.floats(allow_nan=False, allow_infinity=False),
+    st.text(alphabet=st.characters(blacklist_characters=",\n\r"),
+            max_size=8),
+), min_size=1, max_size=10))
+@settings(max_examples=60, deadline=None)
+def test_materialization_matches_plain_strings(vals):
+    """Property: AString renders exactly like plain-str concatenation."""
+    plain = ",".join(
+        ("true" if v else "false") if isinstance(v, bool)
+        else (repr(v) if isinstance(v, float) else str(v))
+        for v in vals)
+    parts = []
+    for i, v in enumerate(vals):
+        if i:
+            parts.append(",")
+        parts.append(v)
+    assert str(AString(parts)) == plain
+
+
+@given(st.lists(st.integers(-10**9, 10**9), min_size=1, max_size=8))
+@settings(max_examples=40, deadline=None)
+def test_split_recovers_values(ints):
+    parts = []
+    for i, v in enumerate(ints):
+        if i:
+            parts.append(",")
+        parts.append(v)
+    cells = AString(parts).split(",")
+    assert [AString.parse_int(c) for c in cells] == list(ints)

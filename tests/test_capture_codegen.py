@@ -1,0 +1,122 @@
+"""Compile loop (sections 3.2/4.1/6): capture discrimination, adapter
+generation, Table-2 stats, and the verification proxy."""
+
+import builtins
+import os
+
+import pytest
+
+from repro.core import (
+    PipeConfig,
+    PipeEnabledEngine,
+    adapter_for,
+    generate_pipe_adapter,
+    validate_generated_pipe,
+)
+from repro.core.capture import run_capture
+from repro.core.ioredirect import PipeOpenContext
+from repro.engines import ENGINES, make_engine
+
+
+def test_capture_rejects_unrelated_opens(tmp_path):
+    """The paper's debug-log case: an open() of another file must NOT be
+    turned into a pipe call site."""
+    target = str(tmp_path / "data.csv")
+    log = str(tmp_path / "debug.log")
+    eng = make_engine("colstore")
+
+    def export_test(path):
+        with open(log, "w") as f:   # unrelated open
+            f.write("dbg")
+        eng.unit_export_test(path)
+
+    report = run_capture("colstore", export_test, eng.unit_import_test, target)
+    assert report.export_sites and report.import_sites
+    rejected_files = {
+        fn for s in report.rejected_sites for fn in [log]
+    }
+    assert report.rejected_sites, "the debug-log site must be rejected"
+    for site in report.sites:
+        assert site not in report.rejected_sites
+
+
+@pytest.mark.parametrize("name", sorted(ENGINES))
+def test_adapter_generation_and_stats(name, tmp_path):
+    eng = make_engine(name)
+    gp = generate_pipe_adapter(
+        name, eng.unit_export_test, eng.unit_import_test,
+        str(tmp_path / "unit.csv"), out_dir=tmp_path / "gen",
+    )
+    # Table 2 reproduction: stats must be populated and small
+    assert gp.stats.ioredirect_classes >= 1
+    assert gp.stats.ioredirect_loc > 0
+    assert gp.stats.modification_time_s < 60
+    assert (tmp_path / "gen" / f"{name}_pipe.py").exists()
+    src = gp.adapter_source
+    assert "REGISTRY" in src and "PipeOpen" in src
+
+
+@pytest.mark.parametrize("name", sorted(ENGINES))
+def test_verification_proxy_roundtrip(name, tmp_path):
+    """Section 4.1: unit tests run across the proxy validate the pipe."""
+    eng = make_engine(name)
+    gp = adapter_for(eng)
+    with PipeEnabledEngine(gp), PipeOpenContext(PipeConfig(mode="arrowcol")):
+        res = validate_generated_pipe(
+            name, eng.unit_roundtrip_test, tmp_path,
+            dataset=f"vrt-{name}")
+    assert res.passed, res.detail
+
+
+def test_splice_restores_builtin_open(tmp_path):
+    eng = make_engine("rowstore")
+    gp = adapter_for(eng)
+    real = builtins.open
+    with PipeEnabledEngine(gp):
+        pass
+    assert builtins.open is real
+
+
+def test_nested_splices_compose(tmp_path):
+    a, b = make_engine("rowstore"), make_engine("dataframe")
+    real = builtins.open
+    with PipeEnabledEngine(adapter_for(a)):
+        with PipeEnabledEngine(adapter_for(b)):
+            assert builtins.open is not real
+        assert builtins.open is not real
+    assert builtins.open is real
+
+
+def test_negotiate_pipe_mode_prefers_arrowcol(tmp_path):
+    """Paper sections 5.1/5.2: the optimization ladder picks the most
+    optimized rung that passes the engine's unit tests across the proxy."""
+    from repro.core.session import negotiate_pipe_mode
+
+    eng = make_engine("colstore")
+    cfg = negotiate_pipe_mode(eng, spool_dir=str(tmp_path))
+    assert cfg.mode == "arrowcol"
+
+
+def test_negotiate_pipe_mode_falls_back_on_failure(tmp_path, monkeypatch):
+    """A broken optimized rung must be disabled, falling to the next."""
+    from repro.core import session as sess
+    from repro.core.session import negotiate_pipe_mode
+    from repro.core import verify as verify_mod
+
+    real_validate = verify_mod.validate_generated_pipe
+    calls = []
+
+    def flaky(engine_name, rt, spool, dataset=None, directory=None,
+              config=None):
+        calls.append(config.mode)
+        if config.mode == "arrowcol":  # simulate a failing optimized rung
+            from repro.core.verify import VerificationResult
+            return VerificationResult(engine_name, False, "injected failure")
+        return real_validate(engine_name, rt, spool, dataset=dataset,
+                             directory=directory, config=config)
+
+    monkeypatch.setattr("repro.core.verify.validate_generated_pipe", flaky)
+    eng = make_engine("dataframe")
+    cfg = negotiate_pipe_mode(eng, spool_dir=str(tmp_path))
+    assert calls[0] == "arrowcol"
+    assert cfg.mode == "arrowrow"  # next rung down

@@ -1,0 +1,47 @@
+"""Roofline machinery: collective parsing + term arithmetic."""
+
+import pytest
+
+from repro.launch.hlo_stats import HW, parse_collectives, roofline_terms
+
+HLO = """
+HloModule test
+ENTRY main {
+  %p0 = f32[128,256]{1,0} parameter(0)
+  %ag = f32[2048,256]{1,0} all-gather(%p0), replica_groups={}
+  %ar = bf16[1024]{0} all-reduce(%x), to_apply=%add
+  %rs = f32[64,256]{1,0} reduce-scatter(%y), dimensions={0}
+  %a2a = f32[16,16]{1,0} all-to-all(%z), dimensions={0}
+  %cp = u8[4096]{0} collective-permute(%w), source_target_pairs={{0,1}}
+  %ag2 = f32[10]{0} all-gather-start(%q)
+  %agd = f32[10]{0} all-gather-done(%ag2)
+  %dot = f32[128,128]{1,0} dot(%a, %b)
+}
+"""
+
+
+def test_parse_collectives_counts_and_bytes():
+    stats = parse_collectives(HLO)
+    assert stats.count_by_kind["all-gather"] == 2  # incl. -start, not -done
+    assert stats.count_by_kind["all-reduce"] == 1
+    assert stats.count_by_kind["reduce-scatter"] == 1
+    assert stats.count_by_kind["all-to-all"] == 1
+    assert stats.count_by_kind["collective-permute"] == 1
+    assert stats.bytes_by_kind["all-gather"] == 2048 * 256 * 4 + 10 * 4
+    assert stats.bytes_by_kind["all-reduce"] == 1024 * 2
+    assert stats.bytes_by_kind["collective-permute"] == 4096
+    assert stats.total_count == 6
+
+
+def test_parse_ignores_non_collectives():
+    stats = parse_collectives("%dot = f32[8,8]{1,0} dot(%a, %b)")
+    assert stats.total_bytes == 0
+
+
+def test_roofline_terms_math():
+    t = roofline_terms(197e12, 819e9, 50e9, 1)
+    assert t["compute_s"] == pytest.approx(1.0)
+    assert t["memory_s"] == pytest.approx(1.0)
+    assert t["collective_s"] == pytest.approx(1.0)
+    t = roofline_terms(197e12, 0, 0, 2)
+    assert t["compute_s"] == pytest.approx(0.5)

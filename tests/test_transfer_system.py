@@ -1,0 +1,174 @@
+"""System tests: full engine-to-engine transfers through generated pipes."""
+
+import numpy as np
+import pytest
+
+from repro.core import PipeConfig, transfer, transfer_via_files
+from repro.engines import ENGINES, make_engine, make_paper_block
+
+PAIRS = [(s, d) for s in ENGINES for d in ENGINES if s != d]
+
+
+def _check(src_block, dst, table, n):
+    rows = dst.get_block(table).to_rows().rows
+    assert len(rows) == n
+    vals = np.sort(np.array([float(r[2]) for r in rows]))
+    want = np.sort(np.asarray(src_block.columns[2], float))
+    np.testing.assert_allclose(vals, want, atol=1e-12)
+
+
+@pytest.mark.parametrize("pair", PAIRS, ids=[f"{s}->{d}" for s, d in PAIRS])
+def test_pair_arrowcol(pair):
+    s, d = pair
+    src, dst = make_engine(s), make_engine(d)
+    blk = make_paper_block(200, seed=3)
+    src.put_block("t", blk)
+    r = transfer(src, "t", dst, "t2",
+                 config=PipeConfig(mode="arrowcol", block_rows=64), timeout=30)
+    assert r.rows == 200
+    _check(blk, dst, "t2", 200)
+
+
+@pytest.mark.parametrize("mode", ["text", "parts", "binary_rows", "tagged",
+                                  "arrowrow", "arrowcol"])
+def test_modes_colstore_to_dataframe(mode):
+    src, dst = make_engine("colstore"), make_engine("dataframe")
+    blk = make_paper_block(150, seed=5)
+    src.put_block("t", blk)
+    transfer(src, "t", dst, "t2",
+             config=PipeConfig(mode=mode, block_rows=32), timeout=30)
+    _check(blk, dst, "t2", 150)
+
+
+@pytest.mark.parametrize("codec", ["none", "rle", "zip", "zstd"])
+def test_codecs(codec):
+    src, dst = make_engine("colstore"), make_engine("dataframe")
+    blk = make_paper_block(150, seed=6)
+    src.put_block("t", blk)
+    transfer(src, "t", dst, "t2",
+             config=PipeConfig(codec=codec, block_rows=32), timeout=30)
+    _check(blk, dst, "t2", 150)
+
+
+def test_parallel_workers_4x4():
+    src = make_engine("colstore", workers=4)
+    dst = make_engine("dataframe", workers=4)
+    blk = make_paper_block(2000, seed=7)
+    src.put_block("t", blk)
+    r = transfer(src, "t", dst, "t2", workers=4, timeout=60)
+    assert r.rows == 2000
+    _check(blk, dst, "t2", 2000)
+
+
+def test_worker_mismatch_2_exporters_4_importers():
+    src = make_engine("colstore", workers=2)
+    dst = make_engine("dataframe", workers=4)
+    blk = make_paper_block(1000, seed=8)
+    src.put_block("t", blk)
+    r = transfer(src, "t", dst, "t2", workers=2, import_workers=4, timeout=60)
+    assert r.rows == 1000
+
+
+def test_concurrent_transfers_do_not_collide():
+    """Distinct query ids keep simultaneous transfers apart (section 4.2)."""
+    import threading
+
+    src1, dst1 = make_engine("colstore"), make_engine("dataframe")
+    src2, dst2 = make_engine("rowstore"), make_engine("graphstore")
+    b1, b2 = make_paper_block(300, seed=9), make_paper_block(200, seed=10)
+    src1.put_block("t", b1)
+    src2.put_block("t", b2)
+    errs = []
+
+    def run(src, dst, n):
+        try:
+            r = transfer(src, "t", dst, "t2", timeout=60)
+            assert r.rows == n, r.rows
+        except Exception as e:  # noqa: BLE001
+            errs.append(e)
+
+    t1 = threading.Thread(target=run, args=(src1, dst1, 300))
+    t2 = threading.Thread(target=run, args=(src2, dst2, 200))
+    t1.start(); t2.start(); t1.join(60); t2.join(60)
+    assert not errs, errs
+
+
+def test_file_baseline_equivalence():
+    """Pipe transfer lands the same data as the file-system baseline."""
+    src1, dst1 = make_engine("colstore"), make_engine("dataframe")
+    src2, dst2 = make_engine("colstore"), make_engine("dataframe")
+    blk = make_paper_block(200, seed=11)
+    src1.put_block("t", blk)
+    src2.put_block("t", blk)
+    transfer(src1, "t", dst1, "t2", timeout=30)
+    transfer_via_files(src2, "t", dst2, "t2")
+    a = dst1.get_block("t2").to_rows().rows
+    b = dst2.get_block("t2").to_rows().rows
+    assert sorted(map(repr, a)) == sorted(map(repr, b))
+
+
+def test_seqfile_shared_binary_format():
+    """Section 5: a shared binary format pipes straight through (bytes)."""
+    import threading
+
+    from repro.core import PipeEnabledEngine, adapter_for
+
+    src, dst = make_engine("mapreduce"), make_engine("mapreduce")
+    blk = make_paper_block(300, seed=12)
+    src.put_block("t", blk)
+    gp = adapter_for(src)
+    errs = []
+
+    def imp():
+        try:
+            with PipeEnabledEngine(gp):
+                dst.import_csv("t2", "db://seqx?query=s1")  # sniffs magic
+        except Exception as e:  # noqa: BLE001
+            errs.append(e)
+
+    def exp():
+        try:
+            with PipeEnabledEngine(gp):
+                src.export_seqfile("t", "db://seqx?query=s1")
+        except Exception as e:  # noqa: BLE001
+            errs.append(e)
+
+    ti = threading.Thread(target=imp)
+    te = threading.Thread(target=exp)
+    ti.start(); te.start(); ti.join(30); te.join(30)
+    assert not errs, errs
+    assert len(dst.get_block("t2")) == 300
+
+
+def test_json_library_extension_transfer():
+    """Section 5.2: jsonlib (Jackson analog) export -> typed import."""
+    import threading
+
+    from repro.core import PipeEnabledEngine, adapter_for
+    from repro.core.ioredirect import PipeOpenContext
+
+    src, dst = make_engine("dataframe"), make_engine("colstore")
+    blk = make_paper_block(250, seed=13)
+    src.put_block("t", blk)
+    cfg = PipeConfig(mode="arrowcol", text_format="json", block_rows=64)
+    errs = []
+
+    def imp():
+        try:
+            with PipeEnabledEngine(adapter_for(dst)), PipeOpenContext(cfg):
+                dst.import_json("t2", "db://jx?query=j1")
+        except Exception as e:  # noqa: BLE001
+            errs.append(e)
+
+    def exp():
+        try:
+            with PipeEnabledEngine(adapter_for(src)), PipeOpenContext(cfg):
+                src.export_json("t", "db://jx?query=j1")
+        except Exception as e:  # noqa: BLE001
+            errs.append(e)
+
+    ti = threading.Thread(target=imp)
+    te = threading.Thread(target=exp)
+    ti.start(); te.start(); ti.join(30); te.join(30)
+    assert not errs, errs
+    assert len(dst.get_block("t2")) == 250

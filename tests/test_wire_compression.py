@@ -1,0 +1,84 @@
+"""Wire formats + codecs: roundtrip properties over random typed blocks."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compression import CODECS, get_codec
+from repro.core.types import ColType, ColumnBlock, Field, RowBlock, Schema
+from repro.core.wire import WIRE_FORMATS, decode_schema, encode_schema, get_wire_format
+from repro.engines.base import assert_blocks_equal, make_paper_block
+
+BLOCK_FORMATS = [n for n in WIRE_FORMATS if n not in ("text", "parts")]
+
+
+@pytest.mark.parametrize("fmt", BLOCK_FORMATS)
+def test_paper_block_roundtrip(fmt):
+    block = make_paper_block(257, seed=1)
+    wire = get_wire_format(fmt)
+    payload = wire.encode_block(block)
+    got = wire.decode_block(payload, block.schema)
+    assert_blocks_equal(block, got)
+
+
+@pytest.mark.parametrize("fmt", BLOCK_FORMATS)
+def test_string_block_roundtrip(fmt):
+    block = make_paper_block(64, seed=2, strings=True)
+    wire = get_wire_format(fmt)
+    got = wire.decode_block(wire.encode_block(block), block.schema)
+    assert_blocks_equal(block, got)
+
+
+def test_schema_frame_roundtrip():
+    block = make_paper_block(4)
+    payload = encode_schema(block.schema, {"mode": "arrowcol", "delimiter": "|"})
+    schema, meta = decode_schema(payload)
+    assert schema.names == block.schema.names
+    assert meta["delimiter"] == "|"
+
+
+@pytest.mark.parametrize("codec", sorted(CODECS))
+def test_codec_roundtrip(codec):
+    c = get_codec(codec)
+    data = b"abc" * 1000 + bytes(range(256)) * 7
+    assert c.decompress(c.compress(data)) == data
+
+
+@given(st.binary(min_size=0, max_size=4096))
+@settings(max_examples=50, deadline=None)
+def test_rle_roundtrip_property(data):
+    c = get_codec("rle")
+    assert c.decompress(c.compress(data)) == data
+
+
+@given(st.binary(min_size=0, max_size=4096))
+@settings(max_examples=30, deadline=None)
+def test_zstd_roundtrip_property(data):
+    c = get_codec("zstd")
+    assert c.decompress(c.compress(data)) == data
+
+
+_col = st.lists(st.integers(-2**40, 2**40), min_size=1, max_size=40)
+
+
+@given(_col, st.sampled_from(BLOCK_FORMATS))
+@settings(max_examples=40, deadline=None)
+def test_int_column_roundtrip_property(ints, fmt):
+    schema = Schema([Field("a", ColType.INT64)])
+    block = ColumnBlock(schema, [np.asarray(ints, np.int64)])
+    wire = get_wire_format(fmt)
+    got = wire.decode_block(wire.encode_block(block), schema)
+    np.testing.assert_array_equal(np.asarray(got.columns[0]), ints)
+
+
+@given(st.lists(st.floats(allow_nan=False, allow_infinity=False,
+                          width=64), min_size=1, max_size=40),
+       st.sampled_from(BLOCK_FORMATS))
+@settings(max_examples=40, deadline=None)
+def test_float_column_bitexact_property(vals, fmt):
+    schema = Schema([Field("x", ColType.FLOAT64)])
+    block = ColumnBlock(schema, [np.asarray(vals, np.float64)])
+    wire = get_wire_format(fmt)
+    got = wire.decode_block(wire.encode_block(block), schema)
+    np.testing.assert_array_equal(np.asarray(got.columns[0]),
+                                  np.asarray(vals, np.float64))
