@@ -1,11 +1,15 @@
 """Figure 14: Arrow buffer (row-block) size sweep, Myria->Giraph analog.
 
 Paper conclusion: as long as the buffer is not too small, size barely
-matters."""
+matters.  With the pooled zero-copy path the sweep also reports buffer-pool
+efficiency per block size: smaller blocks mean more frames, which is where
+pooled reuse (hit rate) and the pipelined sender earn their keep.
+"""
 
 from __future__ import annotations
 
 from repro.core import PipeConfig
+from repro.core.iobuf import BufferPool
 
 from .common import DEFAULT_ROWS, emit, pipe_transfer
 
@@ -14,11 +18,25 @@ SIZES = [64, 256, 1024, 4096, 16384, 65536]
 
 def main(n_rows: int = DEFAULT_ROWS) -> dict:
     out = {}
+    # paper-faithful sweep: numeric paper block, Myria->Giraph analog
     for rows in SIZES:
         t = pipe_transfer("colstore", "graphstore", n_rows,
                           PipeConfig(mode="arrowcol", block_rows=rows))
         out[rows] = t
         emit(f"fig14.block_rows_{rows}", t)
+    # pooled-buffer efficiency: string columns exercise the pooled offsets
+    # path every block, so the hit rate shows reuse vs. block size
+    for rows in SIZES:
+        pool = BufferPool()
+        t = pipe_transfer("colstore", "dataframe", n_rows,
+                          PipeConfig(mode="arrowcol", block_rows=rows,
+                                     pool=pool), strings=True)
+        out[f"strings_{rows}"] = t
+        s = pool.stats
+        total = s.hits + s.misses
+        rate = (s.hits / total) if total else 0.0
+        emit(f"fig14.strings_block_rows_{rows}", t,
+             f"pool_hit_rate={rate:.2f} acquires={total}")
     return out
 
 

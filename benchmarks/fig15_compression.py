@@ -10,11 +10,12 @@ turned with tc."""
 from __future__ import annotations
 
 from repro.core import PipeConfig
+from repro.core.compression import CODECS as _AVAILABLE
 from repro.core.transport import LinkSim
 
 from .common import DEFAULT_ROWS, emit, pipe_transfer
 
-CODECS = ["none", "rle", "zip", "zstd"]
+CODECS = [c for c in ("none", "rle", "zip", "zstd") if c in _AVAILABLE]
 
 
 def main(n_rows: int = DEFAULT_ROWS // 2) -> dict:

@@ -47,6 +47,9 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     names = list(MODULES) if not args.only else args.only.split(",")
+    unknown = [n for n in names if n not in MODULES]
+    if unknown:
+        ap.error(f"unknown benchmark(s) {unknown}; have {sorted(MODULES)}")
     print("name,us_per_call,derived")
     failures = 0
     for name in names:

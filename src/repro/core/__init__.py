@@ -15,12 +15,14 @@ from .datapipe import (
     DataPipeInput,
     DataPipeOutput,
     PipeConfig,
+    PipeStats,
     ReservedName,
     is_reserved,
     open_pipe_reader,
     open_pipe_writer,
     parse_reserved,
 )
+from .iobuf import BufferPool, BufWriter, SegmentList, default_pool
 from .directory import (
     DirectoryClient,
     DirectoryServer,

@@ -5,6 +5,13 @@ The paper evaluates run-length encoding, dictionary-based compression
 colocated workers and a modest win for dictionary compression at 40 ms
 latency.  We implement the same three plus zstd as a modern beyond-paper
 option (used also by the checkpoint substrate).
+
+All codecs accept any bytes-like object (``bytes``/``bytearray``/
+``memoryview``) so the scatter-gather path can compress straight from
+buffer views without materializing a copy first.
+:meth:`Codec.compress_segments` is the SegmentList-level entry point: the
+identity codec passes the views through untouched (zero-copy preserved);
+compressing codecs consume the views and emit a single compressed segment.
 """
 
 from __future__ import annotations
@@ -13,6 +20,8 @@ import zlib
 from typing import Callable, Dict
 
 import numpy as np
+
+from .iobuf import Buffer, SegmentList
 
 try:
     import zstandard as _zstd
@@ -25,15 +34,34 @@ __all__ = ["Codec", "get_codec", "CODECS"]
 class Codec:
     name: str = "none"
 
-    def compress(self, data: bytes) -> bytes:
+    def compress(self, data: Buffer) -> Buffer:
         return data
 
-    def decompress(self, data: bytes) -> bytes:
-        return data
+    def decompress(self, data: Buffer) -> bytes:
+        return data if isinstance(data, bytes) else bytes(data)
+
+    def compress_segments(self, segs: SegmentList) -> SegmentList:
+        """Compress an encoded block at the segment level: compress from
+        the views (one unavoidable gather for multi-segment payloads) and
+        return a single-segment list that still owns the pooled stores so
+        they are recycled after send.  The identity codec overrides this to
+        forward the views untouched (zero-copy preserved)."""
+        data: Buffer
+        if len(segs) == 1:
+            data = segs[0]  # compress straight from the view, no copy
+        else:
+            data = segs.join()
+        out = SegmentList([self.compress(data)])
+        # transfer pooled-store ownership so release-after-send still recycles
+        out._pooled, segs._pooled = segs._pooled, []
+        return out
 
 
 class NoneCodec(Codec):
     name = "none"
+
+    def compress_segments(self, segs: SegmentList) -> SegmentList:
+        return segs
 
 
 class RleCodec(Codec):

@@ -27,9 +27,11 @@ URI schemes (section 6.1).
 from __future__ import annotations
 
 import io
+import queue
 import re
 import socket
 import threading
+import time
 from dataclasses import dataclass, field, replace
 from typing import Any, Iterator, List, Optional, Sequence, Tuple
 from urllib.parse import parse_qs, urlparse
@@ -37,6 +39,7 @@ from urllib.parse import parse_qs, urlparse
 from .astring import AString
 from .compression import Codec, get_codec
 from .directory import DirectoryLike, Endpoint, get_directory
+from .iobuf import BufferPool, SegmentList, default_pool
 from .formopt import (
     DelimitedAssembler,
     FormOptError,
@@ -115,7 +118,16 @@ def is_reserved(filename: str) -> bool:
 
 @dataclass
 class PipeConfig:
-    """Negotiated pipe behaviour; travels in the schema frame meta."""
+    """Negotiated pipe behaviour; travels in the schema frame meta.
+
+    ``pipelined``/``scatter_gather``/``pool`` are exporter-local transport
+    knobs (they do not travel in the meta): ``pipelined`` runs compression
+    and the vectored send on a bounded sender thread so encoding block N+1
+    overlaps the send of block N (the paper's producer/consumer overlap);
+    ``scatter_gather`` disables the zero-copy path when False, falling back
+    to the concatenate-then-send profile (kept for the fig. 11 seed-path
+    comparison); ``pool`` supplies a dedicated buffer pool (default: the
+    process-wide pool)."""
 
     mode: str = "arrowcol"  # text | parts | binary_rows | tagged | arrowrow | arrowcol
     codec: str = "none"  # none | rle | zip | zstd
@@ -125,6 +137,11 @@ class PipeConfig:
     verify_first_n: int = 0  # probabilistic runtime check (section 4.1)
     link: Optional[LinkSim] = None
     connect_timeout: float = 30.0
+    pipelined: bool = True  # double-buffered sender thread
+    scatter_gather: bool = True  # zero-copy vectored send
+    sender_depth: int = 2  # bounded in-flight frames (double buffering)
+    block_export: bool = True  # allow exporters to hand over whole blocks
+    pool: Optional[BufferPool] = None
 
     def meta(self) -> dict:
         return {
@@ -142,6 +159,99 @@ class PipeStats:
     frames_sent: int = 0
     rows: int = 0
     blocks: int = 0
+    copies_avoided: int = 0   # segments shipped as views of live memory
+    pool_hits: int = 0        # buffer acquires served without allocating
+    pool_misses: int = 0
+    send_overlap_s: float = 0.0  # sender-thread work hidden behind encoding
+
+
+class _PoolHandle:
+    """Per-pipe view of a (possibly shared) BufferPool: delegates acquires
+    and counts this pipe's own hits/misses exactly, so PipeStats are not
+    polluted by concurrent pipes sharing the process-wide pool."""
+
+    __slots__ = ("pool", "hits", "misses")
+
+    def __init__(self, pool: BufferPool):
+        self.pool = pool
+        self.hits = 0
+        self.misses = 0
+
+    def acquire(self, nbytes: int):
+        buf = self.pool.acquire(nbytes)
+        if buf.was_hit:
+            self.hits += 1
+        else:
+            self.misses += 1
+        return buf
+
+
+class _PipelinedSender:
+    """Bounded sender thread: compress + vectored send of frame N overlap
+    the encoding of frame N+1 (double buffering via ``depth``).
+
+    Error contract: a failure in compress/send is latched; subsequent
+    submissions drain (releasing pooled buffers) so the producer never
+    blocks on a dead pipe, and the error is re-raised on :meth:`submit`
+    or, at the latest, :meth:`close` -- the reader is unblocked by the
+    owner closing the transport."""
+
+    _DONE = object()
+
+    def __init__(self, transport: Transport, codec: Codec, depth: int = 2):
+        self._transport = transport
+        self._codec = codec
+        self._q: "queue.Queue" = queue.Queue(maxsize=max(1, depth))
+        self.busy_s = 0.0   # sender-thread time spent compressing/sending
+        self.wait_s = 0.0   # producer time blocked on the bounded queue
+        self.error: Optional[BaseException] = None
+        self._thread = threading.Thread(
+            target=self._run, name="pipegen-sender", daemon=True
+        )
+        self._thread.start()
+
+    def submit(self, kind: bytes, segs: SegmentList, compress: bool = True) -> None:
+        if self.error is not None:
+            raise self.error
+        try:
+            self._q.put_nowait((kind, segs, compress))
+        except queue.Full:
+            # only genuine backpressure counts as wait (an uncontended put
+            # costs microseconds and would drown the overlap signal)
+            t0 = time.perf_counter()
+            self._q.put((kind, segs, compress))
+            self.wait_s += time.perf_counter() - t0
+
+    def _run(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is self._DONE:
+                return
+            kind, segs, compress = item
+            if self.error is not None:
+                segs.release()  # drain so the producer never blocks
+                continue
+            t0 = time.perf_counter()
+            try:
+                if compress:
+                    segs = self._codec.compress_segments(segs)
+                self._transport.send_frames(kind, segs)
+            except BaseException as e:  # noqa: BLE001 - latched, re-raised
+                self.error = e
+            finally:
+                segs.release()  # recycle pooled stores on success AND error
+                self.busy_s += time.perf_counter() - t0
+
+    def close(self) -> None:
+        """Drain, join, and surface any latched send error."""
+        self._q.put(self._DONE)
+        self._thread.join()
+        if self.error is not None:
+            raise self.error
+
+    @property
+    def overlap_s(self) -> float:
+        return max(0.0, self.busy_s - self.wait_s)
 
 
 class DataPipeOutput:
@@ -163,6 +273,14 @@ class DataPipeOutput:
         self.stats = PipeStats()
         self.closed = False
         self._verify_rows: List[tuple] = []
+        # validate codec/format before any rendezvous so a bad config fails
+        # fast instead of leaving a half-registered peer behind
+        self._codec: Codec = get_codec(self.config.codec)
+        self._wire = (
+            get_wire_format(self.config.mode)
+            if self.config.mode not in ("text", "parts", "bytes")
+            else None
+        )
         directory = directory or get_directory()
         if endpoint is None:
             endpoint = directory.query(
@@ -172,11 +290,12 @@ class DataPipeOutput:
                 timeout=self.config.connect_timeout,
             )
         self._transport = _connect(endpoint, self.config.link)
-        self._wire = (
-            get_wire_format(self.config.mode)
-            if self.config.mode not in ("text", "parts", "bytes")
-            else None
-        )
+        self._pool = _PoolHandle(self.config.pool or default_pool())
+        self._sender: Optional[_PipelinedSender] = None
+        if self.config.pipelined:
+            self._sender = _PipelinedSender(
+                self._transport, self._codec, self.config.sender_depth
+            )
         self._parts_wire = PartsRowsFormat()
         self._text_buf: List[str] = []
         self._text_len = 0
@@ -191,7 +310,6 @@ class DataPipeOutput:
                 self._asm._sampling = False
         self._schema_sent = False
         self._schema: Optional[Schema] = None
-        self._codec: Codec = get_codec(self.config.codec)
         self._byte_buf: List[bytes] = []
         self._byte_len = 0
         if self.config.mode in ("text", "bytes"):
@@ -238,6 +356,7 @@ class DataPipeOutput:
     def close(self) -> None:
         if self.closed:
             return
+        sender_err: Optional[BaseException] = None
         try:
             if self.config.mode == "text":
                 self._flush_text()
@@ -247,12 +366,24 @@ class DataPipeOutput:
                 self._flush_parts(final=True)
             else:
                 self._flush_rows(final=True)
-            self._transport.send_frame(FRAME_EOF, b"")
+            self._send(FRAME_EOF, SegmentList([b""]), compress=False)
         finally:
             self.closed = True
+            if self._sender is not None:
+                try:
+                    self._sender.close()
+                except BaseException as e:  # noqa: BLE001 - re-raised below
+                    sender_err = e
+                self.stats.send_overlap_s = self._sender.overlap_s
             self.stats.bytes_sent = self._transport.bytes_sent
             self.stats.frames_sent = self._transport.frames_sent
+            self.stats.pool_hits = self._pool.hits
+            self.stats.pool_misses = self._pool.misses
+            # always close the transport -- a sender failure must not leave
+            # the reader blocked on a half-open stream
             self._transport.close()
+        if sender_err is not None:
+            raise sender_err
 
     def __enter__(self) -> "DataPipeOutput":
         return self
@@ -260,13 +391,33 @@ class DataPipeOutput:
     def __exit__(self, *exc) -> None:
         self.close()
 
+    # -- frame egress (all rungs funnel through here) ------------------------------
+    def _send(self, kind: bytes, segs: SegmentList, compress: bool = True) -> None:
+        """Route one frame out: codec at the segment level (data frames
+        only -- schema/verify/EOF travel uncompressed), then either the
+        double-buffered sender thread (pipelined) or an inline vectored
+        send.  ``scatter_gather=False`` re-materializes the payload first,
+        reproducing the seed path's concatenate-then-send copy profile."""
+        if not self.config.scatter_gather:
+            payload = segs.join()
+            segs.release()
+            segs = SegmentList([payload])
+        self.stats.copies_avoided += segs.copies_avoided
+        if self._sender is not None:
+            self._sender.submit(kind, segs, compress)
+            return
+        if compress:
+            segs = self._codec.compress_segments(segs)
+        self._transport.send_frames(kind, segs)
+        segs.release()
+
     # -- text rung ---------------------------------------------------------------
     def _flush_text(self) -> None:
         if not self._text_buf:
             return
         payload = "".join(self._text_buf).encode("utf-8", "surrogatepass")
         self._text_buf, self._text_len = [], 0
-        self._transport.send_frame(FRAME_TEXT, self._codec.compress(payload))
+        self._send(FRAME_TEXT, SegmentList([payload]))
 
     # -- bytes rung (shared-binary-format passthrough, e.g. seqfiles) --------------
     def _flush_bytes(self) -> None:
@@ -274,7 +425,7 @@ class DataPipeOutput:
             return
         payload = b"".join(self._byte_buf)
         self._byte_buf, self._byte_len = [], 0
-        self._transport.send_frame(FRAME_TEXT, self._codec.compress(payload))
+        self._send(FRAME_TEXT, SegmentList([payload]))
 
     # -- parts rung (binary primitives, delimiters retained) ----------------------
     def _write_parts(self, s: Any) -> None:
@@ -298,10 +449,10 @@ class DataPipeOutput:
             return
         if not self._schema_sent:
             self._send_schema(Schema([]))
-        payload = self._parts_wire.encode_parts(self._part_rows)
+        segs = self._parts_wire.encode_parts(self._part_rows, pool=self._pool)
         self.stats.rows += len(self._part_rows)
         self._part_rows = []
-        self._transport.send_frame(FRAME_PARTS, self._codec.compress(payload))
+        self._send(FRAME_PARTS, segs)
         self.stats.blocks += 1
 
     # -- typed-rows rungs ----------------------------------------------------------
@@ -321,23 +472,108 @@ class DataPipeOutput:
         if self._schema is None:
             self._schema = rb.schema
             self._send_schema(rb.schema)
+        elif rb.schema.types != self._schema.types:
+            # a write_block already fixed the stream schema; text rows of a
+            # different shape would decode against the wrong layout
+            raise ValueError(
+                f"serialized rows schema {rb.schema!r} does not match the "
+                f"stream schema {self._schema!r} already negotiated"
+            )
         block = rb.to_columns()  # section 5.4 pivot
         if self.config.verify_first_n and len(self._verify_rows) < self.config.verify_first_n:
             take = self.config.verify_first_n - len(self._verify_rows)
             self._verify_rows.extend(rb.rows[:take])
             self._send_verify(RowBlock(rb.schema, rb.rows[:take]))
-        payload = self._wire.encode_block(block)
-        self._transport.send_frame(FRAME_BLOCK, self._codec.compress(payload))
+        segs = self._wire.encode_block(block, pool=self._pool)
+        self._send(FRAME_BLOCK, segs)
         self.stats.rows += len(block)
         self.stats.blocks += 1
 
-    def _send_schema(self, schema: Schema) -> None:
+    # -- typed block fast path (decorated exporters, fig. 11 'full PipeGen') ------
+    def accepts_blocks(self) -> bool:
+        """True when whole ColumnBlocks can bypass the text serializer."""
+        return (
+            self.config.block_export
+            and self.config.mode not in ("text", "parts", "bytes")
+            and not self.closed
+        )
+
+    def write_block(
+        self,
+        block: ColumnBlock,
+        header: Optional[Sequence[str]] = None,
+        delimiter: Optional[str] = None,
+    ) -> int:
+        """Export one typed ColumnBlock directly -- the exporter-side twin
+        of the importer's block fast path: no text rendering, no AString
+        assembly, no row pivot.  ``header``/``delimiter`` feed the schema
+        frame meta so undecorated importers can still regenerate the text
+        dialect byte-for-byte.
+
+        Zero-copy ownership contract: fixed-width columns go on the wire
+        as views of ``block``'s live numpy buffers, and with
+        ``pipelined=True`` the send completes asynchronously -- the caller
+        must not mutate the block's columns until :meth:`close` returns
+        (engines hand over stored, immutable blocks, so this holds by
+        construction on every generated-adapter path)."""
+        if self.closed:
+            raise ValueError("write to closed data pipe")
+        if not self.accepts_blocks():
+            raise ValueError(
+                f"mode {self.config.mode!r} cannot carry typed blocks"
+            )
+        self._flush_rows()  # keep ordering with any interleaved text writes
+        if self._schema is not None and block.schema.types != self._schema.types:
+            # the stream schema traveled once, up front; a block with
+            # different column types would be decoded against the wrong
+            # layout on the reader (silent corruption at same width)
+            raise ValueError(
+                f"write_block schema {block.schema!r} does not match the "
+                f"stream schema {self._schema!r} already negotiated"
+            )
+        if self._schema is None:
+            self._schema = block.schema
+            if delimiter is not None and isinstance(self._asm, DelimitedAssembler):
+                self._asm.delimiter = delimiter
+                self._asm._sampling = False
+            self._send_schema(block.schema, header_names=header)
+        n = len(block)
+        rows_per_sub = self.config.block_rows
+        for lo in range(0, n, rows_per_sub):
+            sub = (
+                block
+                if n <= rows_per_sub
+                else ColumnBlock(
+                    block.schema,
+                    [c[lo : lo + rows_per_sub] for c in block.columns],
+                )
+            )
+            if (
+                self.config.verify_first_n
+                and len(self._verify_rows) < self.config.verify_first_n
+            ):
+                rb = sub.to_rows()
+                take = self.config.verify_first_n - len(self._verify_rows)
+                self._verify_rows.extend(rb.rows[:take])
+                self._send_verify(RowBlock(rb.schema, rb.rows[:take]))
+            segs = self._wire.encode_block(sub, pool=self._pool)
+            self._send(FRAME_BLOCK, segs)
+            self.stats.rows += len(sub)
+            self.stats.blocks += 1
+        return n
+
+    def _send_schema(
+        self, schema: Schema, header_names: Optional[Sequence[str]] = None
+    ) -> None:
         meta = self.config.meta()
         if isinstance(self._asm, DelimitedAssembler) and self._asm.delimiter:
             meta["delimiter"] = self._asm.delimiter
-        if getattr(self._asm, "header_names", None):
+        if header_names:
+            meta["header"] = list(header_names)
+        elif getattr(self._asm, "header_names", None):
             meta["header"] = list(self._asm.header_names)
-        self._transport.send_frame(FRAME_SCHEMA, encode_schema(schema, meta))
+        self._send(FRAME_SCHEMA, SegmentList([encode_schema(schema, meta)]),
+                   compress=False)
         self._schema_sent = True
 
     def _send_verify(self, rb: RowBlock) -> None:
@@ -347,7 +583,8 @@ class DataPipeOutput:
             text = render_json(rb)
         else:
             text = render_delimited(rb, self._asm.delimiter or ",")
-        self._transport.send_frame(FRAME_VERIFY, text.encode("utf-8"))
+        self._send(FRAME_VERIFY, SegmentList([text.encode("utf-8")]),
+                   compress=False)
 
 
 class DataPipeInput:

@@ -1,0 +1,275 @@
+"""Zero-copy I/O buffer subsystem for the transfer hot path.
+
+The paper's speedup over text rests on *not* re-materializing data on the
+way to the wire (fig. 14's preallocated ArrowBufs).  This module provides
+the three pieces the encode->frame->send path needs to hit that standard:
+
+* :class:`BufferPool` -- size-classed pools of reusable ``bytearray``
+  backing stores.  Encoders acquire a :class:`PooledBuf`, fill it, and the
+  transport releases it back after the frame is on the wire, so steady-state
+  block traffic allocates nothing.
+* :class:`SegmentList` -- the scatter-gather unit: an ordered sequence of
+  buffer views (``bytes``/``memoryview``/numpy buffers) that is sent with
+  one vectored ``sendmsg`` instead of being concatenated.  It tracks which
+  segments are pool-owned so they can be recycled exactly once, and counts
+  the copies the view-based path avoided.
+* :class:`BufWriter` -- an append-only writer over a pooled buffer for the
+  row-major formats (``binary_rows``, ``tagged``, ``parts_rows``) whose
+  output is inherently built piecewise; it replaces the per-block
+  ``b"".join(out)`` allocate-and-copy with reuse of one pooled store.
+
+Pool size classes are powers of two between ``MIN_CLASS`` and
+``MAX_CLASS``; requests above the largest class fall through to plain
+allocation (counted as misses) so pathological blocks cannot pin huge
+buffers forever.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+from typing import Iterator, List, Optional, Sequence, Union
+
+__all__ = [
+    "BufferPool",
+    "BufWriter",
+    "PoolStats",
+    "PooledBuf",
+    "SegmentList",
+    "default_pool",
+]
+
+Buffer = Union[bytes, bytearray, memoryview]
+
+MIN_CLASS = 1 << 10   # 1 KiB: below this, allocation is cheaper than pooling
+MAX_CLASS = 1 << 24   # 16 MiB: largest buffer the pool will retain
+MAX_PER_CLASS = 8     # retained buffers per size class (double-buffering x4)
+
+
+@dataclass
+class PoolStats:
+    hits: int = 0             # acquires served from a retained buffer
+    misses: int = 0           # acquires that had to allocate
+    releases: int = 0
+    bytes_served: int = 0     # requested bytes across all acquires
+    bytes_retained: int = 0   # currently parked in the pool
+
+    def snapshot(self) -> dict:
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "releases": self.releases,
+            "bytes_served": self.bytes_served,
+            "bytes_retained": self.bytes_retained,
+        }
+
+
+class PooledBuf:
+    """A leased backing store: a ``bytearray`` of one size class, of which
+    the first ``nbytes`` are meaningful for the current lease."""
+
+    __slots__ = ("store", "nbytes", "was_hit", "_pool")
+
+    def __init__(self, store: bytearray, nbytes: int, pool: Optional["BufferPool"],
+                 was_hit: bool = False):
+        self.store = store
+        self.nbytes = nbytes
+        self.was_hit = was_hit  # served from a retained store (for attribution)
+        self._pool = pool
+
+    def view(self, n: Optional[int] = None) -> memoryview:
+        """Writable view of the first ``n`` (default: leased) bytes."""
+        return memoryview(self.store)[: self.nbytes if n is None else n]
+
+    def release(self) -> None:
+        if self._pool is not None:
+            pool, self._pool = self._pool, None
+            pool._release(self)
+
+
+class BufferPool:
+    """Thread-safe size-classed pool of reusable bytearrays (fig. 14's
+    preallocated ArrowBufs, generalized to every wire format)."""
+
+    def __init__(self, max_per_class: int = MAX_PER_CLASS):
+        self.max_per_class = max_per_class
+        self.stats = PoolStats()
+        self._lock = threading.Lock()
+        self._classes: dict = {}  # class size -> list[bytearray]
+
+    @staticmethod
+    def _class_for(nbytes: int) -> Optional[int]:
+        if nbytes > MAX_CLASS:
+            return None
+        c = MIN_CLASS
+        while c < nbytes:
+            c <<= 1
+        return c
+
+    def acquire(self, nbytes: int) -> PooledBuf:
+        """Lease a buffer with at least ``nbytes`` of room."""
+        cls = self._class_for(max(nbytes, 1))
+        with self._lock:
+            self.stats.bytes_served += nbytes
+            free = self._classes.get(cls)
+            if cls is not None and free:
+                store = free.pop()
+                self.stats.hits += 1
+                self.stats.bytes_retained -= len(store)
+                return PooledBuf(store, nbytes, self, was_hit=True)
+            self.stats.misses += 1
+        return PooledBuf(bytearray(cls or nbytes), nbytes, self)
+
+    def _release(self, buf: PooledBuf) -> None:
+        store = buf.store
+        cls = len(store)
+        if cls < MIN_CLASS or cls > MAX_CLASS or cls & (cls - 1):
+            return  # not one of ours (oversize or foreign) -- let GC have it
+        with self._lock:
+            self.stats.releases += 1
+            free = self._classes.setdefault(cls, [])
+            if len(free) < self.max_per_class:
+                free.append(store)
+                self.stats.bytes_retained += cls
+
+    def clear(self) -> None:
+        with self._lock:
+            self._classes.clear()
+            self.stats.bytes_retained = 0
+
+
+_default_pool: Optional[BufferPool] = None
+_default_lock = threading.Lock()
+
+
+def default_pool() -> BufferPool:
+    """Process-wide pool shared by pipes that don't bring their own."""
+    global _default_pool
+    if _default_pool is None:
+        with _default_lock:
+            if _default_pool is None:
+                _default_pool = BufferPool()
+    return _default_pool
+
+
+class SegmentList:
+    """An encoded payload as an ordered list of buffer views.
+
+    This is what :meth:`WireFormat.encode_block` now returns: the transport
+    sends the segments with one vectored syscall, then calls
+    :meth:`release` to recycle any pool-owned backing stores.  ``join`` is
+    the compatibility/copy path (codecs that need contiguous input, tests).
+    """
+
+    __slots__ = ("segments", "_pooled", "copies_avoided")
+
+    def __init__(self, segments: Optional[Sequence[Buffer]] = None):
+        self.segments: List[Buffer] = list(segments) if segments else []
+        self._pooled: List[PooledBuf] = []
+        # number of segments that went on the wire as views of live memory
+        # (numpy column buffers, pooled stores) instead of fresh copies
+        self.copies_avoided = 0
+
+    # -- construction ----------------------------------------------------------
+    def append(self, seg: Buffer, zero_copy: bool = False) -> None:
+        self.segments.append(seg)
+        if zero_copy:
+            self.copies_avoided += 1
+
+    def append_pooled(self, buf: PooledBuf) -> None:
+        """Append the leased prefix of a pooled buffer; the buffer is
+        recycled when this SegmentList is released."""
+        self.segments.append(buf.view())
+        self._pooled.append(buf)
+        self.copies_avoided += 1
+
+    def adopt(self, buf: PooledBuf) -> None:
+        """Take ownership of a pooled buffer without appending a segment
+        (used when a view of it was already appended piecewise)."""
+        self._pooled.append(buf)
+
+    # -- sequence protocol ------------------------------------------------------
+    def __iter__(self) -> Iterator[Buffer]:
+        return iter(self.segments)
+
+    def __len__(self) -> int:
+        return len(self.segments)
+
+    def __getitem__(self, i):
+        return self.segments[i]
+
+    @property
+    def nbytes(self) -> int:
+        return sum(_seg_len(s) for s in self.segments)
+
+    # -- materialization & recycling -------------------------------------------
+    def join(self) -> bytes:
+        """Contiguous copy of the payload (compat path; defeats zero-copy)."""
+        if len(self.segments) == 1:
+            return bytes(self.segments[0])
+        return b"".join(bytes(s) for s in self.segments)
+
+    def release(self) -> None:
+        """Recycle pool-owned stores.  The views in ``segments`` are dead
+        after this call; only invoke once the payload is on the wire."""
+        pooled, self._pooled = self._pooled, []
+        self.segments = []
+        for buf in pooled:
+            buf.release()
+
+
+def _seg_len(s: Buffer) -> int:
+    if isinstance(s, memoryview):
+        return s.nbytes
+    return len(s)
+
+
+class BufWriter:
+    """Append-only writer over a pooled backing store.
+
+    Row-major formats build their payload out of many small pieces; writing
+    them straight into one reused store replaces the seed path's
+    list-of-bytes + ``b"".join`` (one alloc + full copy per block).
+    Grows geometrically through the pool's size classes when the initial
+    hint is too small.
+    """
+
+    __slots__ = ("_pool", "_buf", "_len")
+
+    def __init__(self, pool: Optional[BufferPool] = None, size_hint: int = MIN_CLASS):
+        self._pool = pool or default_pool()
+        self._buf = self._pool.acquire(size_hint)
+        self._len = 0
+
+    def write(self, data: Buffer) -> None:
+        n = _seg_len(data)
+        need = self._len + n
+        store = self._buf.store
+        if need > len(store):
+            grown = self._pool.acquire(max(need, len(store) * 2))
+            grown.store[: self._len] = store[: self._len]
+            self._buf.release()
+            self._buf = grown
+            store = grown.store
+        store[self._len : need] = data
+        self._len = need
+
+    def pack_into(self, st, *vals) -> None:
+        """``struct.Struct.pack_into`` directly into the store (no temp)."""
+        need = self._len + st.size
+        if need > len(self._buf.store):
+            self.write(b"\x00" * st.size)  # grow, then overwrite in place
+            self._len = need - st.size
+        st.pack_into(self._buf.store, self._len, *vals)
+        self._len = need
+
+    def __len__(self) -> int:
+        return self._len
+
+    def detach(self) -> SegmentList:
+        """Finish: one pooled segment holding everything written."""
+        self._buf.nbytes = self._len
+        out = SegmentList()
+        out.append_pooled(self._buf)
+        self._buf = None  # type: ignore[assignment]
+        return out

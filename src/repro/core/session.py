@@ -154,8 +154,12 @@ def transfer(
         times["export"] = time.perf_counter() - t0
 
     t0 = time.perf_counter()
-    ti = threading.Thread(target=run_import, name=f"pipegen-import-{qid}")
-    te = threading.Thread(target=run_export, name=f"pipegen-export-{qid}")
+    # daemon: a failed peer must not pin the process on an orphaned
+    # accept/recv (the surviving side times out on its own)
+    ti = threading.Thread(target=run_import, name=f"pipegen-import-{qid}",
+                          daemon=True)
+    te = threading.Thread(target=run_export, name=f"pipegen-export-{qid}",
+                          daemon=True)
     ti.start()
     te.start()
     ti.join(timeout)

@@ -10,10 +10,18 @@ Frame layout on the wire: 1-byte kind + uint32 little-endian payload length
     V  verification payload (probabilistic runtime check, section 4.1)
     E  end of stream
 
-``LinkSim`` emulates a WAN link for the fig. 15 compression study: each
-frame send sleeps ``latency + len/bandwidth`` (the paper injected 40 ms into
-the adapter; we model the resulting per-message cost directly since both
-ends share one host here).
+Scatter-gather send path: :meth:`Transport.send_frames` takes the payload
+as a sequence of buffer views (a :class:`~repro.core.iobuf.SegmentList`)
+and puts header + segments on the wire with vectored ``socket.sendmsg`` --
+no intermediate concatenation.  :meth:`send_frame` remains as the
+single-buffer convenience wrapper.
+
+``LinkSim`` emulates a WAN link for the fig. 15 compression study.  Both
+transports charge the *full framed size* (header + payload) to the link.
+Sleeping is deficit-based and coalesced per transport: owed delay
+accumulates and is slept off only once it crosses ``LinkSim.min_sleep_s``,
+with actual (over)sleep measured and credited back -- many small frames no
+longer oversleep by a scheduler quantum each.
 """
 
 from __future__ import annotations
@@ -24,7 +32,9 @@ import struct
 import threading
 import time
 from dataclasses import dataclass
-from typing import Optional, Tuple
+from typing import Iterable, Optional, Tuple
+
+from .iobuf import Buffer, _seg_len
 
 __all__ = [
     "FRAME_SCHEMA",
@@ -50,6 +60,16 @@ FRAME_EOF = b"E"
 
 _HEADER = struct.Struct("<cI")
 
+# iovecs per sendmsg call: the platform limit when it exposes one (Linux:
+# 1024), else the POSIX floor of 16
+try:
+    import os as _os
+
+    _iov = _os.sysconf("SC_IOV_MAX")
+    _IOV_MAX = _iov if _iov > 0 else 1024  # -1 = indeterminate/no limit
+except (AttributeError, OSError, ValueError):  # pragma: no cover
+    _IOV_MAX = 16
+
 
 @dataclass
 class LinkSim:
@@ -57,6 +77,7 @@ class LinkSim:
 
     latency_s: float = 0.0
     bandwidth_bps: float = 0.0  # 0 = unlimited
+    min_sleep_s: float = 0.002  # coalesce owed delay below this threshold
 
     def delay(self, nbytes: int) -> float:
         d = self.latency_s
@@ -66,7 +87,16 @@ class LinkSim:
 
 
 class Transport:
-    def send_frame(self, kind: bytes, payload: bytes) -> None:
+    bytes_sent: int = 0
+    frames_sent: int = 0
+    link: Optional[LinkSim] = None
+    _link_debt: float = 0.0
+
+    def send_frame(self, kind: bytes, payload: Buffer) -> None:
+        self.send_frames(kind, (payload,))
+
+    def send_frames(self, kind: bytes, segments: Iterable[Buffer]) -> None:
+        """Send one frame whose payload is scattered across ``segments``."""
         raise NotImplementedError
 
     def recv_frame(self) -> Tuple[bytes, bytes]:
@@ -75,8 +105,18 @@ class Transport:
     def close(self) -> None:
         pass
 
-    bytes_sent: int = 0
-    frames_sent: int = 0
+    # -- simulated-link accounting (shared by all transports) -------------------
+    def _charge_link(self, framed_bytes: int) -> None:
+        """Deficit-based coalesced sleep: accumulate owed delay; sleep only
+        past the threshold and credit back the measured (over)sleep."""
+        link = self.link
+        if link is None:
+            return
+        self._link_debt += link.delay(framed_bytes)
+        if self._link_debt >= link.min_sleep_s:
+            t0 = time.perf_counter()
+            time.sleep(self._link_debt)
+            self._link_debt -= time.perf_counter() - t0
 
 
 class SocketTransport(Transport):
@@ -84,18 +124,46 @@ class SocketTransport(Transport):
         self.sock = sock
         self.sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
         self.link = link
+        self._link_debt = 0.0
         self.bytes_sent = 0
         self.frames_sent = 0
         self._rfile = sock.makefile("rb", buffering=1 << 20)
 
-    def send_frame(self, kind: bytes, payload: bytes) -> None:
-        if self.link is not None:
-            d = self.link.delay(len(payload) + _HEADER.size)
-            if d > 0:
-                time.sleep(d)
-        self.sock.sendall(_HEADER.pack(kind, len(payload)) + payload)
-        self.bytes_sent += len(payload) + _HEADER.size
+    def send_frames(self, kind: bytes, segments: Iterable[Buffer]) -> None:
+        # flatten to byte-addressable views once; header is its own iovec,
+        # so no header+payload concatenation happens anywhere
+        iov = []
+        payload_len = 0
+        for seg in segments:
+            n = _seg_len(seg)
+            if n == 0:
+                continue
+            mv = seg if isinstance(seg, memoryview) else memoryview(seg)
+            if mv.format != "B" or mv.ndim != 1:
+                mv = mv.cast("B")
+            iov.append(mv)
+            payload_len += n
+        iov.insert(0, memoryview(_HEADER.pack(kind, payload_len)))
+        total = payload_len + _HEADER.size
+        self._charge_link(total)
+        self._sendmsg_all(iov, total)
+        self.bytes_sent += total
         self.frames_sent += 1
+
+    def _sendmsg_all(self, iov, total: int) -> None:
+        """Vectored send with partial-write and IOV_MAX handling."""
+        sent_total = 0
+        while iov:
+            sent = self.sock.sendmsg(iov[:_IOV_MAX])
+            sent_total += sent
+            # drop fully-sent views, trim a partially-sent head
+            while iov and sent >= iov[0].nbytes:
+                sent -= iov[0].nbytes
+                iov.pop(0)
+            if sent and iov:
+                iov[0] = iov[0][sent:]
+        if sent_total != total:  # pragma: no cover - defensive
+            raise IOError(f"short vectored send: {sent_total}/{total}")
 
     def recv_frame(self) -> Tuple[bytes, bytes]:
         hdr = self._rfile.read(_HEADER.size)
@@ -131,21 +199,34 @@ class ChannelTransport(Transport):
     def __init__(self, channel: Channel, link: Optional[LinkSim] = None):
         self.channel = channel
         self.link = link
+        self._link_debt = 0.0
         self.bytes_sent = 0
         self.frames_sent = 0
 
-    def send_frame(self, kind: bytes, payload: bytes) -> None:
-        if self.link is not None:
-            d = self.link.delay(len(payload) + _HEADER.size)
-            if d > 0:
-                time.sleep(d)
+    def send_frames(self, kind: bytes, segments: Iterable[Buffer]) -> None:
+        # the queue hands the payload to another thread that may consume it
+        # after our pooled buffers are recycled, so materialize exactly once
+        segs = list(segments)
+        if len(segs) == 1:
+            payload = bytes(segs[0])
+        else:
+            payload = b"".join(bytes(s) for s in segs)
+        # charge the framed size (header included), matching SocketTransport
+        self._charge_link(len(payload) + _HEADER.size)
         self.channel.q.put((kind, payload))
         self.bytes_sent += len(payload) + _HEADER.size
         self.frames_sent += 1
 
     def recv_frame(self) -> Tuple[bytes, bytes]:
-        kind, payload = self.channel.q.get()
-        return kind, payload
+        # wake up on channel close even if the peer died without an EOF
+        # frame (the socket analog gets this for free from the FIN);
+        # queued frames are still drained before the synthetic EOF
+        while True:
+            try:
+                return self.channel.q.get(timeout=0.2)
+            except queue.Empty:
+                if self.channel.closed.is_set():
+                    return FRAME_EOF, b""
 
     def close(self) -> None:
         self.channel.closed.set()

@@ -1,9 +1,15 @@
 """Arrow-analog wire formats (paper sections 5.4 and 7.3).
 
 ``arrowcol`` -- columnar: each fixed-width column is one contiguous
-little-endian buffer (a single memcpy from the numpy array); string columns
-are an int32 offsets vector plus a utf8 heap.  This is PipeGen's default
-wire format and the fastest in the paper's comparison.
+little-endian buffer; string columns are an int32 offsets vector plus a
+utf8 heap.  This is PipeGen's default wire format and the fastest in the
+paper's comparison.
+
+Zero-copy encode: fixed-width columns go on the wire as *views* of the
+live numpy buffers (no ``tobytes`` copy); string offsets are computed
+directly into a pooled store.  The encoded block is a
+:class:`~repro.core.iobuf.SegmentList` the transport scatter-gathers with
+one vectored syscall.
 
 ``arrowrow`` -- the row-oriented counterpart: the same typed buffers but
 interleaved row-major via a numpy structured array.  Still vectorized, but
@@ -20,12 +26,38 @@ Block layout (arrowcol):
 from __future__ import annotations
 
 import struct
-from typing import List
+from typing import List, Optional
 
 import numpy as np
 
+from ..iobuf import BufferPool, SegmentList, default_pool
 from ..types import ColType, ColumnBlock, Schema
 from .base import WireFormat, register_wire_format
+
+
+def _encode_string_col(col, n: int, pool: BufferPool, out: SegmentList) -> None:
+    """Append offsets + heap segments for one string column.
+
+    Single pass: each string is encoded exactly once; lengths fall out of
+    the encoded parts (no second length-scan, no ascii re-check).  Offsets
+    are cumsummed straight into a pooled int32 store.
+    """
+    bparts: List[bytes] = [s.encode("utf-8", "surrogatepass") for s in col]
+    off_buf = pool.acquire(4 * (n + 1))
+    offsets = np.frombuffer(off_buf.store, np.int32, n + 1)
+    offsets[0] = 0
+    if n:
+        lens = np.fromiter(map(len, bparts), np.int32, count=n)
+        np.cumsum(lens, out=offsets[1:])
+    out.append_pooled(off_buf)
+    out.append(b"".join(bparts))
+
+
+def _fixed_col_view(col, dtype: np.dtype, out: SegmentList) -> None:
+    """Append a fixed-width column as a view of its live buffer when the
+    engine already holds it in wire layout (the common case)."""
+    a = np.ascontiguousarray(col, dtype=dtype)
+    out.append(a.data, zero_copy=a is col)
 
 
 @register_wire_format
@@ -36,31 +68,22 @@ class ArrowColFormat(WireFormat):
         # preallocated per-column ArrowBuf size, paper fig. 14
         self.buffer_rows = buffer_rows
 
-    def encode_block(self, block: ColumnBlock) -> bytes:
+    def encode_block(
+        self, block: ColumnBlock, pool: Optional[BufferPool] = None
+    ) -> SegmentList:
+        pool = pool or default_pool()
         n = len(block)
-        out: List[bytes] = [struct.pack("<I", n)]
+        out = SegmentList([struct.pack("<I", n)])
         for f, col in zip(block.schema, block.columns):
             if f.type is ColType.STRING:
-                heap = "".join(col).encode("utf-8", "surrogatepass")
-                lens = np.fromiter(
-                    (len(s.encode("utf-8", "surrogatepass")) for s in col),
-                    dtype=np.int32,
-                    count=n,
-                )
-                # fast path: pure-ascii heap lets us avoid re-encoding each
-                # string for its length
-                if len(heap) == sum(len(s) for s in col):
-                    lens = np.fromiter((len(s) for s in col), np.int32, count=n)
-                offsets = np.zeros(n + 1, dtype=np.int32)
-                np.cumsum(lens, out=offsets[1:])
-                out.append(offsets.tobytes())
-                out.append(heap)
+                _encode_string_col(col, n, pool, out)
             else:
-                a = np.ascontiguousarray(col, dtype=f.type.np_dtype)
-                out.append(a.tobytes())
-        return b"".join(out)
+                _fixed_col_view(col, f.type.np_dtype, out)
+        return out
 
     def decode_block(self, data: bytes, schema: Schema) -> ColumnBlock:
+        if not isinstance(data, bytes):
+            data = bytes(data)
         (n,) = struct.unpack_from("<I", data, 0)
         off = 4
         cols: List = []
@@ -99,7 +122,10 @@ class ArrowRowFormat(WireFormat):
 
     name = "arrowrow"
 
-    def encode_block(self, block: ColumnBlock) -> bytes:
+    def encode_block(
+        self, block: ColumnBlock, pool: Optional[BufferPool] = None
+    ) -> SegmentList:
+        pool = pool or default_pool()
         n = len(block)
         fixed = [
             (i, f) for i, f in enumerate(block.schema) if f.type.is_fixed_width
@@ -107,7 +133,7 @@ class ArrowRowFormat(WireFormat):
         strings = [
             (i, f) for i, f in enumerate(block.schema) if not f.type.is_fixed_width
         ]
-        out: List[bytes] = [struct.pack("<I", n)]
+        out = SegmentList([struct.pack("<I", n)])
         if fixed:
             dt = np.dtype(
                 [(f"f{i}", f.type.np_dtype.newbyteorder("<")) for i, f in fixed]
@@ -115,22 +141,16 @@ class ArrowRowFormat(WireFormat):
             rec = np.empty(n, dtype=dt)
             for (i, f) in fixed:
                 rec[f"f{i}"] = block.columns[i]
-            out.append(rec.tobytes())
+            # the gather into rec is the only copy; the record buffer itself
+            # goes out as a view
+            out.append(rec.data, zero_copy=True)
         for i, f in strings:
-            col = block.columns[i]
-            heap = "".join(col).encode("utf-8", "surrogatepass")
-            lens = np.fromiter(
-                (len(s.encode("utf-8", "surrogatepass")) for s in col),
-                dtype=np.int32,
-                count=n,
-            )
-            offsets = np.zeros(n + 1, dtype=np.int32)
-            np.cumsum(lens, out=offsets[1:])
-            out.append(offsets.tobytes())
-            out.append(heap)
-        return b"".join(out)
+            _encode_string_col(block.columns[i], n, pool, out)
+        return out
 
     def decode_block(self, data: bytes, schema: Schema) -> ColumnBlock:
+        if not isinstance(data, bytes):
+            data = bytes(data)
         (n,) = struct.unpack_from("<I", data, 0)
         off = 4
         fixed = [(i, f) for i, f in enumerate(schema) if f.type.is_fixed_width]

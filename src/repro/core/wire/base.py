@@ -1,10 +1,22 @@
-"""Wire format interface + schema frame codec."""
+"""Wire format interface + schema frame codec.
+
+Contract (zero-copy scatter-gather): :meth:`WireFormat.encode_block`
+returns a :class:`~repro.core.iobuf.SegmentList` -- an ordered list of
+buffer views over live column memory and pooled stores -- NOT one
+concatenated ``bytes``.  The transport sends the segments with a single
+vectored syscall and then releases them back to the buffer pool.  Callers
+that genuinely need contiguous bytes (compressing codecs, tests) use
+``SegmentList.join()`` and pay for the copy explicitly.
+
+:meth:`WireFormat.decode_block` accepts any contiguous bytes-like object.
+"""
 
 from __future__ import annotations
 
 import json
-from typing import Dict, Type
+from typing import Dict, Optional, Type
 
+from ..iobuf import BufferPool, SegmentList
 from ..types import ColumnBlock, Schema
 
 __all__ = [
@@ -23,7 +35,11 @@ class WireFormat:
 
     name: str = "abstract"
 
-    def encode_block(self, block: ColumnBlock) -> bytes:
+    def encode_block(
+        self, block: ColumnBlock, pool: Optional[BufferPool] = None
+    ) -> SegmentList:
+        """Encode ``block`` into a list of buffer views.  ``pool`` supplies
+        reusable backing stores; ``None`` uses the process-default pool."""
         raise NotImplementedError
 
     def decode_block(self, data: bytes, schema: Schema) -> ColumnBlock:
@@ -41,7 +57,7 @@ def encode_schema(schema: Schema, meta: dict | None = None) -> bytes:
 
 
 def decode_schema(data: bytes) -> tuple:
-    doc = json.loads(data.decode("utf-8"))
+    doc = json.loads(bytes(data).decode("utf-8"))
     return Schema.from_dict(doc["schema"]), doc.get("meta", {})
 
 

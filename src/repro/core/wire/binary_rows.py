@@ -8,16 +8,18 @@ Schema travels in the stream's schema frame; each block is:
 
 Deliberately row-major with a per-row pack loop: this is the paper's
 "basic custom format" rung, faster than text but slower than the
-column-pivoted Arrow analog.
+column-pivoted Arrow analog.  The pack loop now writes straight into a
+pooled store (no per-block list-of-bytes + join allocation).
 """
 
 from __future__ import annotations
 
 import struct
-from typing import List
+from typing import List, Optional
 
 import numpy as np
 
+from ..iobuf import BufferPool, BufWriter, SegmentList
 from ..types import ColType, ColumnBlock, Schema
 from .base import WireFormat, register_wire_format
 
@@ -29,29 +31,36 @@ _FIXED_FMT = {
     ColType.BOOL: "?",
 }
 
+_LEN = struct.Struct("<I")
+
 
 @register_wire_format
 class BinaryRowsFormat(WireFormat):
     name = "binary_rows"
 
-    def encode_block(self, block: ColumnBlock) -> bytes:
+    def encode_block(
+        self, block: ColumnBlock, pool: Optional[BufferPool] = None
+    ) -> SegmentList:
         schema = block.schema
         rb = block.to_rows()
-        out: List[bytes] = [struct.pack("<I", len(rb))]
+        w = BufWriter(pool, size_hint=4 + len(rb) * (schema.fixed_row_width + 8))
+        w.pack_into(_LEN, len(rb))
         # precompile a packer for maximal runs of fixed-width fields
         plan = _pack_plan(schema)
         for row in rb.rows:
             for kind, payload in plan:
                 if kind == "fixed":
                     st, idxs = payload
-                    out.append(st.pack(*[row[i] for i in idxs]))
+                    w.pack_into(st, *[row[i] for i in idxs])
                 else:  # string
                     b = row[payload].encode("utf-8", "surrogatepass")
-                    out.append(struct.pack("<I", len(b)))
-                    out.append(b)
-        return b"".join(out)
+                    w.pack_into(_LEN, len(b))
+                    w.write(b)
+        return w.detach()
 
     def decode_block(self, data: bytes, schema: Schema) -> ColumnBlock:
+        if not isinstance(data, bytes):
+            data = bytes(data)
         (nrows,) = struct.unpack_from("<I", data, 0)
         off = 4
         plan = _pack_plan(schema)

@@ -9,14 +9,18 @@ Block layout:
     nrows: uint32
     per row: nparts uint16, then per part: tag byte + payload
       tag 'q' int64 | 'd' float64 | '?' bool | 's' string(uint32 len + utf8)
+
+Encode writes straight into a pooled store via BufWriter (scatter-gather
+contract: :meth:`encode_parts`/:meth:`encode_block` return a SegmentList).
 """
 
 from __future__ import annotations
 
 import struct
-from typing import List, Sequence
+from typing import List, Optional, Sequence
 
 from ..astring import AString
+from ..iobuf import BufferPool, BufWriter, SegmentList
 from ..types import ColumnBlock, Schema
 from .base import WireFormat, register_wire_format
 
@@ -25,30 +29,42 @@ _TAG_FLT = b"d"[0]
 _TAG_BOO = b"?"[0]
 _TAG_STR = b"s"[0]
 
+_NROWS = struct.Struct("<I")
+_NPARTS = struct.Struct("<H")
+_P_BOO = struct.Struct("<Bb")
+_P_INT = struct.Struct("<Bq")
+_P_FLT = struct.Struct("<Bd")
+_P_STR = struct.Struct("<BI")
+
 
 @register_wire_format
 class PartsRowsFormat(WireFormat):
     name = "parts_rows"
 
     # This format is special: it round-trips *part rows*, not ColumnBlocks.
-    def encode_parts(self, part_rows: Sequence[Sequence]) -> bytes:
-        out: List[bytes] = [struct.pack("<I", len(part_rows))]
+    def encode_parts(
+        self, part_rows: Sequence[Sequence], pool: Optional[BufferPool] = None
+    ) -> SegmentList:
+        w = BufWriter(pool, size_hint=4 + 16 * sum(len(p) for p in part_rows))
+        w.pack_into(_NROWS, len(part_rows))
         for parts in part_rows:
-            out.append(struct.pack("<H", len(parts)))
+            w.pack_into(_NPARTS, len(parts))
             for p in parts:
                 if isinstance(p, bool):
-                    out.append(struct.pack("<Bb", _TAG_BOO, int(p)))
+                    w.pack_into(_P_BOO, _TAG_BOO, int(p))
                 elif isinstance(p, int):
-                    out.append(struct.pack("<Bq", _TAG_INT, p))
+                    w.pack_into(_P_INT, _TAG_INT, p)
                 elif isinstance(p, float):
-                    out.append(struct.pack("<Bd", _TAG_FLT, p))
+                    w.pack_into(_P_FLT, _TAG_FLT, p)
                 else:
                     b = str(p).encode("utf-8", "surrogatepass")
-                    out.append(struct.pack("<BI", _TAG_STR, len(b)))
-                    out.append(b)
-        return b"".join(out)
+                    w.pack_into(_P_STR, _TAG_STR, len(b))
+                    w.write(b)
+        return w.detach()
 
     def decode_parts(self, data: bytes) -> List[AString]:
+        if not isinstance(data, bytes):
+            data = bytes(data)
         (nrows,) = struct.unpack_from("<I", data, 0)
         off = 4
         rows: List[AString] = []
@@ -80,7 +96,9 @@ class PartsRowsFormat(WireFormat):
     # ColumnBlock interface for uniformity: delegate through part rows with a
     # single delimiter part between cells (used only in benchmarks that force
     # this rung on block data).
-    def encode_block(self, block: ColumnBlock) -> bytes:
+    def encode_block(
+        self, block: ColumnBlock, pool: Optional[BufferPool] = None
+    ) -> SegmentList:
         rb = block.to_rows()
         part_rows = []
         for row in rb.rows:
@@ -90,7 +108,7 @@ class PartsRowsFormat(WireFormat):
                     parts.append(",")
                 parts.append(v)
             part_rows.append(parts)
-        return self.encode_parts(part_rows)
+        return self.encode_parts(part_rows, pool)
 
     def decode_block(self, data: bytes, schema: Schema) -> ColumnBlock:
         from ..formopt import DelimitedAssembler

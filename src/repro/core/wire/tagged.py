@@ -16,10 +16,11 @@ matching the paper's observation.
 from __future__ import annotations
 
 import struct
-from typing import List
+from typing import List, Optional
 
 import numpy as np
 
+from ..iobuf import BufferPool, BufWriter, SegmentList
 from ..types import ColType, ColumnBlock, Schema
 from .base import WireFormat, register_wire_format
 
@@ -63,24 +64,27 @@ class TaggedFormat(WireFormat):
     def __init__(self, static: bool = True):
         self.static = static
 
-    def encode_block(self, block: ColumnBlock) -> bytes:
+    def encode_block(
+        self, block: ColumnBlock, pool: Optional[BufferPool] = None
+    ) -> SegmentList:
         rb = block.to_rows()
-        out: List[bytes] = [struct.pack("<I", len(rb))]
+        w = BufWriter(pool, size_hint=4 + len(rb) * (block.schema.fixed_row_width + 8))
+        w.write(struct.pack("<I", len(rb)))
         if self.static:
             plan = self._static_plan(block.schema)
             for row in rb.rows:
                 msg = b"".join(enc(v) for enc, v in zip(plan, row))
-                out.append(_varint(len(msg)))
-                out.append(msg)
+                w.write(_varint(len(msg)))
+                w.write(msg)
         else:
             for row in rb.rows:
                 msg_parts = []
                 for i, v in enumerate(row):
                     msg_parts.append(self._dynamic_encode(i, v))
                 msg = b"".join(msg_parts)
-                out.append(_varint(len(msg)))
-                out.append(msg)
-        return b"".join(out)
+                w.write(_varint(len(msg)))
+                w.write(msg)
+        return w.detach()
 
     @staticmethod
     def _static_plan(schema: Schema):
@@ -116,6 +120,8 @@ class TaggedFormat(WireFormat):
         return bytes([(i + 1) << 3 | 2]) + _varint(len(b)) + b
 
     def decode_block(self, data: bytes, schema: Schema) -> ColumnBlock:
+        if not isinstance(data, bytes):
+            data = bytes(data)
         (nrows,) = struct.unpack_from("<I", data, 0)
         off = 4
         ncols = len(schema)

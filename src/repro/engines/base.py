@@ -164,10 +164,30 @@ class Engine:
         matches the destination's dialect, the way a user would configure the
         export — e.g. TSV when the destination is the Hadoop analog)."""
         block = self.get_block(table)
-        rb = block.to_rows()
         write_header = self.writes_header if header is None else header
         sep = self._lit(delimiter) if delimiter is not None else self._sep()
-        stream = EngineWriter(open(filename, "w"))  # IORedirect target call site
+        raw = open(filename, "w")  # IORedirect target call site
+        pipe = getattr(raw, "pipe", None)
+        if (
+            self.decorated
+            and pipe is not None
+            and getattr(pipe, "accepts_blocks", None)
+            and pipe.accepts_blocks()
+        ):
+            # exporter-side typed fast path (the twin of
+            # _import_typed_blocks): hand the pipe whole ColumnBlocks --
+            # no per-row text serialization, no AString assembly
+            try:
+                pipe.write_block(
+                    block,
+                    header=list(block.schema.names) if write_header else None,
+                    delimiter=str(sep),
+                )
+            finally:
+                raw.close()
+            return
+        rb = block.to_rows()
+        stream = EngineWriter(raw)
         try:
             if write_header:
                 line = self._lit("")

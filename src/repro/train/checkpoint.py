@@ -64,6 +64,13 @@ class CheckpointManager:
                  keep: int = 3):
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
+        if codec == "zstd":
+            # zstandard is an optional dependency; fall back to the stdlib
+            # dictionary codec on boxes without it
+            from ..core.compression import CODECS
+
+            if "zstd" not in CODECS:
+                codec = "zip"
         self.codec = codec
         self.keep = keep
         self._pending: Optional[threading.Thread] = None

@@ -1,0 +1,54 @@
+"""Graceful degradation when `hypothesis` is not installed.
+
+The property-based tests are a bonus layer over the deterministic suite;
+on boxes without hypothesis the whole module used to fail at collection,
+taking every deterministic test in the file down with it.  Import sites use
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from hypothesis_fallback import given, settings, st
+
+so property tests turn into explicit skips while everything else runs.
+"""
+
+import pytest
+
+
+class _Strategy:
+    """Inert stand-in: strategy construction happens at decoration time, so
+    attribute access and chained calls must all succeed."""
+
+    def __call__(self, *a, **k):
+        return self
+
+    def __getattr__(self, name):
+        return self
+
+    def map(self, fn):
+        return self
+
+    def filter(self, fn):
+        return self
+
+
+st = _Strategy()
+
+
+def given(*args, **kwargs):
+    def deco(fn):
+        def skipper():
+            pytest.skip("hypothesis not installed")
+
+        skipper.__name__ = fn.__name__
+        skipper.__doc__ = fn.__doc__
+        return skipper
+
+    return deco
+
+
+def settings(*args, **kwargs):
+    def deco(fn):
+        return fn
+
+    return deco

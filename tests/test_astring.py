@@ -1,7 +1,10 @@
 """AString (section 5.1): string-protocol fidelity + typed-part recovery."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from hypothesis_fallback import given, settings, st
 
 from repro.core.astring import AString, materialize_part
 

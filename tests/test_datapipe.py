@@ -142,6 +142,131 @@ def test_link_sim_latency_accounting():
     assert d >= 0.04
 
 
+def test_pipe_stats_pool_hits_and_send_overlap():
+    """The zero-copy/pipelined hot path must report its own win: pooled
+    buffer reuse, copies avoided, and sender-thread overlap all nonzero."""
+    from repro.core.iobuf import BufferPool
+
+    block = make_paper_block(600, seed=9, strings=True)
+    pool = BufferPool()
+    cfg = PipeConfig(mode="arrowcol", block_rows=64, pipelined=True, pool=pool)
+    name = "db://stats?query=1"
+    got = {}
+
+    def imp():
+        pipe = DataPipeInput(name)
+        got["rows"] = sum(len(b) for b in pipe.blocks())
+        pipe.close()
+
+    t = threading.Thread(target=imp)
+    t.start()
+    out = DataPipeOutput(name, config=cfg)
+    out.write_block(block)
+    out.close()
+    t.join(20)
+    assert got["rows"] == 600
+    assert out.stats.blocks == (600 + 63) // 64
+    assert out.stats.pool_hits > 0, "pooled offsets buffers must be reused"
+    assert out.stats.copies_avoided > 0, "fixed columns must ship as views"
+    assert out.stats.send_overlap_s > 0.0, "sender thread must report overlap"
+
+
+def test_write_block_roundtrip_with_header_meta():
+    """Exporter-side typed fast path: values, header names, and delimiter
+    metadata survive without any text serialization."""
+    block = make_paper_block(100, seed=11, strings=True)
+    name = "db://wblk?query=1"
+    got = {}
+
+    def imp():
+        pipe = DataPipeInput(name)
+        blocks = list(pipe.blocks())
+        got["rows"] = sum(len(b) for b in blocks)
+        got["meta"] = pipe.meta
+        got["first"] = blocks[0].to_rows().rows[0]
+        pipe.close()
+
+    t = threading.Thread(target=imp)
+    t.start()
+    out = DataPipeOutput(name, config=PipeConfig(mode="arrowcol", block_rows=32))
+    out.write_block(block, header=list(block.schema.names), delimiter="|")
+    out.close()
+    t.join(20)
+    assert got["rows"] == 100
+    assert got["meta"]["header"] == list(block.schema.names)
+    assert got["meta"]["delimiter"] == "|"
+    assert got["first"][0] == 0  # key column survives typed
+
+
+def test_write_block_rejects_schema_mismatch_after_text_rows():
+    """Interleaving text writes with a differently-typed block must fail on
+    the writer, not corrupt the stream for the reader."""
+    name = "db://wblkmix?query=1"
+
+    def imp():
+        pipe = DataPipeInput(name)
+        try:
+            list(pipe.blocks())
+        except IOError:
+            pass
+        pipe.close()
+
+    t = threading.Thread(target=imp, daemon=True)
+    t.start()
+    # delimiter pinned so the assembler flushes immediately (no sampling)
+    out = DataPipeOutput(name, config=PipeConfig(mode="arrowcol", block_rows=2,
+                                                 delimiter=","))
+    for _ in range(4):  # forces a flush: 2-column schema goes on the wire
+        out.write(AString((1, ",", 2.5, "\n")))
+    with pytest.raises(ValueError, match="does not match the"):
+        out.write_block(make_paper_block(10, strings=True))  # wider schema
+    out.close()
+    t.join(10)
+
+    # reverse order: block fixes the stream schema, mismatched text rows
+    # must fail at flush instead of decoding against the wrong layout
+    name2 = "db://wblkmix2?query=1"
+
+    def imp2():
+        pipe = DataPipeInput(name2)
+        try:
+            list(pipe.blocks())
+        except IOError:
+            pass
+        pipe.close()
+
+    t2 = threading.Thread(target=imp2, daemon=True)
+    t2.start()
+    out2 = DataPipeOutput(name2, config=PipeConfig(mode="arrowcol", block_rows=2,
+                                                   delimiter=","))
+    out2.write_block(make_paper_block(10, strings=True))
+    with pytest.raises(ValueError, match="does not match the"):
+        for _ in range(4):
+            out2.write(AString((1, ",", 2.5, "\n")))
+    out2.close()  # mismatched rows were consumed by the failed flush
+    t2.join(10)
+
+
+def test_write_block_rejected_on_text_mode():
+    """Character rungs cannot carry typed blocks; the exporter must fall
+    back to the serializer loop instead."""
+    name = "db://wblktext?query=1"
+
+    def imp():
+        pipe = DataPipeInput(name)
+        pipe.read()
+        pipe.close()
+
+    t = threading.Thread(target=imp, daemon=True)
+    t.start()
+    out = DataPipeOutput(name, config=PipeConfig(mode="text"))
+    assert not out.accepts_blocks()
+    with pytest.raises(ValueError):
+        out.write_block(make_paper_block(10))
+    out.close()
+    t.join(10)
+
+
 def test_bytes_mode_passthrough():
     name = "db://bin?query=1"
     payload = bytes(range(256)) * 100

@@ -1,7 +1,10 @@
 """FormOpt (section 5): delimiter inference, assemblers, metadata removal."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from hypothesis_fallback import given, settings, st
 
 from repro.core.astring import AString
 from repro.core.formopt import (

@@ -1,0 +1,107 @@
+"""Buffer pool / scatter-gather primitives (zero-copy transfer hot path)."""
+
+import struct
+
+import numpy as np
+import pytest
+
+from repro.core.iobuf import (
+    MAX_CLASS,
+    MIN_CLASS,
+    BufferPool,
+    BufWriter,
+    SegmentList,
+    default_pool,
+)
+
+
+def test_pool_size_classes_and_reuse():
+    pool = BufferPool()
+    a = pool.acquire(100)
+    assert len(a.store) == MIN_CLASS  # rounded up to the smallest class
+    store_id = id(a.store)
+    a.release()
+    b = pool.acquire(1000)  # same class -> same backing store comes back
+    assert id(b.store) == store_id
+    assert pool.stats.hits == 1 and pool.stats.misses == 1
+    b.release()
+
+
+def test_pool_oversize_requests_fall_through():
+    pool = BufferPool()
+    big = pool.acquire(MAX_CLASS + 1)
+    assert len(big.store) == MAX_CLASS + 1
+    big.release()  # not retained: oversize buffers go to GC
+    assert pool.stats.bytes_retained == 0
+    again = pool.acquire(MAX_CLASS + 1)
+    assert pool.stats.misses == 2
+
+
+def test_pool_bounded_retention():
+    pool = BufferPool(max_per_class=2)
+    bufs = [pool.acquire(MIN_CLASS) for _ in range(5)]
+    for b in bufs:
+        b.release()
+    assert pool.stats.bytes_retained == 2 * MIN_CLASS
+
+
+def test_pooled_release_is_idempotent():
+    pool = BufferPool()
+    a = pool.acquire(10)
+    a.release()
+    a.release()  # second release is a no-op, not a double-park
+    assert pool.stats.releases == 1
+
+
+def test_segment_list_join_and_nbytes():
+    segs = SegmentList([b"ab", memoryview(b"cd"), bytearray(b"ef")])
+    assert segs.nbytes == 6
+    assert segs.join() == b"abcdef"
+    arr = np.arange(4, dtype=np.int64)
+    segs.append(arr.data, zero_copy=True)
+    assert segs.nbytes == 6 + 32
+    assert segs.join() == b"abcdef" + arr.tobytes()
+    assert segs.copies_avoided == 1
+
+
+def test_segment_list_release_recycles_pooled():
+    pool = BufferPool()
+    buf = pool.acquire(64)
+    buf.store[:3] = b"xyz"
+    segs = SegmentList()
+    segs.append_pooled(buf)
+    assert segs.join() == b"xyz" + bytes(61)
+    segs.release()
+    assert pool.stats.releases == 1
+    assert segs.segments == []  # views are dead after release
+
+
+def test_bufwriter_grows_through_classes():
+    pool = BufferPool()
+    w = BufWriter(pool, size_hint=16)
+    payload = bytes(range(256)) * 20  # 5120 bytes > MIN_CLASS
+    for i in range(0, len(payload), 100):
+        w.write(payload[i : i + 100])
+    st = struct.Struct("<I")
+    w.pack_into(st, 0xDEADBEEF)
+    segs = w.detach()
+    assert segs.join() == payload + st.pack(0xDEADBEEF)
+    segs.release()
+    assert pool.stats.releases >= 1
+
+
+def test_bufwriter_pack_into_across_growth_boundary():
+    pool = BufferPool()
+    w = BufWriter(pool, size_hint=MIN_CLASS)
+    w.write(b"a" * (MIN_CLASS - 2))  # leaves 2 bytes of room
+    st = struct.Struct("<q")  # needs 8 -> forces growth mid-pack
+    w.pack_into(st, -12345)
+    segs = w.detach()
+    data = segs.join()
+    assert data[: MIN_CLASS - 2] == b"a" * (MIN_CLASS - 2)
+    assert struct.unpack_from("<q", data, MIN_CLASS - 2)[0] == -12345
+    segs.release()
+
+
+def test_default_pool_is_singleton():
+    assert default_pool() is default_pool()

@@ -5,7 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from hypothesis_fallback import given, settings, st
 
 from repro.kernels.decode_attn.ops import decode_attn
 from repro.kernels.decode_attn.ref import decode_attention_ref

@@ -2,7 +2,10 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from hypothesis_fallback import given, settings, st
 
 from repro.core.compression import CODECS, get_codec
 from repro.core.types import ColType, ColumnBlock, Field, RowBlock, Schema
@@ -16,7 +19,7 @@ BLOCK_FORMATS = [n for n in WIRE_FORMATS if n not in ("text", "parts")]
 def test_paper_block_roundtrip(fmt):
     block = make_paper_block(257, seed=1)
     wire = get_wire_format(fmt)
-    payload = wire.encode_block(block)
+    payload = wire.encode_block(block).join()
     got = wire.decode_block(payload, block.schema)
     assert_blocks_equal(block, got)
 
@@ -25,7 +28,7 @@ def test_paper_block_roundtrip(fmt):
 def test_string_block_roundtrip(fmt):
     block = make_paper_block(64, seed=2, strings=True)
     wire = get_wire_format(fmt)
-    got = wire.decode_block(wire.encode_block(block), block.schema)
+    got = wire.decode_block(wire.encode_block(block).join(), block.schema)
     assert_blocks_equal(block, got)
 
 
@@ -67,7 +70,7 @@ def test_int_column_roundtrip_property(ints, fmt):
     schema = Schema([Field("a", ColType.INT64)])
     block = ColumnBlock(schema, [np.asarray(ints, np.int64)])
     wire = get_wire_format(fmt)
-    got = wire.decode_block(wire.encode_block(block), schema)
+    got = wire.decode_block(wire.encode_block(block).join(), schema)
     np.testing.assert_array_equal(np.asarray(got.columns[0]), ints)
 
 
@@ -79,6 +82,6 @@ def test_float_column_bitexact_property(vals, fmt):
     schema = Schema([Field("x", ColType.FLOAT64)])
     block = ColumnBlock(schema, [np.asarray(vals, np.float64)])
     wire = get_wire_format(fmt)
-    got = wire.decode_block(wire.encode_block(block), schema)
+    got = wire.decode_block(wire.encode_block(block).join(), schema)
     np.testing.assert_array_equal(np.asarray(got.columns[0]),
                                   np.asarray(vals, np.float64))
