@@ -3,17 +3,53 @@
 Paper conclusion: as long as the buffer is not too small, size barely
 matters.  With the pooled zero-copy path the sweep also reports buffer-pool
 efficiency per block size: smaller blocks mean more frames, which is where
-pooled reuse (hit rate) and the pipelined sender earn their keep.
+pooled reuse (hit rate) and the pipelined sender earn their keep.  The
+decode-side twin sweeps the arena hit rate (reader allocations recycled
+instead of reallocated), and a transport sweep compares the same blocks
+over socket vs channel vs shm ring.
 """
 
 from __future__ import annotations
 
+import threading
+import time
+
 from repro.core import PipeConfig
-from repro.core.iobuf import BufferPool
+from repro.core.datapipe import DataPipeInput, DataPipeOutput
+from repro.core.directory import WorkerDirectory, set_directory
+from repro.core.iobuf import BufferPool, DecodeArena
+from repro.engines import make_paper_block
 
 from .common import DEFAULT_ROWS, emit, pipe_transfer
 
 SIZES = [64, 256, 1024, 4096, 16384, 65536]
+
+
+def _stream_decode(n_rows: int, block_rows: int, arena: DecodeArena) -> float:
+    """Streaming importer profile: blocks are dropped as consumed, which is
+    the lifecycle the decode arena accelerates (a bulk engine import holds
+    every block until the final merge, so its stores cannot recycle until
+    the stream ends — by design, not by accident)."""
+    set_directory(WorkerDirectory())
+    name = f"db://fig14-decode-{block_rows}?query=1"
+    block = make_paper_block(n_rows, seed=1)
+    rows = []
+
+    def imp():
+        pipe = DataPipeInput(name, arena=arena)
+        rows.append(sum(len(b) for b in pipe.blocks()))
+        pipe.close()
+
+    t = threading.Thread(target=imp, daemon=True)
+    t.start()
+    t0 = time.perf_counter()
+    out = DataPipeOutput(name, config=PipeConfig(mode="arrowcol",
+                                                 block_rows=block_rows))
+    out.write_block(block)
+    out.close()
+    t.join(120)
+    assert rows and rows[0] == n_rows
+    return time.perf_counter() - t0
 
 
 def main(n_rows: int = DEFAULT_ROWS) -> dict:
@@ -37,6 +73,26 @@ def main(n_rows: int = DEFAULT_ROWS) -> dict:
         rate = (s.hits / total) if total else 0.0
         emit(f"fig14.strings_block_rows_{rows}", t,
              f"pool_hit_rate={rate:.2f} acquires={total}")
+    # decode-arena efficiency: the importer-side mirror of the sweep above,
+    # measured on a streaming consumer (the arena's target lifecycle)
+    for rows in SIZES:
+        arena = DecodeArena(BufferPool())
+        # use the function's own transfer-only timing (it excludes block
+        # construction and thread spin-up), best of two like timed()
+        t = min(_stream_decode(n_rows, rows, arena) for _ in range(2))
+        out[f"decode_{rows}"] = t
+        total = arena.hits + arena.misses
+        rate = (arena.hits / total) if total else 0.0
+        emit(f"fig14.decode_block_rows_{rows}", t,
+             f"decode_hit_rate={rate:.2f} acquires={total}")
+    # transport sweep at a frame-heavy block size: socket pays the kernel
+    # round trip, channel one queue materialization, shm neither
+    for transport in ("socket", "channel", "shm"):
+        t = pipe_transfer("colstore", "graphstore", n_rows,
+                          PipeConfig(mode="arrowcol", block_rows=2048,
+                                     transport=transport))
+        out[f"transport_{transport}"] = t
+        emit(f"fig14.transport_{transport}", t)
     return out
 
 

@@ -22,7 +22,14 @@ from .datapipe import (
     open_pipe_writer,
     parse_reserved,
 )
-from .iobuf import BufferPool, BufWriter, SegmentList, default_pool
+from .iobuf import (
+    BufferPool,
+    BufWriter,
+    DecodeArena,
+    SegmentList,
+    default_decode_pool,
+    default_pool,
+)
 from .directory import (
     DirectoryClient,
     DirectoryServer,
@@ -33,6 +40,7 @@ from .directory import (
 )
 from .formopt import DelimitedAssembler, JsonAssembler, infer_delimiter
 from .ioredirect import CallSite, CallSiteRegistry, PipeOpenContext, pipegen_open
+from .shm_ring import ShmRing, ShmRingTransport
 from .transport import Channel, ChannelTransport, LinkSim, SocketTransport
 from .types import ColType, ColumnBlock, Field, RowBlock, Schema, infer_schema
 from .verify import VerificationProxy, VerificationResult, validate_generated_pipe

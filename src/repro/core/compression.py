@@ -63,6 +63,11 @@ class NoneCodec(Codec):
     def compress_segments(self, segs: SegmentList) -> SegmentList:
         return segs
 
+    def decompress(self, data: Buffer) -> Buffer:
+        # pass views straight through: the shm-ring read path hands the
+        # decoder a memoryview into the mapped region, consumed in place
+        return data
+
 
 class RleCodec(Codec):
     """Byte-level run-length encoding, vectorized with numpy.

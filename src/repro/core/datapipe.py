@@ -39,7 +39,13 @@ from urllib.parse import parse_qs, urlparse
 from .astring import AString
 from .compression import Codec, get_codec
 from .directory import DirectoryLike, Endpoint, get_directory
-from .iobuf import BufferPool, SegmentList, default_pool
+from .iobuf import BufferPool, DecodeArena, SegmentList, default_pool
+from .shm_ring import (
+    DEFAULT_RING_CAPACITY,
+    ShmRingTransport,
+    acquire_ring,
+    attach_ring,
+)
 from .formopt import (
     DelimitedAssembler,
     FormOptError,
@@ -127,7 +133,17 @@ class PipeConfig:
     ``scatter_gather`` disables the zero-copy path when False, falling back
     to the concatenate-then-send profile (kept for the fig. 11 seed-path
     comparison); ``pool`` supplies a dedicated buffer pool (default: the
-    process-wide pool)."""
+    process-wide pool).
+
+    ``transport``/``shm_capacity``/``decode_arena`` are importer-local: the
+    importer picks the rendezvous flavor (it registers the endpoint, the way
+    it owns the listening socket), the exporter connects to whatever kind
+    the directory hands back.  ``transport`` is one of ``socket`` (TCP,
+    default), ``channel`` (in-process queue) or ``shm`` (cross-process
+    shared-memory ring, zero intermediate copies); ``decode_arena`` supplies
+    a dedicated :class:`~repro.core.iobuf.DecodeArena` so decode pool stats
+    attribute to one pipe (default: a per-pipe arena over the process-wide
+    decode pool)."""
 
     mode: str = "arrowcol"  # text | parts | binary_rows | tagged | arrowrow | arrowcol
     codec: str = "none"  # none | rle | zip | zstd
@@ -142,6 +158,9 @@ class PipeConfig:
     sender_depth: int = 2  # bounded in-flight frames (double buffering)
     block_export: bool = True  # allow exporters to hand over whole blocks
     pool: Optional[BufferPool] = None
+    transport: str = "socket"  # socket | channel | shm (importer-side)
+    shm_capacity: int = DEFAULT_RING_CAPACITY  # ring data-region bytes
+    decode_arena: Optional[DecodeArena] = None  # importer-side decode pool
 
     def meta(self) -> dict:
         return {
@@ -163,6 +182,9 @@ class PipeStats:
     pool_hits: int = 0        # buffer acquires served without allocating
     pool_misses: int = 0
     send_overlap_s: float = 0.0  # sender-thread work hidden behind encoding
+    decode_pool_hits: int = 0    # importer: arena stores served from retention
+    decode_pool_misses: int = 0
+    shm_spans: int = 0           # frames carried as in-place shm ring spans
 
 
 class _PoolHandle:
@@ -379,6 +401,7 @@ class DataPipeOutput:
             self.stats.frames_sent = self._transport.frames_sent
             self.stats.pool_hits = self._pool.hits
             self.stats.pool_misses = self._pool.misses
+            self.stats.shm_spans = getattr(self._transport, "shm_spans", 0)
             # always close the transport -- a sender failure must not leave
             # the reader blocked on a half-open stream
             self._transport.close()
@@ -608,19 +631,34 @@ class DataPipeInput:
         host: str = "127.0.0.1",
         channel: Optional[Channel] = None,
         import_workers: Optional[int] = None,
+        transport: Optional[str] = None,
+        shm_capacity: int = DEFAULT_RING_CAPACITY,
+        arena: Optional[DecodeArena] = None,
     ):
         rn = parse_reserved(filename)
         if rn is None:
             raise ValueError(f"{filename!r} is not a reserved pipe name")
         self.reserved = rn
         directory = directory or get_directory()
-        if channel is not None:
+        if transport is None:
+            transport = "channel" if channel is not None else "socket"
+        if transport == "channel":
+            ch = channel if channel is not None else Channel()
             directory.register(
-                rn.dataset, Endpoint(channel=channel), rn.query_id,
+                rn.dataset, Endpoint(channel=ch), rn.query_id,
                 import_workers=import_workers or rn.workers,
             )
-            self._transport: Transport = ChannelTransport(channel, link)
-        else:
+            self._transport: Transport = ChannelTransport(ch, link)
+        elif transport == "shm":
+            ring = acquire_ring(shm_capacity)
+            directory.register(
+                rn.dataset,
+                Endpoint(shm_name=ring.name, shm_capacity=ring.capacity),
+                rn.query_id,
+                import_workers=import_workers or rn.workers,
+            )
+            self._transport = ShmRingTransport(ring, link)
+        elif transport == "socket":
             lsock = listen_socket(host)
             h, p = lsock.getsockname()
             directory.register(
@@ -631,6 +669,11 @@ class DataPipeInput:
             conn, _ = lsock.accept()
             lsock.close()
             self._transport = SocketTransport(conn, link)
+        else:
+            raise ValueError(
+                f"unknown transport {transport!r}; have socket/channel/shm")
+        self._arena = arena or DecodeArena()
+        self.stats = PipeStats()
         self.schema: Optional[Schema] = None
         self.meta: dict = {}
         self._codec: Codec = get_codec("none")
@@ -695,7 +738,8 @@ class DataPipeInput:
             return None
         kind, data = frame
         if kind == FRAME_BLOCK:
-            block = self._wire.decode_block(data, self.schema)
+            block = self._wire.decode_block(data, self.schema,
+                                            arena=self._arena)
             self._check_verify(block)
             return block
         if kind == FRAME_PARTS:
@@ -960,6 +1004,9 @@ class DataPipeInput:
             yield line
 
     def close(self) -> None:
+        self.stats.decode_pool_hits = self._arena.hits
+        self.stats.decode_pool_misses = self._arena.misses
+        self.stats.shm_spans = getattr(self._transport, "shm_spans", 0)
         self._transport.close()
 
     def __enter__(self) -> "DataPipeInput":
@@ -981,7 +1028,7 @@ class DataPipeInput:
             asm.write(astr)
             asm.write(AString(("\n",)))
         asm.flush()
-        return asm.take_rows().to_columns()
+        return asm.take_rows().to_columns(arena=self._arena)
 
     _TEXT_DELIMS = (",", "\t", ";", "|")
 
@@ -1035,6 +1082,8 @@ def _cheap_len(s: Any) -> int:
 def _connect(ep: Endpoint, link: Optional[LinkSim]) -> Transport:
     if ep.is_channel:
         return ChannelTransport(ep.channel, link)
+    if ep.is_shm:
+        return ShmRingTransport(attach_ring(ep.shm_name), link)
     s = socket.create_connection((ep.host, ep.port), timeout=30.0)
     return SocketTransport(s, link)
 

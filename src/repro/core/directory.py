@@ -56,10 +56,16 @@ class Endpoint:
     host: str = ""
     port: int = 0
     channel: Optional[Channel] = None  # in-process fast path
+    shm_name: str = ""                 # shared-memory ring (cross-process)
+    shm_capacity: int = 0
 
     @property
     def is_channel(self) -> bool:
         return self.channel is not None
+
+    @property
+    def is_shm(self) -> bool:
+        return bool(self.shm_name)
 
 
 @dataclass
@@ -174,6 +180,12 @@ def _send_stub_eof(ep: Endpoint) -> None:
     try:
         if ep.is_channel:
             ChannelTransport(ep.channel).send_frame(FRAME_EOF, b"")
+        elif ep.is_shm:
+            from .shm_ring import ShmRingTransport, attach_ring
+
+            t = ShmRingTransport(attach_ring(ep.shm_name))
+            t.send_frame(FRAME_EOF, b"")
+            t.close()
         else:
             s = socket.create_connection((ep.host, ep.port), timeout=5.0)
             SocketTransport(s).send_frame(FRAME_EOF, b"")
@@ -229,7 +241,9 @@ class DirectoryServer:
             if req["op"] == "register":
                 self.directory.register(
                     req["dataset"],
-                    Endpoint(req["host"], req["port"]),
+                    Endpoint(req["host"], req["port"],
+                             shm_name=req.get("shm_name", ""),
+                             shm_capacity=int(req.get("shm_capacity", 0))),
                     req.get("query_id", "0"),
                     req.get("import_workers"),
                 )
@@ -242,7 +256,9 @@ class DirectoryServer:
                         req.get("export_workers"),
                         timeout=float(req.get("timeout", 30.0)),
                     )
-                    resp = {"ok": True, "host": ep.host, "port": ep.port}
+                    resp = {"ok": True, "host": ep.host, "port": ep.port,
+                            "shm_name": ep.shm_name,
+                            "shm_capacity": ep.shm_capacity}
                 except TimeoutError as e:
                     resp = {"ok": False, "error": str(e)}
             else:
@@ -287,6 +303,8 @@ class DirectoryClient:
                 "dataset": dataset,
                 "host": endpoint.host,
                 "port": endpoint.port,
+                "shm_name": endpoint.shm_name,
+                "shm_capacity": endpoint.shm_capacity,
                 "query_id": query_id,
                 "import_workers": import_workers,
             }
@@ -310,7 +328,9 @@ class DirectoryClient:
         )
         if not resp.get("ok"):
             raise TimeoutError(resp.get("error", "directory query failed"))
-        return Endpoint(resp["host"], resp["port"])
+        return Endpoint(resp["host"], resp["port"],
+                        shm_name=resp.get("shm_name", ""),
+                        shm_capacity=resp.get("shm_capacity", 0))
 
 
 DirectoryLike = Union[WorkerDirectory, DirectoryClient]

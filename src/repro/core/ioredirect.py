@@ -207,6 +207,9 @@ def pipegen_open(
                 cfg = _replace(cfg, mode="bytes")
                 return _PipeBytesWriter(DataPipeOutput(str(filename), config=cfg))
             return _PipeTextWriter(DataPipeOutput(str(filename), config=cfg))
-        pipe = DataPipeInput(str(filename), link=cfg.link)
+        pipe = DataPipeInput(str(filename), link=cfg.link,
+                             transport=cfg.transport,
+                             shm_capacity=cfg.shm_capacity,
+                             arena=cfg.decode_arena)
         return _PipeBytesReader(pipe) if binary else pipe
     return (real_open or builtins.open)(filename, mode, **kw)

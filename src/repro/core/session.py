@@ -18,7 +18,7 @@ import os
 import tempfile
 import threading
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Any, Dict, List, Optional
 
 from .codegen import GeneratedPipe, PipeEnabledEngine, generate_pipe_adapter
@@ -112,14 +112,22 @@ def transfer(
     dataset: Optional[str] = None,
     directory: Optional[WorkerDirectory] = None,
     timeout: float = 120.0,
+    transport: Optional[str] = None,
 ) -> TransferResult:
     """Move ``src:table`` into ``dst:dst_table`` over a generated data pipe.
 
     The export runs with the destination's dialect (header/delimiter), the
     way the paper's users configure their export queries.  ``workers`` /
     ``import_workers`` reproduce the section 4.2 N:M pairing.
+
+    ``transport`` overrides the pipe's rendezvous flavor without building a
+    whole config: ``socket`` (TCP loopback), ``channel`` (in-process
+    queue), or ``shm`` (shared-memory ring — the zero-copy path that also
+    works when exporter and importer are separate OS processes).
     """
     config = config or PipeConfig()
+    if transport is not None:
+        config = replace(config, transport=transport)
     if directory is not None:
         set_directory(directory)
     gp_src, gp_dst = adapter_for(src), adapter_for(dst)

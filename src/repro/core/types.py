@@ -176,8 +176,10 @@ class RowBlock:
     def __len__(self) -> int:
         return len(self.rows)
 
-    def to_columns(self) -> "ColumnBlock":
-        """Pivot row-major -> column-major (paper section 5.4, host side)."""
+    def to_columns(self, arena=None) -> "ColumnBlock":
+        """Pivot row-major -> column-major (paper section 5.4, host side).
+        ``arena`` (a :class:`~repro.core.iobuf.DecodeArena`) supplies pooled
+        backing stores for the fixed-width output columns."""
         n = len(self.rows)
         cols: list = []
         if n == 0:
@@ -190,6 +192,8 @@ class RowBlock:
             vals = [r[j] for r in self.rows]
             if f.type is ColType.STRING:
                 cols.append(vals)
+            elif arena is not None:
+                cols.append(arena.take(f.type.np_dtype, n, vals))
             else:
                 cols.append(np.asarray(vals, dtype=f.type.np_dtype))
         return ColumnBlock(self.schema, cols)

@@ -30,9 +30,9 @@ from typing import List, Optional
 
 import numpy as np
 
-from ..iobuf import BufferPool, SegmentList, default_pool
+from ..iobuf import BufferPool, DecodeArena, SegmentList, default_pool
 from ..types import ColType, ColumnBlock, Schema
-from .base import WireFormat, register_wire_format
+from .base import WireFormat, register_wire_format, tobytes
 
 
 def _encode_string_col(col, n: int, pool: BufferPool, out: SegmentList) -> None:
@@ -81,9 +81,8 @@ class ArrowColFormat(WireFormat):
                 _fixed_col_view(col, f.type.np_dtype, out)
         return out
 
-    def decode_block(self, data: bytes, schema: Schema) -> ColumnBlock:
-        if not isinstance(data, bytes):
-            data = bytes(data)
+    def decode_block(self, data, schema: Schema,
+                     arena: Optional[DecodeArena] = None) -> ColumnBlock:
         (n,) = struct.unpack_from("<I", data, 0)
         off = 4
         cols: List = []
@@ -92,7 +91,7 @@ class ArrowColFormat(WireFormat):
                 offsets = np.frombuffer(data, np.int32, n + 1, off)
                 off += offsets.nbytes
                 heap_len = int(offsets[-1]) if n else 0
-                heap = data[off : off + heap_len]
+                heap = tobytes(data[off : off + heap_len])
                 off += heap_len
                 text = heap.decode("utf-8", "surrogatepass")
                 if len(text) == heap_len:  # ascii: offsets == char offsets
@@ -110,9 +109,10 @@ class ArrowColFormat(WireFormat):
                     )
             else:
                 width = f.type.width
-                a = np.frombuffer(data, f.type.np_dtype, n, off).copy()
+                src = np.frombuffer(data, f.type.np_dtype, n, off)
                 off += n * width
-                cols.append(a)
+                cols.append(arena.take(f.type.np_dtype, n, src) if arena
+                            else src.copy())
         return ColumnBlock(schema, cols)
 
 
@@ -148,9 +148,8 @@ class ArrowRowFormat(WireFormat):
             _encode_string_col(block.columns[i], n, pool, out)
         return out
 
-    def decode_block(self, data: bytes, schema: Schema) -> ColumnBlock:
-        if not isinstance(data, bytes):
-            data = bytes(data)
+    def decode_block(self, data, schema: Schema,
+                     arena: Optional[DecodeArena] = None) -> ColumnBlock:
         (n,) = struct.unpack_from("<I", data, 0)
         off = 4
         fixed = [(i, f) for i, f in enumerate(schema) if f.type.is_fixed_width]
@@ -163,12 +162,18 @@ class ArrowRowFormat(WireFormat):
             rec = np.frombuffer(data, dt, n, off)
             off += dt.itemsize * n
             for (i, f) in fixed:
-                cols[i] = np.ascontiguousarray(rec[f"f{i}"])  # strided gather
+                # strided gather out of the wire view, into a pooled store
+                # when an arena is supplied.  Without one, .copy() (never
+                # ascontiguousarray, which is a no-op view for a
+                # single-field record) so the column cannot alias a
+                # transport span that is recycled after this returns.
+                cols[i] = (arena.take(f.type.np_dtype, n, rec[f"f{i}"])
+                           if arena else rec[f"f{i}"].copy())
         for i, f in strings:
             offsets = np.frombuffer(data, np.int32, n + 1, off)
             off += offsets.nbytes
             heap_len = int(offsets[-1]) if n else 0
-            heap = data[off : off + heap_len]
+            heap = tobytes(data[off : off + heap_len])
             off += heap_len
             cols[i] = [
                 heap[offsets[k] : offsets[k + 1]].decode("utf-8", "surrogatepass")

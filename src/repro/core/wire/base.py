@@ -8,15 +8,20 @@ vectored syscall and then releases them back to the buffer pool.  Callers
 that genuinely need contiguous bytes (compressing codecs, tests) use
 ``SegmentList.join()`` and pay for the copy explicitly.
 
-:meth:`WireFormat.decode_block` accepts any contiguous bytes-like object.
+:meth:`WireFormat.decode_block` accepts any contiguous bytes-like object --
+including a ``memoryview`` straight into a shared-memory ring span, which
+it consumes **in place** (no up-front ``bytes(data)`` materialization; only
+the decoded values leave the view).  With ``arena`` set, the fixed-width
+output columns are carved from a recycled
+:class:`~repro.core.iobuf.DecodeArena` store instead of freshly allocated.
 """
 
 from __future__ import annotations
 
 import json
-from typing import Dict, Optional, Type
+from typing import Dict, Optional, Type, Union
 
-from ..iobuf import BufferPool, SegmentList
+from ..iobuf import BufferPool, DecodeArena, SegmentList
 from ..types import ColumnBlock, Schema
 
 __all__ = [
@@ -26,7 +31,16 @@ __all__ = [
     "WIRE_FORMATS",
     "get_wire_format",
     "register_wire_format",
+    "tobytes",
 ]
+
+WireData = Union[bytes, bytearray, memoryview]
+
+
+def tobytes(data: WireData) -> bytes:
+    """Materialize a slice of wire data (string heaps and the like).
+    Free for ``bytes`` input; a bounded copy for in-place views."""
+    return data if isinstance(data, bytes) else bytes(data)
 
 
 class WireFormat:
@@ -42,7 +56,12 @@ class WireFormat:
         reusable backing stores; ``None`` uses the process-default pool."""
         raise NotImplementedError
 
-    def decode_block(self, data: bytes, schema: Schema) -> ColumnBlock:
+    def decode_block(self, data: WireData, schema: Schema,
+                     arena: Optional[DecodeArena] = None) -> ColumnBlock:
+        """Decode one block.  ``data`` may be a ``memoryview`` into live
+        transport memory (consumed in place; the caller recycles the span
+        after this returns).  ``arena`` supplies pooled output stores for
+        the fixed-width columns."""
         raise NotImplementedError
 
 

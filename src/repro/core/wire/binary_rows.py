@@ -19,9 +19,9 @@ from typing import List, Optional
 
 import numpy as np
 
-from ..iobuf import BufferPool, BufWriter, SegmentList
+from ..iobuf import BufferPool, BufWriter, DecodeArena, SegmentList
 from ..types import ColType, ColumnBlock, Schema
-from .base import WireFormat, register_wire_format
+from .base import WireFormat, register_wire_format, tobytes
 
 _FIXED_FMT = {
     ColType.INT32: "i",
@@ -58,9 +58,8 @@ class BinaryRowsFormat(WireFormat):
                     w.write(b)
         return w.detach()
 
-    def decode_block(self, data: bytes, schema: Schema) -> ColumnBlock:
-        if not isinstance(data, bytes):
-            data = bytes(data)
+    def decode_block(self, data, schema: Schema,
+                     arena: Optional[DecodeArena] = None) -> ColumnBlock:
         (nrows,) = struct.unpack_from("<I", data, 0)
         off = 4
         plan = _pack_plan(schema)
@@ -78,13 +77,16 @@ class BinaryRowsFormat(WireFormat):
                     (ln,) = struct.unpack_from("<I", data, off)
                     off += 4
                     cols[payload].append(
-                        data[off : off + ln].decode("utf-8", "surrogatepass")
+                        tobytes(data[off : off + ln]).decode(
+                            "utf-8", "surrogatepass")
                     )
                     off += ln
         arrays = []
         for f, c in zip(schema, cols):
             if f.type is ColType.STRING:
                 arrays.append(c)
+            elif arena is not None:
+                arrays.append(arena.take(f.type.np_dtype, nrows, c))
             else:
                 arrays.append(np.asarray(c, dtype=f.type.np_dtype))
         return ColumnBlock(schema, arrays)

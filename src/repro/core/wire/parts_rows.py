@@ -20,9 +20,9 @@ import struct
 from typing import List, Optional, Sequence
 
 from ..astring import AString
-from ..iobuf import BufferPool, BufWriter, SegmentList
+from ..iobuf import BufferPool, BufWriter, DecodeArena, SegmentList
 from ..types import ColumnBlock, Schema
-from .base import WireFormat, register_wire_format
+from .base import WireFormat, register_wire_format, tobytes
 
 _TAG_INT = b"q"[0]
 _TAG_FLT = b"d"[0]
@@ -62,9 +62,7 @@ class PartsRowsFormat(WireFormat):
                     w.write(b)
         return w.detach()
 
-    def decode_parts(self, data: bytes) -> List[AString]:
-        if not isinstance(data, bytes):
-            data = bytes(data)
+    def decode_parts(self, data) -> List[AString]:
         (nrows,) = struct.unpack_from("<I", data, 0)
         off = 4
         rows: List[AString] = []
@@ -87,7 +85,8 @@ class PartsRowsFormat(WireFormat):
                 else:
                     (ln,) = struct.unpack_from("<I", data, off)
                     off += 4
-                    v = data[off : off + ln].decode("utf-8", "surrogatepass")
+                    v = tobytes(data[off : off + ln]).decode(
+                        "utf-8", "surrogatepass")
                     off += ln
                 parts.append(v)
             rows.append(AString(parts))
@@ -110,7 +109,8 @@ class PartsRowsFormat(WireFormat):
             part_rows.append(parts)
         return self.encode_parts(part_rows, pool)
 
-    def decode_block(self, data: bytes, schema: Schema) -> ColumnBlock:
+    def decode_block(self, data, schema: Schema,
+                     arena: Optional[DecodeArena] = None) -> ColumnBlock:
         from ..formopt import DelimitedAssembler
 
         asm = DelimitedAssembler(sample_rows=4)
@@ -121,4 +121,4 @@ class PartsRowsFormat(WireFormat):
         rb = asm.take_rows()
         # trust the stream schema (names) over inference
         rb.schema = schema
-        return rb.to_columns()
+        return rb.to_columns(arena=arena)

@@ -20,9 +20,9 @@ from typing import List, Optional
 
 import numpy as np
 
-from ..iobuf import BufferPool, BufWriter, SegmentList
+from ..iobuf import BufferPool, BufWriter, DecodeArena, SegmentList
 from ..types import ColType, ColumnBlock, Schema
-from .base import WireFormat, register_wire_format
+from .base import WireFormat, register_wire_format, tobytes
 
 
 def _zigzag(n: int) -> int:
@@ -119,9 +119,8 @@ class TaggedFormat(WireFormat):
         b = str(v).encode("utf-8", "surrogatepass")
         return bytes([(i + 1) << 3 | 2]) + _varint(len(b)) + b
 
-    def decode_block(self, data: bytes, schema: Schema) -> ColumnBlock:
-        if not isinstance(data, bytes):
-            data = bytes(data)
+    def decode_block(self, data, schema: Schema,
+                     arena: Optional[DecodeArena] = None) -> ColumnBlock:
         (nrows,) = struct.unpack_from("<I", data, 0)
         off = 4
         ncols = len(schema)
@@ -148,13 +147,16 @@ class TaggedFormat(WireFormat):
                 else:
                     ln, off = _read_varint(data, off)
                     cols[field].append(
-                        data[off : off + ln].decode("utf-8", "surrogatepass")
+                        tobytes(data[off : off + ln]).decode(
+                            "utf-8", "surrogatepass")
                     )
                     off += ln
         arrays = []
         for f, c in zip(schema, cols):
             if f.type is ColType.STRING:
                 arrays.append(c)
+            elif arena is not None:
+                arrays.append(arena.take(f.type.np_dtype, nrows, c))
             else:
                 arrays.append(np.asarray(c, dtype=f.type.np_dtype))
         return ColumnBlock(schema, arrays)

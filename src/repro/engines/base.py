@@ -228,7 +228,12 @@ class Engine:
         if getattr(stream, "mode", "text") in ("text", "parts"):
             return False  # character/parts rungs keep the parsing semantics
         blocks = list(blocks_iter())
-        if blocks:
+        if len(blocks) == 1:
+            # zero-copy retention: arena-backed columns stay leased for as
+            # long as the table holds them (the pool recycles a store only
+            # when its array is collected), so no defensive copy is needed
+            merged = blocks[0]
+        elif blocks:
             merged = ColumnBlock.concat(blocks)
         else:
             merged = ColumnBlock(Schema([]), [])

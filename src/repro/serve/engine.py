@@ -13,6 +13,7 @@ from __future__ import annotations
 import queue
 import threading
 import time
+import weakref
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
@@ -23,6 +24,33 @@ import numpy as np
 from ..models import Model
 
 __all__ = ["ServeEngine", "GenerationResult"]
+
+
+# One jitted decode step per (model, mesh): engines over the same model reuse
+# one compiled executable instead of re-jitting a fresh lambda each time.
+# Besides skipping the recompile, this pins determinism — two executables
+# compiled from identical HLO may still autotune differently, and a
+# low-order-bit logit difference is enough to flip a greedy argmax tie
+# (the test_serve_engine_greedy_deterministic flake).
+_STEP_CACHE: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+_STEP_LOCK = threading.Lock()
+
+
+def _shared_decode_step(model: Model, mesh):
+    with _STEP_LOCK:
+        per_model = _STEP_CACHE.setdefault(model, {})
+        key = id(mesh)  # mesh stays alive via the jitted closure below
+        fn = per_model.get(key)
+        if fn is None:
+            # close over a weakref, not the model: a strong ref from the
+            # cached value would pin the weak key forever and leak every
+            # model/executable pair for the process lifetime.  Callers of
+            # fn (engines) hold the model, so the deref cannot dangle.
+            model_ref = weakref.ref(model)
+            fn = jax.jit(
+                lambda p, c, b: model_ref().decode_step(p, c, b, mesh))
+            per_model[key] = fn
+        return fn
 
 
 @dataclass
@@ -60,8 +88,7 @@ class ServeEngine:
         self._slots = [_Slot() for _ in range(batch_size)]
         self.cache = model.init_cache(batch_size, max_context)
         self._tokens = np.zeros((batch_size, 1), np.int32)
-        self._step = jax.jit(
-            lambda p, c, b: model.decode_step(p, c, b, mesh))
+        self._step = _shared_decode_step(model, mesh)
         self.steps_run = 0
 
     # -- client API -------------------------------------------------------------
@@ -105,12 +132,16 @@ class ServeEngine:
     def _prefill(self, slot_idx: int, prompt: List[int]) -> None:
         for t in prompt[:-1]:
             self._tokens[slot_idx, 0] = t
-            batch = {"token": jnp.asarray(self._tokens)}
+            # jnp.array, not asarray: on CPU asarray can alias the numpy
+            # buffer zero-copy, and we mutate _tokens again while the
+            # async dispatch may still be reading it (a real race --
+            # the source of the greedy-determinism flake)
+            batch = {"token": jnp.array(self._tokens)}
             _, self.cache = self._step(self.params, self.cache, batch)
         self._tokens[slot_idx, 0] = prompt[-1] if prompt else self.eos
 
     def _decode_one_step(self, done: List[GenerationResult]) -> None:
-        batch = {"token": jnp.asarray(self._tokens)}
+        batch = {"token": jnp.array(self._tokens)}
         logits, self.cache = self._step(self.params, self.cache, batch)
         logits = np.asarray(logits[:, 0, :], np.float32)
         if self.temperature > 0:

@@ -10,7 +10,9 @@ from repro.core.iobuf import (
     MIN_CLASS,
     BufferPool,
     BufWriter,
+    DecodeArena,
     SegmentList,
+    default_decode_pool,
     default_pool,
 )
 
@@ -105,3 +107,80 @@ def test_bufwriter_pack_into_across_growth_boundary():
 
 def test_default_pool_is_singleton():
     assert default_pool() is default_pool()
+    assert default_decode_pool() is default_decode_pool()
+    assert default_decode_pool() is not default_pool()  # stats stay separate
+
+
+# -- decode arena -------------------------------------------------------------------
+
+
+def test_decode_arena_recycles_after_collection():
+    arena = DecodeArena(BufferPool())
+    a = arena.array(np.int64, 100)
+    a[:] = np.arange(100)
+    assert arena.misses == 1 and arena.hits == 0 and arena.live == 1
+    del a  # no views left -> store returns to the pool promptly
+    b = arena.array(np.int64, 64)
+    assert arena.hits == 1 and arena.live == 1
+    del b
+
+
+def test_decode_arena_hit_rate_across_blocks():
+    """Streaming decode profile: block N's stores are reclaimed once the
+    consumer drops the block, so block N+1 allocates nothing."""
+    from repro.core.wire import get_wire_format
+    from repro.engines.base import assert_blocks_equal, make_paper_block
+
+    arena = DecodeArena(BufferPool())
+    wire = get_wire_format("arrowcol")
+    block = make_paper_block(512, seed=3)
+    payload = wire.encode_block(block).join()
+    decoded = wire.decode_block(payload, block.schema, arena=arena)
+    assert_blocks_equal(block, decoded)
+    first_misses = arena.misses
+    assert first_misses > 0 and arena.hits == 0
+    del decoded
+    for _ in range(4):  # steady state: every fixed column is a pool hit
+        decoded = wire.decode_block(payload, block.schema, arena=arena)
+        del decoded
+    assert arena.misses == first_misses
+    assert arena.hits == 4 * first_misses
+    total = arena.hits + arena.misses
+    assert arena.hits / total >= 0.75
+
+
+def test_decode_arena_never_aliases_live_output():
+    """Regression: decode_block output views must not alias recycled
+    buffers -- a store is recycled only after its arrays (and views) die."""
+    from repro.core.wire import get_wire_format
+    from repro.engines.base import make_paper_block
+
+    arena = DecodeArena(BufferPool())
+    wire = get_wire_format("arrowcol")
+    a_block = make_paper_block(256, seed=1)
+    b_block = make_paper_block(256, seed=2)
+    payload_a = wire.encode_block(a_block).join()
+    payload_b = wire.encode_block(b_block).join()
+
+    got_a = wire.decode_block(payload_a, a_block.schema, arena=arena)
+    keys_a = got_a.column("key")
+    snapshot = keys_a.copy()
+    got_b = wire.decode_block(payload_b, b_block.schema, arena=arena)
+    # a live block's stores are never handed to a second decode
+    for ca in got_a.columns:
+        for cb in got_b.columns:
+            if hasattr(ca, "dtype") and hasattr(cb, "dtype"):
+                assert not np.shares_memory(ca, cb)
+    np.testing.assert_array_equal(keys_a, snapshot)
+
+    # a *view* keeps the store leased even after its block is released
+    view = keys_a[10:20]
+    del got_a, keys_a
+    wire.decode_block(payload_b, b_block.schema, arena=arena)
+    np.testing.assert_array_equal(view, snapshot[10:20])
+
+    # once every reference is gone the store recycles (pool hits)
+    del view, got_b
+    before = arena.hits
+    wire.decode_block(payload_a, a_block.schema, arena=arena)
+    assert arena.hits > before

@@ -5,13 +5,22 @@ import threading
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core.datapipe import PipeConfig
 from repro.models import build_model, get_config
 from repro.pipeline import PipeFeeder, SyntheticSource
 from repro.serve import ServeEngine
 
-RNG = jax.random.PRNGKey(0)
+
+@pytest.fixture
+def fresh_jax():
+    """Isolate the jax PRNG/compile-cache interaction: drop every cached
+    executable left behind by earlier tests so both runs inside the test
+    compile (and autotune) from the same clean slate, and hand each test
+    its own key instead of a module-level one."""
+    jax.clear_caches()
+    yield jax.random.PRNGKey(0)
 
 
 def test_pipe_feeder_delivers_batches():
@@ -67,7 +76,7 @@ def test_feeder_merges_multiple_sources():
 def test_serve_engine_continuous_batching():
     cfg = get_config("qwen2-1.5b").reduced()
     model = build_model(cfg)
-    params = model.init(RNG)
+    params = model.init(jax.random.PRNGKey(0))
     eng = ServeEngine(model, params, batch_size=2, max_context=64,
                       eos_token=-1)  # never hit eos
     rids = [eng.submit([1, 2, 3], max_new_tokens=4) for _ in range(5)]
@@ -80,12 +89,15 @@ def test_serve_engine_continuous_batching():
         assert all(0 <= t < cfg.vocab for t in r.tokens)
 
 
-def test_serve_engine_greedy_deterministic():
+def test_serve_engine_greedy_deterministic(fresh_jax):
     cfg = get_config("qwen2-1.5b").reduced()
     model = build_model(cfg)
-    params = model.init(RNG)
+    params = model.init(fresh_jax)
 
     def run_once():
+        # regression guard for the token-buffer aliasing race: ServeEngine
+        # must copy _tokens at dispatch (jnp.array), or the async step
+        # reads the buffer while the loop mutates it and this diverges
         eng = ServeEngine(model, params, batch_size=1, max_context=32)
         eng.submit([5, 6], max_new_tokens=6)
         return eng.run(max_steps=50)[0].tokens

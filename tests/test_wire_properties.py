@@ -1,0 +1,247 @@
+"""Property-based round-trip suite for the five wire formats.
+
+Hypothesis drives arbitrary column mixes, row counts (including zero),
+max-width strings, and NaN/inf floats through encode -> segments -> decode
+and requires **bit-identical** survival; on boxes without hypothesis the
+property tests degrade to skips (tests/hypothesis_fallback.py) while the
+deterministic edge-case tests below still run everywhere.
+
+The block formats (arrowcol, arrowrow, binary_rows, tagged) round-trip
+ColumnBlocks; parts_rows round-trips its native unit, typed part rows
+(its ColumnBlock shim goes through delimiter re-parsing and is exercised
+separately with delimiter-safe data).
+"""
+
+import math
+import struct
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from hypothesis_fallback import given, settings, st
+
+from repro.core.iobuf import BufferPool, DecodeArena
+from repro.core.types import ColType, ColumnBlock, Field, Schema
+from repro.core.wire import get_wire_format
+from repro.core.wire.parts_rows import PartsRowsFormat
+
+BLOCK_FORMATS = ["arrowcol", "arrowrow", "binary_rows", "tagged"]
+
+_I32 = 2**31
+_I64 = 2**63
+
+
+def _bits(a: np.ndarray) -> np.ndarray:
+    """Bit pattern view for exact float comparison (NaN payloads count)."""
+    if a.dtype == np.float64:
+        return a.view(np.uint64)
+    if a.dtype == np.float32:
+        return a.view(np.uint32)
+    return a
+
+
+def assert_bit_identical(a: ColumnBlock, b: ColumnBlock) -> None:
+    assert a.schema.types == b.schema.types
+    assert len(a) == len(b)
+    for f, ca, cb in zip(a.schema, a.columns, b.columns):
+        if f.type is ColType.STRING:
+            assert list(ca) == list(cb), f"column {f.name}"
+        else:
+            xa = np.asarray(ca, f.type.np_dtype)
+            xb = np.asarray(cb, f.type.np_dtype)
+            np.testing.assert_array_equal(_bits(xa), _bits(xb),
+                                          err_msg=f"column {f.name}")
+
+
+def _roundtrip(fmt: str, block: ColumnBlock, arena=None) -> None:
+    wire = get_wire_format(fmt)
+    segs = wire.encode_block(block, pool=BufferPool())
+    payload = segs.join()
+    segs.release()
+    # decode twice: from plain bytes, and in place from a memoryview (the
+    # shm-ring read path); both must agree bit for bit
+    got_bytes = wire.decode_block(payload, block.schema, arena=arena)
+    got_view = wire.decode_block(memoryview(payload), block.schema,
+                                 arena=arena)
+    assert_bit_identical(block, got_bytes)
+    assert_bit_identical(block, got_view)
+
+
+# -- strategies ---------------------------------------------------------------------
+
+_string = st.text(max_size=48)
+
+
+def _column(ct, n):
+    if ct is ColType.STRING:
+        return st.lists(_string, min_size=n, max_size=n)
+    if ct is ColType.BOOL:
+        elems = st.booleans()
+    elif ct is ColType.INT32:
+        elems = st.integers(-_I32, _I32 - 1)
+    elif ct is ColType.INT64:
+        elems = st.integers(-_I64, _I64 - 1)
+    elif ct is ColType.FLOAT32:
+        elems = st.floats(width=32, allow_nan=False, allow_infinity=True)
+    else:
+        elems = st.floats(width=64, allow_nan=True, allow_infinity=True)
+    return st.lists(elems, min_size=n, max_size=n)
+
+
+@st.composite
+def column_blocks(draw):
+    """Arbitrary column mixes, including zero-row and zero-column blocks."""
+    ncols = draw(st.integers(0, 5))
+    nrows = draw(st.integers(0, 40))
+    fields, cols = [], []
+    for i in range(ncols):
+        ct = draw(st.sampled_from(list(ColType)))
+        fields.append(Field(f"c{i}", ct))
+        vals = draw(_column(ct, nrows))
+        cols.append(vals if ct is ColType.STRING
+                    else np.asarray(vals, ct.np_dtype))
+    return ColumnBlock(Schema(fields), cols)
+
+
+_part = st.one_of(
+    st.booleans(),
+    st.integers(-_I64, _I64 - 1),
+    st.floats(width=64, allow_nan=True, allow_infinity=True),
+    st.text(max_size=32),
+)
+
+
+# -- hypothesis properties ----------------------------------------------------------
+
+
+@given(column_blocks(), st.sampled_from(BLOCK_FORMATS))
+@settings(max_examples=60, deadline=None)
+def test_block_roundtrip_property(block, fmt):
+    _roundtrip(fmt, block)
+
+
+@given(column_blocks(), st.sampled_from(BLOCK_FORMATS))
+@settings(max_examples=30, deadline=None)
+def test_block_roundtrip_property_with_arena(block, fmt):
+    _roundtrip(fmt, block, arena=DecodeArena(BufferPool()))
+
+
+@given(st.lists(st.lists(_part, max_size=12), max_size=24))
+@settings(max_examples=60, deadline=None)
+def test_parts_rows_roundtrip_property(part_rows):
+    wire = PartsRowsFormat()
+    segs = wire.encode_parts(part_rows, pool=BufferPool())
+    payload = segs.join()
+    segs.release()
+    for data in (payload, memoryview(payload)):
+        got = [tuple(a.parts) for a in wire.decode_parts(data)]
+        assert len(got) == len(part_rows)
+        for want_row, got_row in zip(part_rows, got):
+            assert len(want_row) == len(got_row)
+            for w, g in zip(want_row, got_row):
+                assert type(g) is type(w)
+                if isinstance(w, float):
+                    assert struct.pack("<d", w) == struct.pack("<d", g)
+                else:
+                    assert w == g
+
+
+@given(st.binary(max_size=2048), st.integers(64, 333))
+@settings(max_examples=40, deadline=None)
+def test_shm_ring_frame_roundtrip_property(payload, capacity_step):
+    """Arbitrary payloads through a deliberately tiny ring: the frame must
+    survive the wrap-marker path bit for bit."""
+    from repro.core.shm_ring import ShmRing, ShmRingTransport
+    from repro.core.transport import FRAME_BLOCK
+
+    ring = ShmRing.create(capacity=2048 + 5 + capacity_step, role="reader")
+    try:
+        tx, rx = ShmRingTransport(ring), ShmRingTransport(ring)
+        for chunk in range(3):  # repeat so the cursor walks into a wrap
+            tx.send_frames(FRAME_BLOCK, [payload])
+            kind, got = rx.recv_frame()
+            assert kind == FRAME_BLOCK and bytes(got) == payload
+    finally:
+        ring.close()
+
+
+# -- deterministic edge cases (run even without hypothesis) -------------------------
+
+
+@pytest.mark.parametrize("fmt", BLOCK_FORMATS)
+def test_zero_row_block_roundtrip(fmt):
+    schema = Schema.of(("a", ColType.INT64), ("s", ColType.STRING),
+                       ("x", ColType.FLOAT64))
+    block = ColumnBlock(schema, [np.empty(0, np.int64), [],
+                                 np.empty(0, np.float64)])
+    _roundtrip(fmt, block)
+
+
+@pytest.mark.parametrize("fmt", BLOCK_FORMATS)
+def test_empty_block_roundtrip(fmt):
+    _roundtrip(fmt, ColumnBlock(Schema([]), []))
+
+
+@pytest.mark.parametrize("fmt", BLOCK_FORMATS)
+def test_nan_inf_floats_bit_identical(fmt):
+    vals = np.array([0.0, -0.0, math.inf, -math.inf, math.nan,
+                     np.float64(1e308), 5e-324], np.float64)
+    # a NaN with a non-default payload must survive too
+    vals = np.concatenate([vals, np.array([0x7FF80000DEADBEEF],
+                                          np.uint64).view(np.float64)])
+    block = ColumnBlock(Schema.of(("x", ColType.FLOAT64)), [vals])
+    _roundtrip(fmt, block)
+
+
+@pytest.mark.parametrize("fmt", BLOCK_FORMATS)
+def test_max_width_strings_roundtrip(fmt):
+    big = "\N{SNOWMAN}" * 33000 + "tail"   # multi-byte utf8, >64 KiB heap
+    wide = ["", "x" * 65535, big, "plain"]
+    block = ColumnBlock(
+        Schema.of(("k", ColType.INT32), ("s", ColType.STRING)),
+        [np.arange(4, dtype=np.int32), wide],
+    )
+    _roundtrip(fmt, block)
+
+
+@pytest.mark.parametrize("fmt", BLOCK_FORMATS)
+def test_int_extremes_roundtrip(fmt):
+    block = ColumnBlock(
+        Schema.of(("i32", ColType.INT32), ("i64", ColType.INT64),
+                  ("b", ColType.BOOL)),
+        [np.array([-_I32, _I32 - 1, 0, -1], np.int32),
+         np.array([-_I64, _I64 - 1, 0, -1], np.int64),
+         np.array([True, False, True, False])],
+    )
+    _roundtrip(fmt, block)
+
+
+@pytest.mark.parametrize("fmt", BLOCK_FORMATS)
+def test_decoded_columns_never_alias_wire_buffer(fmt):
+    """Without an arena, decode output must own its memory: a column view
+    into the wire buffer would be corrupted when a transport span is
+    recycled (regression: single-fixed-column arrowrow returned a view)."""
+    schema = Schema.of(("a", ColType.INT64))
+    block = ColumnBlock(schema, [np.arange(16, dtype=np.int64)])
+    wire = get_wire_format(fmt)
+    payload = bytearray(wire.encode_block(block).join())
+    got = wire.decode_block(memoryview(payload), schema)
+    snapshot = np.asarray(got.columns[0]).copy()
+    payload[:] = b"\xff" * len(payload)  # simulate span recycling
+    np.testing.assert_array_equal(np.asarray(got.columns[0]), snapshot)
+
+
+def test_parts_rows_edges_deterministic():
+    wire = PartsRowsFormat()
+    rows = [[], [True, False], [0, -(2**63), 2**63 - 1],
+            [math.inf, -0.0], ["", ",", "a" * 70000, "néwliné\n"]]
+    payload = wire.encode_parts(rows).join()
+    got = [list(a.parts) for a in wire.decode_parts(memoryview(payload))]
+    assert got[0] == [] and got[1] == [True, False]
+    assert got[2] == [0, -(2**63), 2**63 - 1]
+    assert got[3][0] == math.inf and struct.pack("<d", got[3][1]) == \
+        struct.pack("<d", -0.0)
+    assert got[4] == ["", ",", "a" * 70000, "néwliné\n"]
