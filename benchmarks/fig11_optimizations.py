@@ -5,7 +5,13 @@ Rungs: file baseline -> IORedirect only (text) -> +binary primitives
 (parts) -> +delimiter removal (binary_rows) -> full PipeGen (arrowcol,
 column pivot).  A manually-optimized pipe (hand-written socket transfer of
 the typed columns, no PipeGen machinery) bounds what generation could hope
-to reach."""
+to reach.
+
+Beyond the ladder, the stream-fabric rungs: a streams sweep (one pipe
+striped across N member connections; ``run.py --transport/--streams``
+override the swept sets) measured both raw and under a per-link
+bandwidth cap (the multi-NIC scenario striping exists for), and an
+N=2→M=3 hash-partitioned shuffle probe."""
 
 from __future__ import annotations
 
@@ -13,11 +19,19 @@ import pickle
 import socket
 import threading
 
-from repro.core import PipeConfig
+from repro.core import LinkSim, PipeConfig, transfer
 from repro.core.directory import WorkerDirectory, set_directory
 from repro.engines import make_engine, make_paper_block
 
-from .common import DEFAULT_ROWS, emit, file_transfer, pipe_transfer, timed
+from .common import (
+    DEFAULT_ROWS,
+    REPEATS,
+    emit,
+    file_transfer,
+    fresh,
+    pipe_transfer,
+    timed,
+)
 
 RUNGS = [
     ("ioredirect", PipeConfig(mode="text")),
@@ -83,7 +97,70 @@ def _recv_exact(sock, n):
     return buf
 
 
-def main(n_rows: int = DEFAULT_ROWS) -> dict:
+#: streams-sweep defaults (overridable via ``run.py --transport/--streams``)
+SWEEP_TRANSPORTS = ("socket",)
+SWEEP_STREAMS = (1, 4)
+#: per-link bandwidth cap for the link-limited sweep: striping across N
+#: members models N NICs, so the capped rung shows the N-fold pipe (tight
+#: enough to bind even at --quick row counts)
+_SWEEP_LINK_BPS = 100e6
+_SWEEP_BLOCK_ROWS = 2048  # many frames even at --quick row counts
+
+
+def _streams_sweep(n_rows: int, transports, streams_list) -> dict:
+    out = {}
+    for t in transports:
+        for s in streams_list:
+            cfg = PipeConfig(mode="arrowcol", transport=t, streams=s,
+                             block_rows=_SWEEP_BLOCK_ROWS,
+                             shm_capacity=1 << 22)
+            sec = pipe_transfer("colstore", "graphstore", n_rows, cfg)
+            out[(t, s)] = sec
+            emit(f"fig11.streams_{t}_x{s}", sec)
+        base = out.get((t, 1))
+        best = min(s for s in streams_list)
+        top = max(s for s in streams_list)
+        if base and (t, top) in out and top != best:
+            emit(f"fig11.streams{top}_vs_streams1_{t}",
+                 base - out[(t, top)],
+                 f"speedup={base / out[(t, top)]:.2f}x")
+    # link-limited: same sweep under a per-connection bandwidth cap — the
+    # multi-NIC case where striping buys aggregate bandwidth outright
+    for s in sorted({min(streams_list), max(streams_list)}):
+        cfg = PipeConfig(mode="arrowcol", streams=s,
+                         block_rows=_SWEEP_BLOCK_ROWS,
+                         link=LinkSim(bandwidth_bps=_SWEEP_LINK_BPS,
+                                      min_sleep_s=0.0005))
+        sec = pipe_transfer("colstore", "graphstore", n_rows, cfg)
+        out[("link", s)] = sec
+        emit(f"fig11.streams_link_x{s}", sec)
+    lo, hi = min(streams_list), max(streams_list)
+    if lo != hi:
+        emit("fig11.streams_link_speedup",
+             out[("link", lo)] - out[("link", hi)],
+             f"speedup={out[('link', lo)] / out[('link', hi)]:.2f}x")
+    return out
+
+
+def _shuffle_probe(n_rows: int) -> float:
+    """N=2→M=3 hash-partitioned repartitioning transfer (colstore both
+    sides: the graphstore analog cannot hold arbitrary relations)."""
+
+    def run():
+        fresh()
+        src = make_engine("colstore")
+        dst = make_engine("colstore")
+        src.put_block("t", make_paper_block(n_rows, seed=1))
+        transfer(src, "t", dst, "t2",
+                 config=PipeConfig(mode="arrowcol",
+                                   block_rows=_SWEEP_BLOCK_ROWS),
+                 workers=2, import_workers=3, partition="hash", timeout=300)
+        assert len(dst.get_block("t2")) == n_rows
+
+    return timed(run, repeats=REPEATS)
+
+
+def main(n_rows: int = DEFAULT_ROWS, transports=None, streams_sweep=None) -> dict:
     out = {}
     tf = file_transfer("colstore", "graphstore", n_rows)
     out["file"] = tf
@@ -109,6 +186,15 @@ def main(n_rows: int = DEFAULT_ROWS) -> dict:
         emit(f"fig11.{name}_best3", out[name], f"speedup={tf / out[name]:.2f}x")
     emit("fig11.shm_vs_channel", out["pipegen_channel"] - out["pipegen_shm"],
          f"ratio={out['pipegen_channel'] / out['pipegen_shm']:.2f}x")
+    # stream-fabric rungs: striping sweep + N→M shuffle
+    out["streams"] = _streams_sweep(
+        n_rows,
+        transports or SWEEP_TRANSPORTS,
+        streams_sweep or SWEEP_STREAMS,
+    )
+    ts = _shuffle_probe(n_rows)
+    out["shuffle_2x3"] = ts
+    emit("fig11.shuffle_2x3", ts, f"vs_file={tf / ts:.2f}x")
     set_directory(WorkerDirectory())
     tm = _manual_pipe(n_rows)
     out["manual"] = tm

@@ -2,7 +2,12 @@
 
 Prints ``name,us_per_call,derived`` CSV.  Usage:
 
-    PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig09,...]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig09,...] \
+        [--transport socket,shm] [--streams 1,2,4]
+
+``--transport``/``--streams`` widen the fig11 stream-fabric sweep (which
+transports to stripe over and which stream counts to compare; defaults:
+socket, 1 vs 4).
 """
 
 from __future__ import annotations
@@ -44,22 +49,43 @@ def main(argv=None) -> int:
                     help="smaller row counts (CI mode)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of benchmarks")
+    ap.add_argument("--transport", default=None,
+                    help="comma-separated transports for the fig11 streams "
+                         "sweep (socket,channel,shm)")
+    ap.add_argument("--streams", default=None,
+                    help="comma-separated stream counts for the fig11 "
+                         "streams sweep (e.g. 1,2,4)")
     args = ap.parse_args(argv)
 
     names = list(MODULES) if not args.only else args.only.split(",")
     unknown = [n for n in names if n not in MODULES]
     if unknown:
         ap.error(f"unknown benchmark(s) {unknown}; have {sorted(MODULES)}")
+    streams_sweep = None
+    if args.streams:
+        try:
+            streams_sweep = [int(s) for s in args.streams.split(",")]
+        except ValueError:
+            ap.error(f"--streams must be comma-separated ints, got "
+                     f"{args.streams!r}")
+        if any(s < 1 for s in streams_sweep):
+            ap.error("--streams values must be >= 1")
     print("name,us_per_call,derived")
     failures = 0
     for name in names:
         mod = MODULES[name]
+        kwargs = {}
+        if name == "fig11":
+            if args.transport:
+                kwargs["transports"] = args.transport.split(",")
+            if streams_sweep:
+                kwargs["streams_sweep"] = streams_sweep
         t0 = time.time()
         try:
             if args.quick and name.startswith(("fig", "table1")):
-                mod.main(4000)
+                mod.main(4000, **kwargs)
             else:
-                mod.main()
+                mod.main(**kwargs)
         except Exception as e:  # noqa: BLE001
             failures += 1
             print(f"{name}.ERROR,0,{type(e).__name__}: {e}")

@@ -17,11 +17,22 @@ from .datapipe import (
     PipeConfig,
     PipeStats,
     ReservedName,
+    collect_stats,
     is_reserved,
     open_pipe_reader,
     open_pipe_writer,
     parse_reserved,
 )
+from .fabric import (
+    HashPartitioner,
+    Partitioner,
+    RangePartitioner,
+    RoundRobinPartitioner,
+    ShuffleWriter,
+    parse_partition,
+    split_block,
+)
+from .stream import FaninTransport, StripedReceiver, StripedSender
 from .iobuf import (
     BufferPool,
     BufWriter,

@@ -53,6 +53,12 @@ from .formopt import (
     render_delimited,
     render_json,
 )
+from .stream import (
+    DEFAULT_STREAM_WINDOW,
+    FaninTransport,
+    StripedReceiver,
+    StripedSender,
+)
 from .transport import (
     FRAME_BLOCK,
     FRAME_EOF,
@@ -81,6 +87,7 @@ __all__ = [
     "open_pipe_writer",
     "open_pipe_reader",
     "PipeStats",
+    "collect_stats",
 ]
 
 RESERVED_SCHEME = "db"
@@ -143,7 +150,20 @@ class PipeConfig:
     shared-memory ring, zero intermediate copies); ``decode_arena`` supplies
     a dedicated :class:`~repro.core.iobuf.DecodeArena` so decode pool stats
     attribute to one pipe (default: a per-pipe arena over the process-wide
-    decode pool)."""
+    decode pool).
+
+    Stream-fabric knobs (``repro.core.stream`` / ``repro.core.fabric``):
+    ``streams`` (importer-local) stripes each pipe across N member
+    connections of the chosen transport flavor — the importer registers a
+    multi-endpoint group, the exporter's frames spread round-robin over the
+    members and reassemble in sequence order behind a ``stream_window``-
+    frame reorder window with per-stream credits.  ``partition`` (exporter-
+    local) turns the transfer into an N→M shuffle: every exporter worker
+    routes rows to *all* import workers by key (``hash[:col]``,
+    ``range[:col]``, ``rr``); ``fanin`` (importer-local, set by
+    :func:`repro.core.session.transfer`) is the number of exporter streams
+    each importer merges.  ``streams`` and ``partition`` are mutually
+    exclusive on one pipe."""
 
     mode: str = "arrowcol"  # text | parts | binary_rows | tagged | arrowrow | arrowcol
     codec: str = "none"  # none | rle | zip | zstd
@@ -161,6 +181,10 @@ class PipeConfig:
     transport: str = "socket"  # socket | channel | shm (importer-side)
     shm_capacity: int = DEFAULT_RING_CAPACITY  # ring data-region bytes
     decode_arena: Optional[DecodeArena] = None  # importer-side decode pool
+    streams: int = 1  # stripe each pipe across N member connections
+    stream_window: int = DEFAULT_STREAM_WINDOW  # reorder window (frames)
+    partition: Optional[str] = None  # N→M shuffle: hash[:col]|range[:col]|rr
+    fanin: int = 1  # importer-side: exporter streams to merge (shuffle)
 
     def meta(self) -> dict:
         return {
@@ -185,6 +209,51 @@ class PipeStats:
     decode_pool_hits: int = 0    # importer: arena stores served from retention
     decode_pool_misses: int = 0
     shm_spans: int = 0           # frames carried as in-place shm ring spans
+    # striped pipes: one dict per member stream ({stream, bytes, frames, ...});
+    # merged views concatenate, so a shuffle's M members each contribute theirs
+    per_stream: List[dict] = field(default_factory=list)
+
+    _SUMMED = ("bytes_sent", "frames_sent", "rows", "blocks",
+               "copies_avoided", "pool_hits", "pool_misses",
+               "send_overlap_s", "decode_pool_hits", "decode_pool_misses",
+               "shm_spans")
+
+    def merge(self, other: "PipeStats") -> "PipeStats":
+        """Fold ``other`` into this view (counters sum, per-stream
+        breakdowns concatenate).  Returns self, so
+        ``PipeStats().merge(a).merge(b)`` builds an aggregate."""
+        for name in self._SUMMED:
+            setattr(self, name, getattr(self, name) + getattr(other, name))
+        self.per_stream = self.per_stream + list(other.per_stream)
+        return self
+
+
+# -- per-transfer stats sink ---------------------------------------------------
+# Pipes are opened deep inside engine code, so the session layer cannot reach
+# them directly; closing pipes fold their PipeStats in here under the
+# (dataset, query_id) of their reserved name, and
+# :func:`repro.core.session.transfer` collects the merged views into the
+# TransferResult.  Bounded so an uncollected benchmark loop cannot grow it.
+
+_SINK_MAX = 256
+_sink_lock = threading.Lock()
+_stats_sink: "dict[Tuple[str, str], dict]" = {}
+
+
+def _record_stats(rn: ReservedName, role: str, stats: "PipeStats") -> None:
+    with _sink_lock:
+        if len(_stats_sink) >= _SINK_MAX:
+            _stats_sink.pop(next(iter(_stats_sink)))
+        roles = _stats_sink.setdefault((rn.dataset, rn.query_id), {})
+        agg = roles.setdefault(role, PipeStats())
+        agg.merge(stats)
+
+
+def collect_stats(dataset: str, query_id: str = "0") -> "dict[str, PipeStats]":
+    """Pop the merged per-role (``export``/``import``) stats for one
+    transfer — aggregated across workers, shuffle members, and streams."""
+    with _sink_lock:
+        return _stats_sink.pop((dataset, query_id), {})
 
 
 class _PoolHandle:
@@ -311,7 +380,14 @@ class DataPipeOutput:
                 export_workers=rn.workers,
                 timeout=self.config.connect_timeout,
             )
-        self._transport = _connect(endpoint, self.config.link)
+        if endpoint.is_group:
+            # the importer striped its pipe: connect every member (in
+            # registration order -- the importer accepts in the same order)
+            # and spread frames across them (repro.core.stream)
+            members = [_connect(m, self.config.link) for m in endpoint.members]
+            self._transport: Transport = StripedSender(members)
+        else:
+            self._transport = _connect(endpoint, self.config.link)
         self._pool = _PoolHandle(self.config.pool or default_pool())
         self._sender: Optional[_PipelinedSender] = None
         if self.config.pipelined:
@@ -397,14 +473,23 @@ class DataPipeOutput:
                 except BaseException as e:  # noqa: BLE001 - re-raised below
                     sender_err = e
                 self.stats.send_overlap_s = self._sender.overlap_s
+            # always close the transport -- a sender failure must not leave
+            # the reader blocked on a half-open stream.  Close *before*
+            # reading the counters: a striped sender only finishes sending
+            # (drains its member queues) inside close().
+            try:
+                self._transport.close()
+            except BaseException as e:  # noqa: BLE001 - re-raised below
+                sender_err = sender_err or e
             self.stats.bytes_sent = self._transport.bytes_sent
             self.stats.frames_sent = self._transport.frames_sent
             self.stats.pool_hits = self._pool.hits
             self.stats.pool_misses = self._pool.misses
             self.stats.shm_spans = getattr(self._transport, "shm_spans", 0)
-            # always close the transport -- a sender failure must not leave
-            # the reader blocked on a half-open stream
-            self._transport.close()
+            per_stream = getattr(self._transport, "per_stream", None)
+            if per_stream is not None:
+                self.stats.per_stream = per_stream()
+            _record_stats(self.reserved, "export", self.stats)
         if sender_err is not None:
             raise sender_err
 
@@ -562,6 +647,11 @@ class DataPipeOutput:
             self._send_schema(block.schema, header_names=header)
         n = len(block)
         rows_per_sub = self.config.block_rows
+        nstreams = getattr(self._transport, "nstreams", 1)
+        if nstreams > 1 and n:
+            # striped pipe: a one-shot bulk export must still produce at
+            # least one frame per member stream, or the stripes sit idle
+            rows_per_sub = min(rows_per_sub, max(1, -(-n // nstreams)))
         for lo in range(0, n, rows_per_sub):
             sub = (
                 block
@@ -634,6 +724,9 @@ class DataPipeInput:
         transport: Optional[str] = None,
         shm_capacity: int = DEFAULT_RING_CAPACITY,
         arena: Optional[DecodeArena] = None,
+        streams: int = 1,
+        fanin: int = 1,
+        stream_window: int = DEFAULT_STREAM_WINDOW,
     ):
         rn = parse_reserved(filename)
         if rn is None:
@@ -642,36 +735,48 @@ class DataPipeInput:
         directory = directory or get_directory()
         if transport is None:
             transport = "channel" if channel is not None else "socket"
-        if transport == "channel":
+        if transport not in ("socket", "channel", "shm"):
+            raise ValueError(
+                f"unknown transport {transport!r}; have socket/channel/shm")
+        if streams > 1 and fanin > 1:
+            raise ValueError(
+                "streams>1 (striped pipe) and fanin>1 (shuffle merge) do "
+                "not compose on one pipe; stripe the member pipes instead")
+        workers = import_workers or rn.workers
+        if streams > 1:
+            self._transport: Transport = self._rendezvous_striped(
+                rn, directory, transport, streams, stream_window,
+                host, link, shm_capacity, workers)
+        elif fanin > 1:
+            self._transport = self._rendezvous_fanin(
+                rn, directory, transport, fanin, host, link, workers)
+        elif transport == "channel":
             ch = channel if channel is not None else Channel()
             directory.register(
                 rn.dataset, Endpoint(channel=ch), rn.query_id,
-                import_workers=import_workers or rn.workers,
+                import_workers=workers,
             )
-            self._transport: Transport = ChannelTransport(ch, link)
+            self._transport = ChannelTransport(ch, link)
         elif transport == "shm":
             ring = acquire_ring(shm_capacity)
             directory.register(
                 rn.dataset,
                 Endpoint(shm_name=ring.name, shm_capacity=ring.capacity),
                 rn.query_id,
-                import_workers=import_workers or rn.workers,
+                import_workers=workers,
             )
             self._transport = ShmRingTransport(ring, link)
-        elif transport == "socket":
+        else:
             lsock = listen_socket(host)
             h, p = lsock.getsockname()
             directory.register(
                 rn.dataset, Endpoint(h, p), rn.query_id,
-                import_workers=import_workers or rn.workers,
+                import_workers=workers,
             )
             lsock.settimeout(60.0)
             conn, _ = lsock.accept()
             lsock.close()
             self._transport = SocketTransport(conn, link)
-        else:
-            raise ValueError(
-                f"unknown transport {transport!r}; have socket/channel/shm")
         self._arena = arena or DecodeArena()
         self.stats = PipeStats()
         self.schema: Optional[Schema] = None
@@ -689,6 +794,79 @@ class DataPipeInput:
         self._head_text: Optional[str] = None  # head block rendered (memoized)
         self._head_off = 0           # chars of head text consumed by read()
         self._header_pending = False  # header line not yet delivered as text
+
+    # -- fabric rendezvous -------------------------------------------------------
+    @staticmethod
+    def _rendezvous_striped(rn, directory, transport, streams, window,
+                            host, link, shm_capacity, workers) -> Transport:
+        """Register one multi-endpoint group and reassemble N member
+        connections into one ordered stream (repro.core.stream)."""
+        if transport == "channel":
+            chans = [Channel() for _ in range(streams)]
+            members = tuple(Endpoint(channel=c) for c in chans)
+            directory.register(rn.dataset, Endpoint(members=members),
+                               rn.query_id, import_workers=workers)
+            parts: List[Transport] = [ChannelTransport(c, link) for c in chans]
+        elif transport == "shm":
+            rings = [acquire_ring(shm_capacity) for _ in range(streams)]
+            members = tuple(
+                Endpoint(shm_name=r.name, shm_capacity=r.capacity)
+                for r in rings)
+            directory.register(rn.dataset, Endpoint(members=members),
+                               rn.query_id, import_workers=workers)
+            parts = [ShmRingTransport(r, link) for r in rings]
+        else:
+            lsocks = [listen_socket(host) for _ in range(streams)]
+            members = tuple(
+                Endpoint(*ls.getsockname()) for ls in lsocks)
+            directory.register(rn.dataset, Endpoint(members=members),
+                               rn.query_id, import_workers=workers)
+            parts = []
+            # the exporter (or the stub path) connects to the members in
+            # registration order, so sequential accepts pair up correctly;
+            # the listen backlog absorbs any out-of-order connects
+            for ls in lsocks:
+                ls.settimeout(60.0)
+                conn, _ = ls.accept()
+                ls.close()
+                parts.append(SocketTransport(conn, link))
+        return StripedReceiver(parts, window=window)
+
+    @staticmethod
+    def _rendezvous_fanin(rn, directory, transport, fanin,
+                          host, link, workers) -> Transport:
+        """Register one rendezvous and merge ``fanin`` exporter streams
+        (the shuffle's import side)."""
+        if transport == "shm":
+            raise ValueError(
+                "shuffle fan-in cannot run over the shm ring "
+                "(single-producer); use transport='socket' or 'channel'")
+        if transport == "channel":
+            ch = Channel(maxsize=64 * max(1, fanin))
+            directory.register(
+                rn.dataset, Endpoint(channel=ch, shared=True), rn.query_id,
+                import_workers=workers,
+            )
+            # one shared multi-producer queue: exporters must not close it
+            # under each other (Endpoint.shared), termination is counted
+            # from the explicit EOF frames
+            return FaninTransport([ChannelTransport(ch, link)],
+                                  expected_sources=fanin)
+        lsock = listen_socket(host)
+        h, p = lsock.getsockname()
+        directory.register(
+            rn.dataset, Endpoint(h, p, shared=True), rn.query_id,
+            import_workers=workers,
+        )
+        lsock.settimeout(60.0)
+        conns: List[Transport] = []
+        try:
+            for _ in range(fanin):
+                conn, _ = lsock.accept()
+                conns.append(SocketTransport(conn, link))
+        finally:
+            lsock.close()
+        return FaninTransport(conns)
 
     # -- negotiation -------------------------------------------------------------
     def _start(self) -> None:
@@ -1007,6 +1185,10 @@ class DataPipeInput:
         self.stats.decode_pool_hits = self._arena.hits
         self.stats.decode_pool_misses = self._arena.misses
         self.stats.shm_spans = getattr(self._transport, "shm_spans", 0)
+        per_stream = getattr(self._transport, "per_stream", None)
+        if per_stream is not None:
+            self.stats.per_stream = per_stream()
+        _record_stats(self.reserved, "import", self.stats)
         self._transport.close()
 
     def __enter__(self) -> "DataPipeInput":
@@ -1081,7 +1263,9 @@ def _cheap_len(s: Any) -> int:
 
 def _connect(ep: Endpoint, link: Optional[LinkSim]) -> Transport:
     if ep.is_channel:
-        return ChannelTransport(ep.channel, link)
+        # a shared channel (shuffle fan-in) is torn down by EOF counting,
+        # not by any single finishing exporter
+        return ChannelTransport(ep.channel, link, owns_channel=not ep.shared)
     if ep.is_shm:
         return ShmRingTransport(attach_ring(ep.shm_name), link)
     s = socket.create_connection((ep.host, ep.port), timeout=30.0)

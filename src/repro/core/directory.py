@@ -18,6 +18,26 @@ N:M mismatches follow the paper:
   surplus exporters round-robin onto existing importer endpoints (importers
   then merge multiple streams).
 
+Beyond the paper's 1:1 pairing, two fabric extensions:
+
+* **multi-endpoint registrations** — an importer striping its pipe across
+  N member connections registers one :class:`Endpoint` whose ``members``
+  carry the N rendezvous points; ``query`` pops the whole group, so the
+  exporter wires a striped sender (``repro.core.stream``) in one match;
+* **shuffle lookups** — :meth:`WorkerDirectory.query_all` returns *every*
+  registered importer endpoint for a query without popping, once the
+  declared importer count has registered.  N exporters each connect to
+  all M importers (the N→M repartitioning of ``repro.core.fabric``);
+  importers merge the N streams and the entries are never consumed, so
+  the stub machinery stays out of the way (no exporter count is declared
+  on this path).
+
+Hygiene: every registration is stamped with the registrant's pid.  Entries
+whose registrant died (unclean worker exit) are garbage-collected on the
+query paths and on :meth:`reset` — including unlinking any shared-memory
+ring segments they left behind — so a crashed importer cannot poison later
+transfers for the same dataset with stale endpoints.
+
 Per-query identifiers disambiguate concurrent transfers between the same
 pair of engines.  A TCP ``DirectoryServer``/``DirectoryClient`` pair extends
 the same API across processes (used by the multi-process examples).
@@ -26,10 +46,11 @@ the same API across processes (used by the multi-process examples).
 from __future__ import annotations
 
 import json
+import os
 import socket
 import threading
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace as _dc_replace
 from typing import Dict, List, Optional, Tuple, Union
 
 from .transport import (
@@ -51,13 +72,25 @@ __all__ = [
 
 @dataclass(frozen=True)
 class Endpoint:
-    """An importer's rendezvous point."""
+    """An importer's rendezvous point.
+
+    ``members`` makes this a *multi-endpoint registration*: the importer
+    stripes its pipe across ``len(members)`` connections and the exporter
+    must connect to every member, in order (``repro.core.stream``).
+    ``shared`` marks a rendezvous that multiple exporters connect to
+    concurrently (the shuffle's fan-in over one in-process channel), so a
+    finishing exporter must not tear it down under its peers.  ``pid`` is
+    the registrant, stamped by the directory for dead-worker GC.
+    """
 
     host: str = ""
     port: int = 0
     channel: Optional[Channel] = None  # in-process fast path
     shm_name: str = ""                 # shared-memory ring (cross-process)
     shm_capacity: int = 0
+    members: Tuple["Endpoint", ...] = ()  # striped group (one per stream)
+    shared: bool = False               # multiple exporters attach (shuffle)
+    pid: int = 0                       # registrant, for dead-worker GC
 
     @property
     def is_channel(self) -> bool:
@@ -66,6 +99,10 @@ class Endpoint:
     @property
     def is_shm(self) -> bool:
         return bool(self.shm_name)
+
+    @property
+    def is_group(self) -> bool:
+        return bool(self.members)
 
 
 @dataclass
@@ -98,6 +135,8 @@ class WorkerDirectory:
         query_id: str = "0",
         import_workers: Optional[int] = None,
     ) -> None:
+        if endpoint.pid == 0:
+            endpoint = _dc_replace(endpoint, pid=os.getpid())
         with self._lock:
             st = self._state(dataset, query_id)
             st.entries.append(endpoint)
@@ -121,6 +160,7 @@ class WorkerDirectory:
             st = self._state(dataset, query_id)
             if export_workers is not None:
                 st.export_workers = export_workers
+            self._gc_dead_locked(st)
             while not st.entries:
                 if (
                     self.multiplex
@@ -140,11 +180,42 @@ class WorkerDirectory:
                         f"(query {query_id!r}) within timeout"
                     )
                 self._lock.wait(remaining)
+                self._gc_dead_locked(st)
             ep = st.entries.pop(0)
             st.popped += 1
             self._all_popped.setdefault((dataset, query_id), []).append(ep)
             self._maybe_stub_locked(dataset, query_id)
             return ep
+
+    def query_all(
+        self,
+        dataset: str,
+        query_id: str = "0",
+        timeout: float = 30.0,
+    ) -> List[Endpoint]:
+        """Every importer endpoint for a shuffle, *without* popping.
+
+        Blocks until the declared importer count (``import_workers`` from
+        the registrations) has registered, then returns the whole set; the
+        entries stay, so each of the N exporters gets the same M endpoints
+        and connects to all of them.
+        """
+        deadline = time.monotonic() + timeout
+        with self._lock:
+            st = self._state(dataset, query_id)
+            while True:
+                self._gc_dead_locked(st)
+                want = st.import_workers
+                if want is not None and len(st.entries) >= want:
+                    return list(st.entries)
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise TimeoutError(
+                        f"shuffle on {dataset!r} (query {query_id!r}): "
+                        f"{len(st.entries)} of {want or '?'} import workers "
+                        f"registered within timeout"
+                    )
+                self._lock.wait(remaining)
 
     # -- stub handling (importers > exporters) ----------------------------------
     def _maybe_stub_locked(self, dataset: str, query_id: str) -> None:
@@ -152,6 +223,7 @@ class WorkerDirectory:
         if st.export_workers is None or st.stubbed:
             return
         if st.popped >= st.export_workers and st.entries:
+            self._gc_dead_locked(st)  # never stub a dead importer's endpoint
             want = st.import_workers
             if want is None or st.registered >= want:
                 orphans = list(st.entries)
@@ -162,23 +234,64 @@ class WorkerDirectory:
                         target=_send_stub_eof, args=(ep,), daemon=True
                     ).start()
 
+    # -- dead-worker hygiene -----------------------------------------------------
+    def _gc_dead_locked(self, st: _QueryState) -> None:
+        """Drop entries registered by processes that no longer exist and
+        release the transport resources (shm segments) they leaked."""
+        dead = [ep for ep in st.entries if not _registrant_alive(ep)]
+        if not dead:
+            return
+        st.entries[:] = [ep for ep in st.entries if _registrant_alive(ep)]
+        st.registered -= len(dead)
+        for ep in dead:
+            _release_endpoint(ep)
+
     # -- bookkeeping -------------------------------------------------------------
     def reset(self, dataset: Optional[str] = None) -> None:
         with self._lock:
             if dataset is None:
-                self._queries.clear()
-                self._all_popped.clear()
+                keys = list(self._queries)
             else:
-                for k in [k for k in self._queries if k[0] == dataset]:
-                    del self._queries[k]
-                for k in [k for k in self._all_popped if k[0] == dataset]:
-                    del self._all_popped[k]
+                keys = [k for k in self._queries if k[0] == dataset]
+            for k in keys:
+                # GC before forgetting: endpoints of dead registrants would
+                # otherwise leak their shm segments permanently
+                for ep in self._queries[k].entries:
+                    if not _registrant_alive(ep):
+                        _release_endpoint(ep)
+                del self._queries[k]
+            for k in [k for k in self._all_popped
+                      if dataset is None or k[0] == dataset]:
+                del self._all_popped[k]
+
+
+def _registrant_alive(ep: Endpoint) -> bool:
+    if ep.pid <= 0 or ep.pid == os.getpid():
+        return True
+    from .shm_ring import _pid_alive
+
+    return _pid_alive(ep.pid)
+
+
+def _release_endpoint(ep: Endpoint) -> None:
+    """Free what a dead registrant left behind (recursing into striped
+    groups): shm segments are unlinked so the name cannot poison a later
+    query; sockets/channels need nothing (the OS/GC reclaimed them)."""
+    for m in ep.members:
+        _release_endpoint(m)
+    if ep.is_shm:
+        from .shm_ring import ShmRing
+
+        ShmRing.cleanup(ep.shm_name)
 
 
 def _send_stub_eof(ep: Endpoint) -> None:
     """Open a stub connection that immediately signals end-of-file."""
     try:
-        if ep.is_channel:
+        if ep.is_group:
+            for m in ep.members:
+                _send_stub_eof(m)
+        elif ep.is_channel:
             ChannelTransport(ep.channel).send_frame(FRAME_EOF, b"")
         elif ep.is_shm:
             from .shm_ring import ShmRingTransport, attach_ring
@@ -195,6 +308,31 @@ def _send_stub_eof(ep: Endpoint) -> None:
 
 
 # -- cross-process directory ----------------------------------------------------
+
+
+def _ep_to_doc(ep: Endpoint) -> dict:
+    assert not ep.is_channel, "channels cannot cross processes"
+    return {
+        "host": ep.host,
+        "port": ep.port,
+        "shm_name": ep.shm_name,
+        "shm_capacity": ep.shm_capacity,
+        "shared": ep.shared,
+        "pid": ep.pid,
+        "members": [_ep_to_doc(m) for m in ep.members],
+    }
+
+
+def _ep_from_doc(doc: dict) -> Endpoint:
+    return Endpoint(
+        doc.get("host", ""),
+        int(doc.get("port", 0)),
+        shm_name=doc.get("shm_name", ""),
+        shm_capacity=int(doc.get("shm_capacity", 0)),
+        shared=bool(doc.get("shared", False)),
+        pid=int(doc.get("pid", 0)),
+        members=tuple(_ep_from_doc(m) for m in doc.get("members", [])),
+    )
 
 
 class DirectoryServer:
@@ -241,9 +379,7 @@ class DirectoryServer:
             if req["op"] == "register":
                 self.directory.register(
                     req["dataset"],
-                    Endpoint(req["host"], req["port"],
-                             shm_name=req.get("shm_name", ""),
-                             shm_capacity=int(req.get("shm_capacity", 0))),
+                    _ep_from_doc(req),
                     req.get("query_id", "0"),
                     req.get("import_workers"),
                 )
@@ -256,9 +392,18 @@ class DirectoryServer:
                         req.get("export_workers"),
                         timeout=float(req.get("timeout", 30.0)),
                     )
-                    resp = {"ok": True, "host": ep.host, "port": ep.port,
-                            "shm_name": ep.shm_name,
-                            "shm_capacity": ep.shm_capacity}
+                    resp = {"ok": True, **_ep_to_doc(ep)}
+                except TimeoutError as e:
+                    resp = {"ok": False, "error": str(e)}
+            elif req["op"] == "query_all":
+                try:
+                    eps = self.directory.query_all(
+                        req["dataset"],
+                        req.get("query_id", "0"),
+                        timeout=float(req.get("timeout", 30.0)),
+                    )
+                    resp = {"ok": True,
+                            "endpoints": [_ep_to_doc(e) for e in eps]}
                 except TimeoutError as e:
                     resp = {"ok": False, "error": str(e)}
             else:
@@ -296,17 +441,15 @@ class DirectoryClient:
         query_id: str = "0",
         import_workers: Optional[int] = None,
     ) -> None:
-        assert not endpoint.is_channel, "channels cannot cross processes"
+        if endpoint.pid == 0:
+            endpoint = _dc_replace(endpoint, pid=os.getpid())
         self._rpc(
             {
                 "op": "register",
                 "dataset": dataset,
-                "host": endpoint.host,
-                "port": endpoint.port,
-                "shm_name": endpoint.shm_name,
-                "shm_capacity": endpoint.shm_capacity,
                 "query_id": query_id,
                 "import_workers": import_workers,
+                **_ep_to_doc(endpoint),
             }
         )
 
@@ -328,9 +471,25 @@ class DirectoryClient:
         )
         if not resp.get("ok"):
             raise TimeoutError(resp.get("error", "directory query failed"))
-        return Endpoint(resp["host"], resp["port"],
-                        shm_name=resp.get("shm_name", ""),
-                        shm_capacity=resp.get("shm_capacity", 0))
+        return _ep_from_doc(resp)
+
+    def query_all(
+        self,
+        dataset: str,
+        query_id: str = "0",
+        timeout: float = 30.0,
+    ) -> List[Endpoint]:
+        resp = self._rpc(
+            {
+                "op": "query_all",
+                "dataset": dataset,
+                "query_id": query_id,
+                "timeout": timeout,
+            }
+        )
+        if not resp.get("ok"):
+            raise TimeoutError(resp.get("error", "directory query failed"))
+        return [_ep_from_doc(d) for d in resp.get("endpoints", [])]
 
 
 DirectoryLike = Union[WorkerDirectory, DirectoryClient]

@@ -1,0 +1,408 @@
+"""N→M repartitioning shuffle: route ColumnBlocks from N exporter workers
+to M importer workers by key.
+
+The paper's directory design pairs parallel workers 1:1 (section 4.2) —
+enough to move a table, but not to *repartition* it: the moment source and
+destination disagree on worker count or placement key, every exporter must
+feed every importer.  This module supplies the exporter half of that
+fabric: a :class:`Partitioner` decides, per row, which importer a row
+belongs to, and :class:`ShuffleWriter` — a drop-in for
+:class:`~repro.core.datapipe.DataPipeOutput` behind the same reserved-name
+``open`` — fans one exporter's output across all M import endpoints
+(looked up with :meth:`WorkerDirectory.query_all`, which does not pop).
+The import half is :class:`~repro.core.stream.FaninTransport`: each of the
+M importers merges the N exporter streams it receives.
+
+Partition specs (``PipeConfig.partition``)::
+
+    "hash"            hash of column 0 (the paper benchmark's unique key)
+    "hash:<col>"      hash of the named (or zero-based-index) column
+    "range"           range on column 0, bounds from the first block's
+                      quantiles (block export only)
+    "range:<col>"     same, named/indexed column
+    "rr"              round-robin by row position (no key)
+
+Hashing is a splitmix64 finalizer over the key's 64-bit pattern — the
+same function vectorized (numpy ``uint64``) for the block fast path and
+scalar for the row path, so both routes place a given key identically.
+Floats hash their IEEE bit pattern; strings hash a crc32 of their utf-8
+bytes.  Ints/bools use their two's-complement pattern.
+
+Semantics and limits:
+
+* row order *within* one (exporter, importer) stream is preserved; order
+  across streams is undefined (a shuffled relation is a bag — verify-
+  first-n is disabled on shuffle members for the same reason);
+* range bounds are computed per exporter from its first block, so the
+  split is approximate when exporters see skewed slices — fine for load
+  spreading, not a global sort;
+* the shm ring is single-producer and cannot take N exporters; shuffles
+  run over ``socket`` (one accepted connection per exporter) or
+  ``channel`` (one shared multi-producer queue).
+"""
+
+from __future__ import annotations
+
+import threading
+import zlib
+from dataclasses import replace
+from typing import Any, List, Optional, Sequence
+
+import numpy as np
+
+from .astring import AString
+from .datapipe import DataPipeOutput, PipeConfig, PipeStats, parse_reserved
+from .directory import DirectoryLike, get_directory
+from .types import ColType, ColumnBlock
+
+__all__ = [
+    "Partitioner",
+    "HashPartitioner",
+    "RangePartitioner",
+    "RoundRobinPartitioner",
+    "parse_partition",
+    "split_block",
+    "ShuffleWriter",
+]
+
+_M64 = (1 << 64) - 1
+
+
+def _mix64(x: int) -> int:
+    """splitmix64 finalizer (scalar twin of :func:`_mix64_np`)."""
+    x &= _M64
+    x ^= x >> 33
+    x = (x * 0xFF51AFD7ED558CCD) & _M64
+    x ^= x >> 33
+    x = (x * 0xC4CEB9FE1A85EC53) & _M64
+    x ^= x >> 33
+    return x
+
+
+def _mix64_np(x: np.ndarray) -> np.ndarray:
+    x = x.astype(np.uint64, copy=True)
+    with np.errstate(over="ignore"):
+        x ^= x >> np.uint64(33)
+        x *= np.uint64(0xFF51AFD7ED558CCD)
+        x ^= x >> np.uint64(33)
+        x *= np.uint64(0xC4CEB9FE1A85EC53)
+        x ^= x >> np.uint64(33)
+    return x
+
+
+def _hash_value(v: Any) -> int:
+    """64-bit hash of one cell, consistent with the vectorized path."""
+    if isinstance(v, AString):
+        v = v.sole_value
+    if isinstance(v, (bool, np.bool_)):
+        return _mix64(int(v))
+    if isinstance(v, (int, np.integer)):
+        return _mix64(int(v) & _M64)
+    if isinstance(v, (float, np.floating)):
+        bits = np.float64(v).view(np.uint64)
+        return _mix64(int(bits))
+    s = str(v)
+    return _mix64(zlib.crc32(s.encode("utf-8", "surrogatepass")))
+
+
+def _hash_column(col: Any, ctype: ColType) -> np.ndarray:
+    if ctype is ColType.STRING:
+        return np.fromiter(
+            (_mix64(zlib.crc32(str(s).encode("utf-8", "surrogatepass")))
+             for s in col),
+            dtype=np.uint64, count=len(col))
+    arr = np.asarray(col)
+    if ctype in (ColType.FLOAT32, ColType.FLOAT64):
+        # hash the float64 bit pattern (float32 widens exactly), matching
+        # the scalar row path which sees python floats
+        return _mix64_np(arr.astype(np.float64).view(np.uint64))
+    return _mix64_np(arr.astype(np.int64).astype(np.uint64))
+
+
+def _resolve_key(key: Any, block: ColumnBlock) -> int:
+    if isinstance(key, int):
+        return key
+    try:
+        return block.schema.index_of(str(key))
+    except KeyError:
+        raise KeyError(
+            f"partition key {key!r} not in schema {block.schema!r}") from None
+
+
+class Partitioner:
+    """Maps rows to one of ``m`` importer workers."""
+
+    def indices(self, block: ColumnBlock, m: int) -> np.ndarray:
+        """Partition id per row (the block fast path)."""
+        raise NotImplementedError
+
+    def part_of_row(self, key_cell: Any, m: int) -> int:
+        """Partition id of one row given its key cell (the row path)."""
+        raise NotImplementedError
+
+
+class HashPartitioner(Partitioner):
+    def __init__(self, key: Any = 0):
+        self.key = key
+
+    def indices(self, block: ColumnBlock, m: int) -> np.ndarray:
+        k = _resolve_key(self.key, block)
+        h = _hash_column(block.columns[k], block.schema[k].type)
+        return (h % np.uint64(m)).astype(np.int64)
+
+    def part_of_row(self, key_cell: Any, m: int) -> int:
+        return _hash_value(key_cell) % m
+
+
+class RoundRobinPartitioner(Partitioner):
+    """Position-based spread; stateful so consecutive blocks keep cycling."""
+
+    def __init__(self):
+        self._count = 0
+
+    def indices(self, block: ColumnBlock, m: int) -> np.ndarray:
+        n = len(block)
+        out = (np.arange(self._count, self._count + n) % m).astype(np.int64)
+        self._count += n
+        return out
+
+    def part_of_row(self, key_cell: Any, m: int) -> int:
+        p = self._count % m
+        self._count += 1
+        return p
+
+
+class RangePartitioner(Partitioner):
+    """Range split on a key column; bounds fixed from the first block's
+    quantiles (per exporter — approximate under skewed input slices)."""
+
+    def __init__(self, key: Any = 0):
+        self.key = key
+        self._bounds: Optional[np.ndarray] = None
+        self._str_bounds: Optional[List[str]] = None
+
+    def indices(self, block: ColumnBlock, m: int) -> np.ndarray:
+        k = _resolve_key(self.key, block)
+        col = block.columns[k]
+        if block.schema[k].type is ColType.STRING:
+            vals = [str(s) for s in col]
+            if self._str_bounds is None:
+                srt = sorted(vals)
+                self._str_bounds = [srt[len(srt) * i // m]
+                                    for i in range(1, m)] if srt else []
+            import bisect
+
+            return np.fromiter(
+                (bisect.bisect_right(self._str_bounds, v) for v in vals),
+                dtype=np.int64, count=len(vals))
+        arr = np.asarray(col, dtype=np.float64)
+        if self._bounds is None:
+            qs = [i / m for i in range(1, m)]
+            self._bounds = (np.quantile(arr, qs) if len(arr)
+                            else np.zeros(m - 1))
+        return np.searchsorted(self._bounds, arr, side="right").astype(np.int64)
+
+    def part_of_row(self, key_cell: Any, m: int) -> int:
+        raise ValueError(
+            "range partitioning needs block export (bounds come from block "
+            "quantiles); use hash/rr for row-serialized modes")
+
+
+def parse_partition(spec: str) -> Partitioner:
+    """``hash[:col] | range[:col] | rr`` → a Partitioner instance."""
+    kind, _, key = str(spec).partition(":")
+    kind = kind.strip().lower()
+    key_val: Any = key.strip() if key.strip() else 0
+    if isinstance(key_val, str) and key_val.lstrip("-").isdigit():
+        key_val = int(key_val)
+    if kind == "hash":
+        return HashPartitioner(key_val)
+    if kind == "range":
+        return RangePartitioner(key_val)
+    if kind in ("rr", "roundrobin", "round-robin"):
+        return RoundRobinPartitioner()
+    raise ValueError(
+        f"unknown partition spec {spec!r}; have hash[:col], range[:col], rr")
+
+
+def split_block(block: ColumnBlock, idx: np.ndarray, m: int) -> List[ColumnBlock]:
+    """Split ``block`` into ``m`` sub-blocks by per-row partition id.
+    Fixed-width columns split with one boolean gather per partition;
+    string columns stay python lists."""
+    out: List[ColumnBlock] = []
+    np_cols = [
+        None if f.type is ColType.STRING else np.asarray(c)
+        for f, c in zip(block.schema, block.columns)
+    ]
+    obj_cols = [
+        np.asarray(c, dtype=object) if f.type is ColType.STRING else None
+        for f, c in zip(block.schema, block.columns)
+    ]
+    for p in range(m):
+        mask = idx == p
+        cols: List[Any] = []
+        for j, f in enumerate(block.schema):
+            if f.type is ColType.STRING:
+                cols.append(obj_cols[j][mask].tolist())
+            else:
+                cols.append(np_cols[j][mask])
+        out.append(ColumnBlock(block.schema, cols))
+    return out
+
+
+class ShuffleWriter:
+    """Exporter end of the N→M shuffle: one writer that fans a worker's
+    output across all M import endpoints, row-routed by the partitioner.
+
+    Substitutable for :class:`DataPipeOutput` behind ``pipegen_open``:
+    exposes ``write``/``writelines``/``flush``/``close`` plus the typed
+    fast path (``accepts_blocks``/``write_block``).  Typed blocks split
+    vectorized; serialized rows (text/parts/assembler modes) are routed
+    one row at a time on the key cell, with the first value part of the
+    row as key (matching the members' own row parsing).
+    """
+
+    def __init__(
+        self,
+        filename: str,
+        config: Optional[PipeConfig] = None,
+        directory: Optional[DirectoryLike] = None,
+    ):
+        rn = parse_reserved(filename)
+        if rn is None:
+            raise ValueError(f"{filename!r} is not a reserved pipe name")
+        self.reserved = rn
+        self.config = config or PipeConfig()
+        if not self.config.partition:
+            raise ValueError("ShuffleWriter needs PipeConfig.partition")
+        if self.config.transport == "shm":
+            raise ValueError(
+                "shuffle cannot run over the shm ring (single-producer); "
+                "use transport='socket' or 'channel'")
+        self.partitioner = parse_partition(self.config.partition)
+        directory = directory or get_directory()
+        endpoints = directory.query_all(
+            rn.dataset, rn.query_id, timeout=self.config.connect_timeout)
+        if not endpoints:
+            raise TimeoutError(f"no import workers for shuffle {rn.dataset!r}")
+        # members are plain 1:1 pipes: no nested partitioning, no verify
+        # (row order across sources is undefined), striping composes at the
+        # member level only if the importer registered a group endpoint
+        member_cfg = replace(self.config, partition=None, fanin=1,
+                             verify_first_n=0)
+        self._members: List[DataPipeOutput] = []
+        try:
+            for ep in endpoints:
+                self._members.append(
+                    DataPipeOutput(filename, config=member_cfg, endpoint=ep))
+        except BaseException:
+            for mem in self._members:
+                try:
+                    mem.close()
+                except Exception:
+                    pass
+            raise
+        self.m = len(self._members)
+        self.closed = False
+        self.stats = PipeStats()
+        # row-path state (mirrors DataPipeOutput._write_parts / text buffer)
+        self._cur_parts: List[Any] = []
+        self._text_tail = ""
+
+    # -- typed fast path ---------------------------------------------------------
+    def accepts_blocks(self) -> bool:
+        return not self.closed and self._members[0].accepts_blocks()
+
+    def write_block(
+        self,
+        block: ColumnBlock,
+        header: Optional[Sequence[str]] = None,
+        delimiter: Optional[str] = None,
+    ) -> int:
+        if self.closed:
+            raise ValueError("write to closed shuffle pipe")
+        idx = self.partitioner.indices(block, self.m)
+        # empty sub-blocks still go out: the schema frame travels, so every
+        # importer unblocks and learns the relation even with heavy skew
+        for member, sub in zip(self._members, split_block(block, idx, self.m)):
+            member.write_block(sub, header=header, delimiter=delimiter)
+        return len(block)
+
+    # -- row path (text / parts / assembler modes) -------------------------------
+    def write(self, s: Any) -> int:
+        if self.closed:
+            raise ValueError("write to closed shuffle pipe")
+        if self.config.mode == "text":
+            return self._write_text(s)
+        parts = s.parts if isinstance(s, AString) else (str(s),)
+        for p in parts:
+            if isinstance(p, str) and p.endswith("\n"):
+                if p[:-1]:
+                    self._cur_parts.append(p[:-1])
+                self._route_row(self._cur_parts + ["\n"])
+                self._cur_parts = []
+            else:
+                self._cur_parts.append(p)
+        return len(parts)
+
+    def writelines(self, lines: Sequence[Any]) -> None:
+        for l in lines:
+            self.write(l)
+
+    def _route_row(self, parts: List[Any]) -> None:
+        """One complete serialized row → the member its key hashes to.
+        The key is the row's first *value* part (leading empty literals
+        from ``AString.literal("")`` seeds are skipped)."""
+        key = next((p for p in parts if not (isinstance(p, str) and p == "")),
+                   "")
+        p = self.partitioner.part_of_row(key, self.m)
+        self._members[p].write(AString(parts))
+
+    def _write_text(self, s: Any) -> int:
+        text = str(s)
+        self._text_tail += text
+        delim = self.config.delimiter or ","
+        while True:
+            cut = self._text_tail.find("\n")
+            if cut < 0:
+                break
+            line, self._text_tail = (self._text_tail[: cut + 1],
+                                     self._text_tail[cut + 1:])
+            key = line[:-1].split(delim, 1)[0]
+            p = self.partitioner.part_of_row(key, self.m)
+            self._members[p].write(line)
+        return len(text)
+
+    def flush(self) -> None:
+        for member in self._members:
+            member.flush()
+
+    def close(self) -> None:
+        if self.closed:
+            return
+        errs: List[BaseException] = []
+        try:
+            if self._cur_parts:
+                self._route_row(self._cur_parts + ["\n"])
+                self._cur_parts = []
+            if self._text_tail:
+                tail, self._text_tail = self._text_tail, ""
+                p = self.partitioner.part_of_row(
+                    tail.split(self.config.delimiter or ",", 1)[0], self.m)
+                self._members[p].write(tail)
+        finally:
+            self.closed = True
+            for member in self._members:
+                try:
+                    member.close()
+                except BaseException as e:  # noqa: BLE001 - first re-raised
+                    errs.append(e)
+                self.stats.merge(member.stats)
+        if errs:
+            raise errs[0]
+
+    def __enter__(self) -> "ShuffleWriter":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -203,6 +203,15 @@ def pipegen_open(
         if any(m in mode for m in ("w", "a", "x")):
             from dataclasses import replace as _replace
 
+            if cfg.partition:
+                # N→M shuffle: one writer fanning across all import workers
+                if binary:
+                    raise ValueError(
+                        "partitioned (shuffle) pipes cannot carry opaque "
+                        "binary passthrough streams")
+                from .fabric import ShuffleWriter
+
+                return _PipeTextWriter(ShuffleWriter(str(filename), config=cfg))
             if binary:
                 cfg = _replace(cfg, mode="bytes")
                 return _PipeBytesWriter(DataPipeOutput(str(filename), config=cfg))
@@ -210,6 +219,9 @@ def pipegen_open(
         pipe = DataPipeInput(str(filename), link=cfg.link,
                              transport=cfg.transport,
                              shm_capacity=cfg.shm_capacity,
-                             arena=cfg.decode_arena)
+                             arena=cfg.decode_arena,
+                             streams=cfg.streams,
+                             fanin=cfg.fanin,
+                             stream_window=cfg.stream_window)
         return _PipeBytesReader(pipe) if binary else pipe
     return (real_open or builtins.open)(filename, mode, **kw)

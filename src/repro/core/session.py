@@ -22,7 +22,7 @@ from dataclasses import dataclass, field, replace
 from typing import Any, Dict, List, Optional
 
 from .codegen import GeneratedPipe, PipeEnabledEngine, generate_pipe_adapter
-from .datapipe import PipeConfig
+from .datapipe import PipeConfig, PipeStats, collect_stats
 from .directory import WorkerDirectory, set_directory
 from .ioredirect import PipeOpenContext
 
@@ -46,6 +46,11 @@ class TransferResult:
     import_seconds: float = 0.0
     bytes_moved: int = 0
     errors: List[str] = field(default_factory=list)
+    # merged PipeStats across all workers / shuffle members / streams of
+    # the transfer (per-stream breakdowns under .per_stream); None when the
+    # path doesn't open data pipes (the file baseline)
+    export_stats: Optional[PipeStats] = None
+    import_stats: Optional[PipeStats] = None
 
 
 def adapter_for(engine: Any) -> GeneratedPipe:
@@ -113,6 +118,8 @@ def transfer(
     directory: Optional[WorkerDirectory] = None,
     timeout: float = 120.0,
     transport: Optional[str] = None,
+    streams: Optional[int] = None,
+    partition: Optional[str] = None,
 ) -> TransferResult:
     """Move ``src:table`` into ``dst:dst_table`` over a generated data pipe.
 
@@ -124,10 +131,27 @@ def transfer(
     whole config: ``socket`` (TCP loopback), ``channel`` (in-process
     queue), or ``shm`` (shared-memory ring — the zero-copy path that also
     works when exporter and importer are separate OS processes).
+
+    ``streams`` stripes every worker pair's pipe across N member
+    connections (reassembled in order on the import side); ``partition``
+    (``hash[:col]`` / ``range[:col]`` / ``rr``) runs the transfer as an
+    N→M repartitioning shuffle instead of 1:1 pairing — every export
+    worker routes rows by key to *all* ``import_workers`` importers, each
+    of which merges the ``workers`` incoming streams.  The two knobs are
+    mutually exclusive (stripe a shuffle's member pipes is future work).
     """
     config = config or PipeConfig()
     if transport is not None:
         config = replace(config, transport=transport)
+    if streams is not None:
+        config = replace(config, streams=streams)
+    if partition is not None:
+        config = replace(config, partition=partition)
+    if config.partition:
+        if config.streams > 1:
+            raise ValueError("streams and partition do not compose yet")
+        # each importer merges one stream per export worker
+        config = replace(config, fanin=workers)
     if directory is not None:
         set_directory(directory)
     gp_src, gp_dst = adapter_for(src), adapter_for(dst)
@@ -178,10 +202,14 @@ def transfer(
     if ti.is_alive() or te.is_alive():
         raise TimeoutError(f"transfer {ds} did not complete within {timeout}s")
     rows = len(dst.get_block(dst_table))
+    stats = collect_stats(ds, qid)
+    exp_stats = stats.get("export")
     return TransferResult(
         source=src.name, target=dst.name, mode=config.mode, codec=config.codec,
         rows=rows, seconds=elapsed,
         export_seconds=times["export"], import_seconds=times["import"],
+        bytes_moved=exp_stats.bytes_sent if exp_stats else 0,
+        export_stats=exp_stats, import_stats=stats.get("import"),
     )
 
 

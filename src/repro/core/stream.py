@@ -1,0 +1,455 @@
+"""Stream fabric: stripe one pipe across N member transports, and merge
+N exporter streams into one importer-facing stream.
+
+The seed transports carry one logical pipe over exactly one connection, so
+a single large export is bounded by one core/NIC no matter how parallel the
+engines are (the top ROADMAP open item).  This module composes the
+*existing* transports (socket, channel, shm — anything implementing
+:class:`~repro.core.transport.Transport`) into two fabric shapes:
+
+* **Striping** (:class:`StripedSender` / :class:`StripedReceiver`): one
+  exporter's frame sequence is spread round-robin across N member
+  connections, each frame tagged with a monotonically increasing global
+  sequence number, and reassembled in order on the import side through a
+  bounded reorder window with per-stream credits.
+* **Fan-in** (:class:`FaninTransport`): the N→M shuffle's import side — N
+  independent exporter streams (each a well-formed schema→blocks→EOF
+  sequence) merged into one stream, with duplicate schema frames dropped
+  and end-of-stream delivered only after every source finished.
+
+Striped wire protocol (per member connection)::
+
+    frame 0:  kind 'M' (FRAME_STRIPE)  json {"stream": i, "streams": n}
+    frame k:  original kind            u32-LE seq || original payload
+
+Sequence numbers are assigned by the sender from a single counter across
+all members, so reassembly is a total order: the receiver delivers seq 0,
+1, 2, … regardless of which member each frame traveled on.  The explicit
+EOF frame the pipe writer emits is tagged like any other frame (its
+payload is the 4-byte seq alone), so end-of-stream is itself ordered after
+every data frame; a *bare* EOF (zero-byte payload: peer FIN, stub
+connection, ring writer death) terminates that member without a sequence
+number.
+
+Backpressure: the receiver's reorder window is ``window`` frames, split
+into per-stream credits (``max(2, window // n)`` each).  A member reader
+blocks acquiring its stream's credit *before* buffering a frame, which
+stops it from reading its transport — TCP flow control, the channel's
+bounded queue, or the shm ring's fullness then push back on the sender.
+Because every stream keeps at least two credits of its own, the stream
+carrying the next-in-order frame can always make progress: no deadlock.
+
+Zero-copy note: reassembly hands frames to a consumer on another thread,
+so member payloads that are views of transport memory (shm ring spans)
+are copied out once at the reader.  Striping trades that copy for N-way
+transport parallelism; an unstriped shm pipe remains the zero-copy path.
+"""
+
+from __future__ import annotations
+
+import json
+import queue
+import struct
+import threading
+from typing import Dict, List, Optional, Tuple
+
+from .transport import (
+    FRAME_BLOCK,
+    FRAME_EOF,
+    FRAME_PARTS,
+    FRAME_SCHEMA,
+    FRAME_STRIPE,
+    FRAME_VERIFY,
+    Transport,
+)
+
+__all__ = [
+    "StripedSender",
+    "StripedReceiver",
+    "FaninTransport",
+    "DEFAULT_STREAM_WINDOW",
+]
+
+_SEQ = struct.Struct("<I")
+
+#: default reorder-window size (frames buffered out of order, all streams)
+DEFAULT_STREAM_WINDOW = 64
+
+
+def _hello_payload(stream: int, streams: int) -> bytes:
+    return json.dumps({"stream": stream, "streams": streams}).encode()
+
+
+def _parse_hello(payload) -> Tuple[int, int]:
+    doc = json.loads(bytes(payload).decode())
+    return int(doc["stream"]), int(doc["streams"])
+
+
+class StripedSender(Transport):
+    """Spread one frame sequence across N member transports.
+
+    ``send_frames`` materializes the payload once (the member send happens
+    on a per-stream thread after the caller's pooled buffers are recycled
+    — the same contract as :class:`~repro.core.transport.ChannelTransport`),
+    tags it with the next global sequence number, and enqueues it on the
+    ``seq % n`` member's bounded queue.  Per-stream worker threads do the
+    actual transport sends, so N sockets (or rings) are written
+    concurrently.  Errors latch: the first member failure is re-raised on
+    the next submit or, at the latest, on :meth:`close`; queued frames
+    drain so the producer never blocks on a dead member.
+    """
+
+    _DONE = object()
+
+    def __init__(self, transports: List[Transport], depth: int = 4):
+        if not transports:
+            raise ValueError("striped sender needs at least one member")
+        self.members = list(transports)
+        self.error: Optional[BaseException] = None
+        self._seq = 0
+        self._busy_s = [0.0] * len(self.members)
+        self._queues: List["queue.Queue"] = [
+            queue.Queue(maxsize=max(1, depth)) for _ in self.members
+        ]
+        n = len(self.members)
+        for i, tr in enumerate(self.members):
+            tr.send_frame(FRAME_STRIPE, _hello_payload(i, n))
+        self._threads = [
+            threading.Thread(target=self._run, args=(i,),
+                             name=f"pipegen-stripe-{i}", daemon=True)
+            for i in range(n)
+        ]
+        for t in self._threads:
+            t.start()
+
+    @property
+    def nstreams(self) -> int:
+        return len(self.members)
+
+    # aggregated counters (read by DataPipeOutput.close after drain)
+    @property
+    def bytes_sent(self) -> int:  # type: ignore[override]
+        return sum(m.bytes_sent for m in self.members)
+
+    @property
+    def frames_sent(self) -> int:  # type: ignore[override]
+        return sum(m.frames_sent for m in self.members)
+
+    @property
+    def shm_spans(self) -> int:
+        return sum(getattr(m, "shm_spans", 0) for m in self.members)
+
+    def per_stream(self) -> List[dict]:
+        """Per-member breakdown for ``PipeStats.per_stream``."""
+        return [
+            {"stream": i, "bytes": m.bytes_sent, "frames": m.frames_sent,
+             "busy_s": self._busy_s[i]}
+            for i, m in enumerate(self.members)
+        ]
+
+    def send_frames(self, kind: bytes, segments) -> None:
+        if self.error is not None:
+            raise self.error
+        segs = [bytes(s) for s in segments]
+        payload = segs[0] if len(segs) == 1 else b"".join(segs)
+        seq = self._seq
+        self._seq += 1
+        self._queues[seq % len(self.members)].put(
+            (kind, _SEQ.pack(seq), payload))
+
+    def _run(self, idx: int) -> None:
+        import time as _time
+
+        tr = self._queues[idx]
+        member = self.members[idx]
+        while True:
+            item = tr.get()
+            if item is self._DONE:
+                return
+            if self.error is not None:
+                continue  # drain: the producer must not block on a dead pipe
+            kind, seq_hdr, payload = item
+            t0 = _time.perf_counter()
+            try:
+                member.send_frames(kind, (seq_hdr, payload))
+            except BaseException as e:  # noqa: BLE001 - latched, re-raised
+                self.error = self.error or e
+            finally:
+                self._busy_s[idx] += _time.perf_counter() - t0
+
+    def close(self) -> None:
+        for q in self._queues:
+            q.put(self._DONE)
+        for t in self._threads:
+            t.join()
+        for m in self.members:
+            m.close()
+        if self.error is not None:
+            raise self.error
+
+
+class StripedReceiver(Transport):
+    """Reassemble a striped frame sequence in global seq order.
+
+    Presents the ordinary :meth:`recv_frame` surface, so
+    ``DataPipeInput`` consumes a striped pipe exactly like a single
+    connection.  One reader thread per member pulls frames, copies
+    transport-owned views out, and buffers them under their sequence
+    number after acquiring its stream's credit; :meth:`recv_frame` waits
+    for the next in-order frame and releases the credit on delivery.
+    """
+
+    def __init__(self, transports: List[Transport],
+                 window: int = DEFAULT_STREAM_WINDOW):
+        if not transports:
+            raise ValueError("striped receiver needs at least one member")
+        self.members = list(transports)
+        n = len(self.members)
+        self._credit_per_stream = max(2, window // n)
+        self._credits = [threading.Semaphore(self._credit_per_stream)
+                         for _ in range(n)]
+        self._lock = threading.Condition()
+        self._buf: Dict[int, Tuple[bytes, object, int]] = {}
+        self._next = 0
+        self._done = 0
+        self._closing = False
+        self._error: Optional[BaseException] = None
+        self._frames = [0] * n
+        self._bytes = [0] * n
+        self._threads = [
+            threading.Thread(target=self._reader, args=(i,),
+                             name=f"pipegen-reasm-{i}", daemon=True)
+            for i in range(n)
+        ]
+        for t in self._threads:
+            t.start()
+
+    @property
+    def nstreams(self) -> int:
+        return len(self.members)
+
+    @property
+    def shm_spans(self) -> int:
+        return sum(getattr(m, "shm_spans", 0) for m in self.members)
+
+    def per_stream(self) -> List[dict]:
+        return [
+            {"stream": i, "frames": self._frames[i], "bytes": self._bytes[i]}
+            for i in range(len(self.members))
+        ]
+
+    def _reader(self, idx: int) -> None:
+        tr = self.members[idx]
+        sem = self._credits[idx]
+        try:
+            while True:
+                kind, payload = tr.recv_frame()
+                if kind == FRAME_STRIPE:
+                    _, streams = _parse_hello(payload)
+                    if streams != len(self.members):
+                        raise IOError(
+                            f"striped peer announces {streams} streams, "
+                            f"importer built {len(self.members)}")
+                    continue
+                if len(payload) < _SEQ.size:
+                    if kind == FRAME_EOF:
+                        return  # bare EOF: FIN / stub / member death
+                    raise IOError(
+                        f"striped frame {kind!r} too short for a sequence "
+                        f"header ({len(payload)} bytes)")
+                # reassembly hands the frame to the consumer thread, so
+                # transport-owned views (shm ring spans) are copied out now
+                if isinstance(payload, memoryview):
+                    payload = bytes(payload)
+                seq = _SEQ.unpack_from(payload)[0]
+                inner = memoryview(payload)[_SEQ.size:]
+                sem.acquire()
+                with self._lock:
+                    if self._closing:
+                        return
+                    self._buf[seq] = (kind, inner, idx)
+                    self._frames[idx] += 1
+                    self._bytes[idx] += len(payload)
+                    self._lock.notify_all()
+                if kind == FRAME_EOF:
+                    return  # the tagged EOF is the stream-final frame
+        except BaseException as e:  # noqa: BLE001 - surfaced on recv_frame
+            with self._lock:
+                if not self._closing:
+                    self._error = self._error or e
+                self._lock.notify_all()
+        finally:
+            with self._lock:
+                self._done += 1
+                self._lock.notify_all()
+
+    def recv_frame(self) -> Tuple[bytes, bytes]:
+        with self._lock:
+            while True:
+                got = self._buf.pop(self._next, None)
+                if got is not None:
+                    kind, inner, idx = got
+                    self._next += 1
+                    self._credits[idx].release()
+                    if kind == FRAME_EOF:
+                        return FRAME_EOF, b""
+                    # only block/parts payloads may be views (the decoders
+                    # consume them in place); everything else goes through
+                    # str.decode downstream and must be bytes — the same
+                    # invariant as ShmRingTransport._ZERO_COPY_KINDS
+                    if kind in (FRAME_BLOCK, FRAME_PARTS):
+                        return kind, inner
+                    return kind, bytes(inner)
+                if self._error is not None:
+                    raise IOError(
+                        f"striped member failed: {self._error!r}"
+                    ) from self._error
+                if self._done >= len(self.members):
+                    if self._buf:
+                        missing = self._next
+                        have = sorted(self._buf)
+                        raise IOError(
+                            f"striped stream ended with frame {missing} "
+                            f"missing (buffered seqs {have[:8]}...)")
+                    return FRAME_EOF, b""
+                self._lock.wait(0.5)
+
+    def close(self) -> None:
+        with self._lock:
+            self._closing = True
+            self._lock.notify_all()
+        # unblock readers parked on exhausted credits
+        for sem in self._credits:
+            for _ in range(self._credit_per_stream):
+                sem.release()
+        for m in self.members:
+            m.close()
+        for t in self._threads:
+            t.join(timeout=5.0)
+
+
+_SOURCE_DONE = object()
+
+
+class FaninTransport(Transport):
+    """Merge N exporter streams into one importer-facing frame stream.
+
+    Two wirings, one surface:
+
+    * **multi-member** (sockets): one accepted connection per exporter;
+      a reader thread per member funnels frames into a queue and the
+      merged stream ends when every member reached end-of-stream;
+    * **single shared member** (the in-process channel, whose queue is
+      already multi-producer-safe): frames from all exporters interleave
+      on one transport and the merged stream ends after
+      ``expected_sources`` explicit EOF frames.
+
+    Each source is a well-formed ``schema → data → EOF`` sequence; the
+    merge passes the first schema frame through, drops the duplicates
+    (a shuffle's exporters all describe the same relation), and drops
+    verify frames — row order across sources is not defined, so the
+    section 4.1 probabilistic check is meaningless on a merged stream
+    (``ShuffleWriter`` disables it at the source too).
+    """
+
+    def __init__(self, transports: List[Transport],
+                 expected_sources: Optional[int] = None):
+        if not transports:
+            raise ValueError("fan-in needs at least one member")
+        self.members = list(transports)
+        self.expected_sources = expected_sources or len(self.members)
+        self._schema_seen = False
+        self._first_schema: bytes = b""
+        self._ended = 0
+        self._eof = False
+        if len(self.members) > 1:
+            self._q: "queue.Queue" = queue.Queue(maxsize=64)
+            self._threads = [
+                threading.Thread(target=self._reader, args=(tr,),
+                                 name="pipegen-fanin", daemon=True)
+                for tr in self.members
+            ]
+            for t in self._threads:
+                t.start()
+        else:
+            self._threads = []
+
+    @property
+    def fanin(self) -> int:
+        return self.expected_sources
+
+    def _reader(self, tr: Transport) -> None:
+        try:
+            while True:
+                kind, payload = tr.recv_frame()
+                if isinstance(payload, memoryview):
+                    payload = bytes(payload)
+                if kind == FRAME_EOF:
+                    return
+                self._q.put((kind, payload))
+        except BaseException as e:  # noqa: BLE001 - surfaced on recv_frame
+            self._q.put(e)
+        finally:
+            self._q.put(_SOURCE_DONE)
+
+    def _next_raw(self) -> Tuple[bytes, bytes]:
+        """One frame from the merged firehose; EOF once every source ended."""
+        if not self._threads:  # shared single member: count EOF frames
+            while True:
+                kind, payload = self.members[0].recv_frame()
+                if kind == FRAME_EOF:
+                    self._ended += 1
+                    if self._ended >= self.expected_sources:
+                        return FRAME_EOF, b""
+                    continue
+                return kind, payload
+        while True:
+            item = self._q.get()
+            if item is _SOURCE_DONE:
+                self._ended += 1
+                if self._ended >= len(self.members):
+                    return FRAME_EOF, b""
+                continue
+            if isinstance(item, BaseException):
+                raise IOError(f"fan-in source failed: {item!r}") from item
+            return item
+
+    def recv_frame(self) -> Tuple[bytes, bytes]:
+        while not self._eof:
+            kind, payload = self._next_raw()
+            if kind == FRAME_EOF:
+                self._eof = True
+                return FRAME_EOF, b""
+            if kind == FRAME_SCHEMA:
+                if self._schema_seen:
+                    # same relation, described N times -- but a mis-wired
+                    # shuffle mixing relations must fail here, not decode
+                    # the other source's blocks under the wrong layout
+                    self._check_schema_match(payload)
+                    continue
+                self._schema_seen = True
+                self._first_schema = bytes(payload)
+            elif kind == FRAME_VERIFY:
+                continue  # undefined row order across sources
+            return kind, payload
+        return FRAME_EOF, b""
+
+    def _check_schema_match(self, payload) -> None:
+        if bytes(payload) == self._first_schema:
+            return
+        from .wire import decode_schema
+
+        first, _ = decode_schema(self._first_schema)
+        other, _ = decode_schema(bytes(payload))
+        if first.types != other.types:
+            raise IOError(
+                f"fan-in sources disagree on the relation: {first!r} "
+                f"vs {other!r}")
+        # same column types, different meta (e.g. a per-source sniffed
+        # delimiter): the first source's dialect already won, carry on
+
+    def close(self) -> None:
+        for m in self.members:
+            m.close()
+        for t in self._threads:
+            t.join(timeout=5.0)

@@ -9,6 +9,8 @@ Frame layout on the wire: 1-byte kind + uint32 little-endian payload length
     B  encoded ColumnBlock in the stream's wire format
     V  verification payload (probabilistic runtime check, section 4.1)
     E  end of stream
+    M  stripe hello (first frame on a striped member connection; see
+       repro.core.stream for the striped envelope layered on top)
 
 Scatter-gather send path: :meth:`Transport.send_frames` takes the payload
 as a sequence of buffer views (a :class:`~repro.core.iobuf.SegmentList`)
@@ -43,6 +45,7 @@ __all__ = [
     "FRAME_BLOCK",
     "FRAME_VERIFY",
     "FRAME_EOF",
+    "FRAME_STRIPE",
     "LinkSim",
     "Transport",
     "SocketTransport",
@@ -57,6 +60,7 @@ FRAME_PARTS = b"P"
 FRAME_BLOCK = b"B"
 FRAME_VERIFY = b"V"
 FRAME_EOF = b"E"
+FRAME_STRIPE = b"M"
 
 _HEADER = struct.Struct("<cI")
 
@@ -196,9 +200,15 @@ class Channel:
 
 
 class ChannelTransport(Transport):
-    def __init__(self, channel: Channel, link: Optional[LinkSim] = None):
+    def __init__(self, channel: Channel, link: Optional[LinkSim] = None,
+                 owns_channel: bool = True):
+        # a shuffle shares one channel across N exporters (the queue is
+        # multi-producer-safe); a non-owning writer must not set the closed
+        # flag under its still-sending peers -- the importer counts the
+        # explicit EOF frames instead (repro.core.stream.FaninTransport)
         self.channel = channel
         self.link = link
+        self.owns_channel = owns_channel
         self._link_debt = 0.0
         self.bytes_sent = 0
         self.frames_sent = 0
@@ -229,7 +239,8 @@ class ChannelTransport(Transport):
                     return FRAME_EOF, b""
 
     def close(self) -> None:
-        self.channel.closed.set()
+        if self.owns_channel:
+            self.channel.closed.set()
 
 
 def listen_socket(host: str = "127.0.0.1") -> socket.socket:

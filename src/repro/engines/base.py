@@ -300,6 +300,13 @@ class Engine:
         if workers <= 1:
             return self.export_csv(table, filename, header=header,
                                    delimiter=delimiter)
+        # the negotiated pipe config is thread-local (PipeOpenContext);
+        # worker threads must inherit this thread's, or every parallel
+        # export silently reopens its pipes with the defaults (wrong wire
+        # format, no shuffle partition, no striping)
+        from ..core.ioredirect import PipeOpenContext, active_pipe_config
+
+        pipe_cfg = active_pipe_config()
         block = self.get_block(table)
         n = len(block)
         bounds = [n * i // workers for i in range(workers + 1)]
@@ -315,7 +322,9 @@ class Engine:
             self.put_block(shadow, part)
             try:
                 target = filename if is_reserved(filename) else f"{filename}.part{i}"
-                self.export_csv(shadow, target, header=header, delimiter=delimiter)
+                with PipeOpenContext(pipe_cfg):
+                    self.export_csv(shadow, target, header=header,
+                                    delimiter=delimiter)
             except BaseException as e:  # noqa: BLE001 - rethrown below
                 errs.append(e)
             finally:
@@ -335,6 +344,9 @@ class Engine:
         workers = workers or self.workers
         if workers <= 1:
             return self.import_csv(table, filename, schema)
+        from ..core.ioredirect import PipeOpenContext, active_pipe_config
+
+        pipe_cfg = active_pipe_config()  # see export_csv_parallel
         parts: List[Optional[ColumnBlock]] = [None] * workers
         errs: List[BaseException] = []
 
@@ -342,7 +354,8 @@ class Engine:
             shadow = f"{self.name}-imp{i}"
             try:
                 target = filename if is_reserved(filename) else f"{filename}.part{i}"
-                self.import_csv(shadow, target, schema)
+                with PipeOpenContext(pipe_cfg):
+                    self.import_csv(shadow, target, schema)
                 parts[i] = self.get_block(shadow)
             except BaseException as e:  # noqa: BLE001
                 errs.append(e)
