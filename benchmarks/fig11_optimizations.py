@@ -142,9 +142,11 @@ def _streams_sweep(n_rows: int, transports, streams_list) -> dict:
     return out
 
 
-def _shuffle_probe(n_rows: int) -> float:
+def _shuffle_probe(n_rows: int, streams: int = 1) -> float:
     """N=2→M=3 hash-partitioned repartitioning transfer (colstore both
-    sides: the graphstore analog cannot hold arbitrary relations)."""
+    sides: the graphstore analog cannot hold arbitrary relations).  With
+    ``streams`` > 1 every shuffle member pipe is itself striped — the
+    composition path (slotted rendezvous)."""
 
     def run():
         fresh()
@@ -154,7 +156,8 @@ def _shuffle_probe(n_rows: int) -> float:
         transfer(src, "t", dst, "t2",
                  config=PipeConfig(mode="arrowcol",
                                    block_rows=_SWEEP_BLOCK_ROWS),
-                 workers=2, import_workers=3, partition="hash", timeout=300)
+                 workers=2, import_workers=3, partition="hash",
+                 streams=streams if streams > 1 else None, timeout=300)
         assert len(dst.get_block("t2")) == n_rows
 
     return timed(run, repeats=REPEATS)
@@ -195,6 +198,12 @@ def main(n_rows: int = DEFAULT_ROWS, transports=None, streams_sweep=None) -> dic
     ts = _shuffle_probe(n_rows)
     out["shuffle_2x3"] = ts
     emit("fig11.shuffle_2x3", ts, f"vs_file={tf / ts:.2f}x")
+    # the streams×partition composition: the same 2→3 shuffle with every
+    # member pipe striped across 2 connections (hash partition, slotted
+    # rendezvous) — benchmarked from day one so regressions surface here
+    tss = _shuffle_probe(n_rows, streams=2)
+    out["striped_shuffle_2x3_s2"] = tss
+    emit("fig11.striped_shuffle_2x3_s2", tss, f"vs_unstriped={ts / tss:.2f}x")
     set_directory(WorkerDirectory())
     tm = _manual_pipe(n_rows)
     out["manual"] = tm

@@ -1,0 +1,101 @@
+"""Plan-API sweep: single edge vs chained A→B→C vs fan-out A→{B,C}.
+
+The planner's promise is that composition is free of kwarg plumbing *and*
+of serialization overhead: a chained plan pays two hops, a fan-out plan
+overlaps its edges in one stage.  Emitted rungs:
+
+    plan.single_edge     one-edge plan (the transfer() shim path)
+    plan.chain_3engine   A→B→C through an intermediate engine
+    plan.fanout_1to2     A→{B,C}, both edges concurrent in one stage
+    plan.fanout_vs_2seq  fan-out minus two sequential transfers (overlap)
+"""
+
+from __future__ import annotations
+
+from repro.core import PipeConfig, plan, transfer
+from repro.engines import make_engine, make_paper_block
+
+from .common import DEFAULT_ROWS, REPEATS, emit, fresh, timed
+
+_BLOCK_ROWS = 4096
+
+
+def _cfg() -> PipeConfig:
+    return PipeConfig(mode="arrowcol", block_rows=_BLOCK_ROWS)
+
+
+def _single(n_rows: int) -> float:
+    def run():
+        fresh()
+        a, b = make_engine("colstore"), make_engine("dataframe")
+        a.put_block("t", make_paper_block(n_rows, seed=1))
+        res = (plan(negotiate=False)
+               .move(a, "t", b, "t2", config=_cfg(), timeout=300)
+               .execute())
+        assert res.single().rows == n_rows
+
+    return timed(run, repeats=REPEATS)
+
+
+def _chain(n_rows: int) -> float:
+    def run():
+        fresh()
+        a = make_engine("colstore")
+        b = make_engine("dataframe")
+        c = make_engine("colstore")
+        a.put_block("t", make_paper_block(n_rows, seed=1))
+        res = (plan(negotiate=False)
+               .move(a, "t", b, "t2", config=_cfg(), timeout=300)
+               .then(b, "t2", c, "t3", config=_cfg(), timeout=300)
+               .execute())
+        assert res.results["e1"].rows == n_rows
+
+    return timed(run, repeats=REPEATS)
+
+
+def _fanout(n_rows: int) -> float:
+    def run():
+        fresh()
+        a = make_engine("colstore")
+        b = make_engine("dataframe")
+        c = make_engine("rowstore")
+        a.put_block("t", make_paper_block(n_rows, seed=1))
+        res = (plan(negotiate=False)
+               .move(a, "t", b, "t2", config=_cfg(), timeout=300)
+               .move(a, "t", c, "t3", config=_cfg(), timeout=300)
+               .execute())
+        assert res.rows == 2 * n_rows
+
+    return timed(run, repeats=REPEATS)
+
+
+def _two_sequential(n_rows: int) -> float:
+    def run():
+        fresh()
+        a = make_engine("colstore")
+        b = make_engine("dataframe")
+        c = make_engine("rowstore")
+        a.put_block("t", make_paper_block(n_rows, seed=1))
+        transfer(a, "t", b, "t2", config=_cfg(), timeout=300)
+        transfer(a, "t", c, "t3", config=_cfg(), timeout=300)
+
+    return timed(run, repeats=REPEATS)
+
+
+def main(n_rows: int = DEFAULT_ROWS) -> dict:
+    out = {}
+    out["single"] = _single(n_rows)
+    emit("plan.single_edge", out["single"])
+    out["chain"] = _chain(n_rows)
+    emit("plan.chain_3engine", out["chain"],
+         f"per_hop={out['chain'] / 2:.4f}s")
+    out["fanout"] = _fanout(n_rows)
+    emit("plan.fanout_1to2", out["fanout"])
+    out["seq2"] = _two_sequential(n_rows)
+    emit("plan.fanout_vs_2seq", out["seq2"] - out["fanout"],
+         f"overlap={out['seq2'] / out['fanout']:.2f}x")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -3,11 +3,12 @@
 Prints ``name,us_per_call,derived`` CSV.  Usage:
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig09,...] \
-        [--transport socket,shm] [--streams 1,2,4]
+        [--transport socket,shm] [--streams 1,2,4] [--plan]
 
 ``--transport``/``--streams`` widen the fig11 stream-fabric sweep (which
 transports to stripe over and which stream counts to compare; defaults:
-socket, 1 vs 4).
+socket, 1 vs 4).  ``--plan`` adds the plan-API sweep (single edge vs
+chained A→B→C vs fan-out A→{B,C}; ``benchmarks/plan_sweep.py``).
 """
 
 from __future__ import annotations
@@ -24,6 +25,7 @@ from . import (
     fig13_formats,
     fig14_buffers,
     fig15_compression,
+    plan_sweep,
     roofline,
     table1_workers,
     table2_modifications,
@@ -40,6 +42,7 @@ MODULES = {
     "table1": table1_workers,
     "table2": table2_modifications,
     "roofline": roofline,
+    "plan": plan_sweep,
 }
 
 
@@ -55,9 +58,17 @@ def main(argv=None) -> int:
     ap.add_argument("--streams", default=None,
                     help="comma-separated stream counts for the fig11 "
                          "streams sweep (e.g. 1,2,4)")
+    ap.add_argument("--plan", action="store_true",
+                    help="include the plan-API sweep (chain vs fan-out "
+                         "vs single edge)")
     args = ap.parse_args(argv)
 
-    names = list(MODULES) if not args.only else args.only.split(",")
+    if not args.only:
+        names = [n for n in MODULES if n != "plan" or args.plan]
+    else:
+        names = args.only.split(",")
+        if args.plan and "plan" not in names:
+            names.append("plan")
     unknown = [n for n in names if n not in MODULES]
     if unknown:
         ap.error(f"unknown benchmark(s) {unknown}; have {sorted(MODULES)}")
@@ -82,7 +93,7 @@ def main(argv=None) -> int:
                 kwargs["streams_sweep"] = streams_sweep
         t0 = time.time()
         try:
-            if args.quick and name.startswith(("fig", "table1")):
+            if args.quick and name.startswith(("fig", "table1", "plan")):
                 mod.main(4000, **kwargs)
             else:
                 mod.main(**kwargs)

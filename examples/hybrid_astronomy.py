@@ -20,7 +20,7 @@ sys.path.insert(0, "src")
 
 import numpy as np
 
-from repro.core import PipeConfig, transfer, transfer_via_files
+from repro.core import PipeConfig, plan
 from repro.core.types import ColType, ColumnBlock, Field, Schema
 from repro.engines import make_engine
 
@@ -105,13 +105,31 @@ def run(transfer_fn, tag: str) -> float:
     return elapsed
 
 
+def _move_via_files(s, t, d, t2):
+    """One-edge file-baseline plan (what transfer_via_files shims)."""
+    plan(negotiate=False).move(s, t, d, t2, via="files").execute()
+
+
+_printed_plan = False
+
+
+def _move_via_pipe(s, t, d, t2):
+    """One-edge pipe plan; the compiled decisions print once."""
+    global _printed_plan
+    compiled = (plan(negotiate=False)
+                .move(s, t, d, t2, timeout=120,
+                      config=PipeConfig(mode="arrowcol"))
+                .compile())
+    if not _printed_plan:
+        _printed_plan = True
+        for line in compiled.explain().splitlines():
+            print(f"[plan] {line}")
+    compiled.execute()
+
+
 def main() -> None:
-    t_file = run(
-        lambda s, t, d, t2: transfer_via_files(s, t, d, t2), "file")
-    t_pipe = run(
-        lambda s, t, d, t2: transfer(
-            s, t, d, t2, config=PipeConfig(mode="arrowcol"), timeout=120),
-        "pipe")
+    t_file = run(_move_via_files, "file")
+    t_pipe = run(_move_via_pipe, "pipe")
     print(f"[summary] transfer-inclusive speedup: {t_file / t_pipe:.2f}x "
           f"(paper fig. 1: 66 -> 28 minutes on 100 GB)")
 

@@ -1,5 +1,6 @@
 """Quickstart: auto-generate data pipes for two engines and move a table
-between them — no file-system materialization.
+between them — no file-system materialization — through the plan API
+(plan → compile → explain → execute).
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -8,7 +9,7 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.core import PipeConfig, adapter_for, transfer, transfer_via_files
+from repro.core import PipeConfig, adapter_for, plan
 from repro.engines import make_engine, make_paper_block
 
 
@@ -24,20 +25,43 @@ def main() -> None:
     print(f"[pipegen] {gp.report.summary()}")
     print(f"[pipegen] adapter stats: {gp.stats.row()}")
 
-    # 3. baseline: export/import via the file system (CSV)
-    r_file = transfer_via_files(src, "particles", dst, "p_file", workers=2)
+    # 3. baseline: export/import via the file system (a via="files" edge)
+    r_file = (plan(negotiate=False)
+              .move(src, "particles", dst, "p_file", via="files", workers=2)
+              .execute().single())
     print(f"[file]  {r_file.rows} rows in {r_file.seconds:.2f}s "
           f"({r_file.bytes_moved} bytes materialized)")
 
-    # 4. the same transfer over a generated binary data pipe
-    r_pipe = transfer(src, "particles", dst, "p_pipe",
-                      config=PipeConfig(mode="arrowcol"), workers=2)
+    # 4. the same transfer over a generated binary data pipe: build the
+    #    one-edge plan, inspect the compiled decisions, then execute
+    p = (plan(negotiate=False)
+         .move(src, "particles", dst, "p_pipe", workers=2,
+               config=PipeConfig(mode="arrowcol")))
+    compiled = p.compile()
+    print("[plan]")
+    for line in compiled.explain().splitlines():
+        print(f"[plan]  {line}")
+    r_pipe = compiled.execute().single()
     print(f"[pipe]  {r_pipe.rows} rows in {r_pipe.seconds:.2f}s "
           f"(zero bytes on disk)")
     print(f"[pipe]  speedup: {r_file.seconds / r_pipe.seconds:.2f}x "
           f"(paper: up to 3.8x at 1e9 rows)")
 
+    # 5. composition is a planner rule, not a kwarg contract: fan the same
+    #    relation out to two destinations in one plan (edges with no data
+    #    dependency run concurrently)
+    third = make_engine("rowstore")
+    fan = (plan(negotiate=False)
+           .move(src, "particles", dst, "p_fan",
+                 config=PipeConfig(mode="arrowcol"))
+           .move(src, "particles", third, "p_fan",
+                 config=PipeConfig(mode="arrowcol"))
+           .execute())
+    print(f"[fanout] {fan.rows} rows across {len(fan.results)} edges "
+          f"in {fan.seconds:.2f}s (one stage, concurrent)")
+
     assert r_pipe.rows == r_file.rows == 50_000
+    assert fan.rows == 100_000
 
 
 if __name__ == "__main__":

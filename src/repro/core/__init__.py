@@ -29,6 +29,7 @@ from .fabric import (
     RangePartitioner,
     RoundRobinPartitioner,
     ShuffleWriter,
+    compute_range_bounds,
     parse_partition,
     split_block,
 )
@@ -57,3 +58,13 @@ from .types import ColType, ColumnBlock, Field, RowBlock, Schema, infer_schema
 from .verify import VerificationProxy, VerificationResult, validate_generated_pipe
 from .wire import WIRE_FORMATS, get_wire_format
 from .session import TransferResult, adapter_for, transfer, transfer_via_files
+from .plan import (
+    CompiledPlan,
+    EdgePlan,
+    PlanError,
+    PlanExecutionError,
+    PlanResult,
+    TransferPlan,
+    negotiated_config,
+    plan,
+)

@@ -160,10 +160,14 @@ class PipeConfig:
     frame reorder window with per-stream credits.  ``partition`` (exporter-
     local) turns the transfer into an N→M shuffle: every exporter worker
     routes rows to *all* import workers by key (``hash[:col]``,
-    ``range[:col]``, ``rr``); ``fanin`` (importer-local, set by
-    :func:`repro.core.session.transfer`) is the number of exporter streams
-    each importer merges.  ``streams`` and ``partition`` are mutually
-    exclusive on one pipe."""
+    ``range[:col]``, ``rr``); ``partition_bounds`` presets the range
+    split points (the planner's global compile-time quantiles, stamped
+    into every exporter so they agree); ``fanin`` (importer-local, set by
+    :func:`repro.core.session.transfer` / the planner) is the number of
+    exporter streams each importer merges.  ``streams`` and ``partition``
+    compose: with both set, each importer registers one private *slot*
+    (a striped group of ``streams`` connections) per exporter, so every
+    shuffle member pipe is itself striped."""
 
     mode: str = "arrowcol"  # text | parts | binary_rows | tagged | arrowrow | arrowcol
     codec: str = "none"  # none | rle | zip | zstd
@@ -184,6 +188,7 @@ class PipeConfig:
     streams: int = 1  # stripe each pipe across N member connections
     stream_window: int = DEFAULT_STREAM_WINDOW  # reorder window (frames)
     partition: Optional[str] = None  # N→M shuffle: hash[:col]|range[:col]|rr
+    partition_bounds: Optional[Tuple] = None  # preset global range bounds
     fanin: int = 1  # importer-side: exporter streams to merge (shuffle)
 
     def meta(self) -> dict:
@@ -738,18 +743,16 @@ class DataPipeInput:
         if transport not in ("socket", "channel", "shm"):
             raise ValueError(
                 f"unknown transport {transport!r}; have socket/channel/shm")
-        if streams > 1 and fanin > 1:
-            raise ValueError(
-                "streams>1 (striped pipe) and fanin>1 (shuffle merge) do "
-                "not compose on one pipe; stripe the member pipes instead")
         workers = import_workers or rn.workers
-        if streams > 1:
-            self._transport: Transport = self._rendezvous_striped(
+        if fanin > 1:
+            self._transport: Transport = self._rendezvous_fanin(
+                rn, directory, transport, fanin, host, link, workers,
+                streams=streams, window=stream_window,
+                shm_capacity=shm_capacity)
+        elif streams > 1:
+            self._transport = self._rendezvous_striped(
                 rn, directory, transport, streams, stream_window,
                 host, link, shm_capacity, workers)
-        elif fanin > 1:
-            self._transport = self._rendezvous_fanin(
-                rn, directory, transport, fanin, host, link, workers)
         elif transport == "channel":
             ch = channel if channel is not None else Channel()
             directory.register(
@@ -833,40 +836,99 @@ class DataPipeInput:
         return StripedReceiver(parts, window=window)
 
     @staticmethod
-    def _rendezvous_fanin(rn, directory, transport, fanin,
-                          host, link, workers) -> Transport:
-        """Register one rendezvous and merge ``fanin`` exporter streams
-        (the shuffle's import side)."""
-        if transport == "shm":
-            raise ValueError(
-                "shuffle fan-in cannot run over the shm ring "
-                "(single-producer); use transport='socket' or 'channel'")
-        if transport == "channel":
-            ch = Channel(maxsize=64 * max(1, fanin))
+    def _rendezvous_fanin(rn, directory, transport, fanin, host, link,
+                          workers, streams: int = 1,
+                          window: int = DEFAULT_STREAM_WINDOW,
+                          shm_capacity: int = DEFAULT_RING_CAPACITY,
+                          ) -> Transport:
+        """Register the shuffle's import-side rendezvous and merge
+        ``fanin`` exporter streams.
+
+        Two wirings:
+
+        * **shared** (``streams == 1`` over socket/channel): one listening
+          socket every exporter connects to (or one multi-producer
+          channel), merged by :class:`FaninTransport` — the paper-shaped
+          minimal rendezvous;
+        * **slotted** (``streams > 1``, or the single-producer shm ring):
+          one *private* rendezvous slot per exporter — a striped group of
+          ``streams`` member connections (or a single connection) —
+          registered as a ``shared`` group endpoint whose members the
+          exporters claim by index via
+          :meth:`WorkerDirectory.next_sender`.  Each slot reassembles
+          through its own :class:`StripedReceiver`, then the slots merge
+          through :class:`FaninTransport` — this is how ``streams`` and
+          ``partition`` compose on one pipe.
+        """
+        if streams <= 1 and transport != "shm":
+            if transport == "channel":
+                ch = Channel(maxsize=64 * max(1, fanin))
+                directory.register(
+                    rn.dataset, Endpoint(channel=ch, shared=True),
+                    rn.query_id, import_workers=workers,
+                )
+                # one shared multi-producer queue: exporters must not close
+                # it under each other (Endpoint.shared), termination is
+                # counted from the explicit EOF frames
+                return FaninTransport([ChannelTransport(ch, link)],
+                                      expected_sources=fanin)
+            lsock = listen_socket(host)
+            h, p = lsock.getsockname()
             directory.register(
-                rn.dataset, Endpoint(channel=ch, shared=True), rn.query_id,
+                rn.dataset, Endpoint(h, p, shared=True), rn.query_id,
                 import_workers=workers,
             )
-            # one shared multi-producer queue: exporters must not close it
-            # under each other (Endpoint.shared), termination is counted
-            # from the explicit EOF frames
-            return FaninTransport([ChannelTransport(ch, link)],
-                                  expected_sources=fanin)
-        lsock = listen_socket(host)
-        h, p = lsock.getsockname()
+            lsock.settimeout(60.0)
+            conns: List[Transport] = []
+            try:
+                for _ in range(fanin):
+                    conn, _ = lsock.accept()
+                    conns.append(SocketTransport(conn, link))
+            finally:
+                lsock.close()
+            return FaninTransport(conns)
+        # slotted wiring: everything is registered before anything blocks,
+        # so the exporters' query_all returns only once every importer
+        # published its full slot table
+        slot_eps: List[Endpoint] = []
+        slot_parts: List[List[Transport]] = []
+        slot_socks: List[List[socket.socket]] = []
+        for _ in range(fanin):
+            if transport == "channel":
+                chans = [Channel() for _ in range(streams)]
+                mems = tuple(Endpoint(channel=c) for c in chans)
+                slot_parts.append([ChannelTransport(c, link) for c in chans])
+                slot_socks.append([])
+            elif transport == "shm":
+                rings = [acquire_ring(shm_capacity) for _ in range(streams)]
+                mems = tuple(
+                    Endpoint(shm_name=r.name, shm_capacity=r.capacity)
+                    for r in rings)
+                slot_parts.append([ShmRingTransport(r, link) for r in rings])
+                slot_socks.append([])
+            else:
+                lsocks = [listen_socket(host) for _ in range(streams)]
+                mems = tuple(Endpoint(*ls.getsockname()) for ls in lsocks)
+                slot_parts.append([])
+                slot_socks.append(lsocks)
+            slot_eps.append(mems[0] if streams == 1
+                            else Endpoint(members=mems))
         directory.register(
-            rn.dataset, Endpoint(h, p, shared=True), rn.query_id,
-            import_workers=workers,
+            rn.dataset, Endpoint(members=tuple(slot_eps), shared=True),
+            rn.query_id, import_workers=workers,
         )
-        lsock.settimeout(60.0)
-        conns: List[Transport] = []
-        try:
-            for _ in range(fanin):
-                conn, _ = lsock.accept()
-                conns.append(SocketTransport(conn, link))
-        finally:
-            lsock.close()
-        return FaninTransport(conns)
+        for parts, lsocks in zip(slot_parts, slot_socks):
+            for ls in lsocks:
+                ls.settimeout(60.0)
+                conn, _ = ls.accept()
+                ls.close()
+                parts.append(SocketTransport(conn, link))
+        slot_tr: List[Transport] = [
+            StripedReceiver(parts, window=window) if streams > 1
+            else parts[0]
+            for parts in slot_parts
+        ]
+        return FaninTransport(slot_tr, expected_sources=fanin)
 
     # -- negotiation -------------------------------------------------------------
     def _start(self) -> None:

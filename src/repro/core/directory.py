@@ -113,6 +113,7 @@ class _QueryState:
     export_workers: Optional[int] = None  # declared via db://X?workers=N
     import_workers: Optional[int] = None
     stubbed: bool = False
+    senders: int = 0  # slot indexes handed out (striped/shm shuffles)
 
 
 class WorkerDirectory:
@@ -216,6 +217,20 @@ class WorkerDirectory:
                         f"registered within timeout"
                     )
                 self._lock.wait(remaining)
+
+    def next_sender(self, dataset: str, query_id: str = "0") -> int:
+        """Claim the next exporter *slot index* for a slotted shuffle.
+
+        Importers that register slotted fan-in endpoints (a ``shared``
+        group whose members are per-exporter rendezvous slots) need every
+        exporter to pick a distinct slot; this hands out 0, 1, 2, …
+        atomically per (dataset, query).
+        """
+        with self._lock:
+            st = self._state(dataset, query_id)
+            idx = st.senders
+            st.senders += 1
+            return idx
 
     # -- stub handling (importers > exporters) ----------------------------------
     def _maybe_stub_locked(self, dataset: str, query_id: str) -> None:
@@ -406,6 +421,10 @@ class DirectoryServer:
                             "endpoints": [_ep_to_doc(e) for e in eps]}
                 except TimeoutError as e:
                     resp = {"ok": False, "error": str(e)}
+            elif req["op"] == "next_sender":
+                resp = {"ok": True,
+                        "sender": self.directory.next_sender(
+                            req["dataset"], req.get("query_id", "0"))}
             else:
                 resp = {"ok": False, "error": f"bad op {req['op']!r}"}
             f.write(json.dumps(resp).encode() + b"\n")
@@ -490,6 +509,14 @@ class DirectoryClient:
         if not resp.get("ok"):
             raise TimeoutError(resp.get("error", "directory query failed"))
         return [_ep_from_doc(d) for d in resp.get("endpoints", [])]
+
+    def next_sender(self, dataset: str, query_id: str = "0") -> int:
+        resp = self._rpc(
+            {"op": "next_sender", "dataset": dataset, "query_id": query_id}
+        )
+        if not resp.get("ok"):
+            raise IOError(resp.get("error", "directory next_sender failed"))
+        return int(resp["sender"])
 
 
 DirectoryLike = Union[WorkerDirectory, DirectoryClient]

@@ -17,8 +17,10 @@ Partition specs (``PipeConfig.partition``)::
 
     "hash"            hash of column 0 (the paper benchmark's unique key)
     "hash:<col>"      hash of the named (or zero-based-index) column
-    "range"           range on column 0, bounds from the first block's
-                      quantiles (block export only)
+    "range"           range on column 0; bounds come preset from the
+                      planner (``PipeConfig.partition_bounds`` — global
+                      quantiles sampled once at compile time) or, absent
+                      that, from each exporter's first block quantiles
     "range:<col>"     same, named/indexed column
     "rr"              round-robin by row position (no key)
 
@@ -33,12 +35,16 @@ Semantics and limits:
 * row order *within* one (exporter, importer) stream is preserved; order
   across streams is undefined (a shuffled relation is a bag — verify-
   first-n is disabled on shuffle members for the same reason);
-* range bounds are computed per exporter from its first block, so the
-  split is approximate when exporters see skewed slices — fine for load
-  spreading, not a global sort;
-* the shm ring is single-producer and cannot take N exporters; shuffles
-  run over ``socket`` (one accepted connection per exporter) or
-  ``channel`` (one shared multi-producer queue).
+* without preset ``partition_bounds``, range bounds are computed per
+  exporter from its first block — approximate when exporters see skewed
+  slices; the planner (``repro.core.plan``) samples global quantiles at
+  compile time and stamps them into every exporter's config;
+* the shm ring is single-producer, so a *shared*-rendezvous shuffle runs
+  over ``socket`` or ``channel``; importers that register **slotted**
+  fan-in endpoints (one private rendezvous group per exporter, claimed
+  via :meth:`WorkerDirectory.next_sender`) lift that limit — each
+  (exporter, importer) pair gets its own connection set, which is also
+  how ``streams`` stripes each shuffle member pipe across N connections.
 """
 
 from __future__ import annotations
@@ -61,6 +67,7 @@ __all__ = [
     "RangePartitioner",
     "RoundRobinPartitioner",
     "parse_partition",
+    "compute_range_bounds",
     "split_block",
     "ShuffleWriter",
 ]
@@ -173,13 +180,26 @@ class RoundRobinPartitioner(Partitioner):
 
 
 class RangePartitioner(Partitioner):
-    """Range split on a key column; bounds fixed from the first block's
-    quantiles (per exporter — approximate under skewed input slices)."""
+    """Range split on a key column.
 
-    def __init__(self, key: Any = 0):
+    With preset ``bounds`` (the planner's global compile-time quantiles —
+    ``m - 1`` split points, numeric or string) every exporter places every
+    row identically, and the row-serialized path works too.  Without
+    bounds each exporter falls back to fixing them from its *own* first
+    block's quantiles — approximate under skewed input slices, and block
+    export only."""
+
+    def __init__(self, key: Any = 0, bounds: Optional[Sequence[Any]] = None):
         self.key = key
         self._bounds: Optional[np.ndarray] = None
         self._str_bounds: Optional[List[str]] = None
+        self.preset = bounds is not None
+        if bounds is not None:
+            vals = list(bounds)
+            if vals and isinstance(vals[0], str):
+                self._str_bounds = [str(v) for v in vals]
+            else:
+                self._bounds = np.asarray(vals, dtype=np.float64)
 
     def indices(self, block: ColumnBlock, m: int) -> np.ndarray:
         k = _resolve_key(self.key, block)
@@ -193,23 +213,45 @@ class RangePartitioner(Partitioner):
             import bisect
 
             return np.fromiter(
-                (bisect.bisect_right(self._str_bounds, v) for v in vals),
+                (min(bisect.bisect_right(self._str_bounds, v), m - 1)
+                 for v in vals),
                 dtype=np.int64, count=len(vals))
         arr = np.asarray(col, dtype=np.float64)
         if self._bounds is None:
             qs = [i / m for i in range(1, m)]
             self._bounds = (np.quantile(arr, qs) if len(arr)
                             else np.zeros(m - 1))
-        return np.searchsorted(self._bounds, arr, side="right").astype(np.int64)
+        idx = np.searchsorted(self._bounds, arr, side="right").astype(np.int64)
+        return np.minimum(idx, m - 1)
 
     def part_of_row(self, key_cell: Any, m: int) -> int:
-        raise ValueError(
-            "range partitioning needs block export (bounds come from block "
-            "quantiles); use hash/rr for row-serialized modes")
+        if not self.preset:
+            raise ValueError(
+                "range partitioning without preset bounds needs block "
+                "export (bounds come from block quantiles); compile the "
+                "transfer through a plan, or use hash/rr for "
+                "row-serialized modes")
+        import bisect
+
+        if isinstance(key_cell, AString):
+            key_cell = key_cell.sole_value
+        if self._str_bounds is not None:
+            return min(bisect.bisect_right(self._str_bounds, str(key_cell)),
+                       m - 1)
+        try:
+            v = float(key_cell)
+        except (TypeError, ValueError):
+            raise ValueError(
+                f"range key {key_cell!r} is not numeric but the preset "
+                f"bounds are") from None
+        return min(int(np.searchsorted(self._bounds, v, side="right")), m - 1)
 
 
-def parse_partition(spec: str) -> Partitioner:
-    """``hash[:col] | range[:col] | rr`` → a Partitioner instance."""
+def parse_partition(spec: str,
+                    bounds: Optional[Sequence[Any]] = None) -> Partitioner:
+    """``hash[:col] | range[:col] | rr`` → a Partitioner instance.
+    ``bounds`` presets the range split points (planner-computed global
+    quantiles); it is ignored for the keyless/hash kinds."""
     kind, _, key = str(spec).partition(":")
     kind = kind.strip().lower()
     key_val: Any = key.strip() if key.strip() else 0
@@ -218,11 +260,32 @@ def parse_partition(spec: str) -> Partitioner:
     if kind == "hash":
         return HashPartitioner(key_val)
     if kind == "range":
-        return RangePartitioner(key_val)
+        return RangePartitioner(key_val, bounds=bounds)
     if kind in ("rr", "roundrobin", "round-robin"):
         return RoundRobinPartitioner()
     raise ValueError(
         f"unknown partition spec {spec!r}; have hash[:col], range[:col], rr")
+
+
+def compute_range_bounds(block: ColumnBlock, key: Any, m: int) -> List[Any]:
+    """Global range split points for ``m`` partitions: ``m - 1`` quantile
+    bounds of the key column over the *whole* relation.  The planner calls
+    this once at compile time and stamps the result into every exporter's
+    ``PipeConfig.partition_bounds``, so N exporters agree on the split no
+    matter how skewed their slices are."""
+    if m <= 1:
+        return []
+    k = _resolve_key(key, block)
+    col = block.columns[k]
+    if block.schema[k].type is ColType.STRING:
+        srt = sorted(str(s) for s in col)
+        return ([srt[len(srt) * i // m] for i in range(1, m)]
+                if srt else [""] * (m - 1))
+    arr = np.asarray(col, dtype=np.float64)
+    if not len(arr):
+        return [0.0] * (m - 1)
+    qs = [i / m for i in range(1, m)]
+    return [float(b) for b in np.quantile(arr, qs)]
 
 
 def split_block(block: ColumnBlock, idx: np.ndarray, m: int) -> List[ColumnBlock]:
@@ -275,19 +338,38 @@ class ShuffleWriter:
         self.config = config or PipeConfig()
         if not self.config.partition:
             raise ValueError("ShuffleWriter needs PipeConfig.partition")
-        if self.config.transport == "shm":
-            raise ValueError(
-                "shuffle cannot run over the shm ring (single-producer); "
-                "use transport='socket' or 'channel'")
-        self.partitioner = parse_partition(self.config.partition)
+        self.partitioner = parse_partition(
+            self.config.partition, bounds=self.config.partition_bounds)
         directory = directory or get_directory()
         endpoints = directory.query_all(
             rn.dataset, rn.query_id, timeout=self.config.connect_timeout)
         if not endpoints:
             raise TimeoutError(f"no import workers for shuffle {rn.dataset!r}")
+        # slotted rendezvous (importer registered one private per-exporter
+        # slot group — the striped and/or shm wiring): claim one sender
+        # index for this exporter and talk to its slot on every importer
+        if any(ep.shared and ep.is_group for ep in endpoints):
+            sender = directory.next_sender(rn.dataset, rn.query_id)
+            resolved = []
+            for ep in endpoints:
+                if not (ep.shared and ep.is_group):
+                    raise IOError(
+                        "shuffle importers disagree on the rendezvous "
+                        "wiring (slotted vs shared)")
+                if sender >= len(ep.members):
+                    raise ValueError(
+                        f"shuffle declared {len(ep.members)} exporter "
+                        f"slots but this is exporter #{sender + 1}")
+                resolved.append(ep.members[sender])
+            endpoints = resolved
+        elif any(ep.is_shm and ep.shared for ep in endpoints):
+            raise ValueError(
+                "a shared shm ring cannot take multiple exporters "
+                "(single-producer); the importer must register slotted "
+                "endpoints (it does when fanin > 1 and transport='shm')")
         # members are plain 1:1 pipes: no nested partitioning, no verify
         # (row order across sources is undefined), striping composes at the
-        # member level only if the importer registered a group endpoint
+        # member level whenever the importer's slot is a group endpoint
         member_cfg = replace(self.config, partition=None, fanin=1,
                              verify_first_n=0)
         self._members: List[DataPipeOutput] = []

@@ -1,0 +1,745 @@
+"""Declarative transfer plans: plan → compile → execute.
+
+The paper's usage model is one A→B table move configured by hand; hybrid
+analytics is chains and fan-outs across many systems.  This module splits
+the user surface into three layers (the intermediate-layer argument):
+
+* **TransferPlan** — a declarative builder for a multi-edge DAG::
+
+      plan().move(src, "t", dst, "t2").options(partition="hash:key",
+                                               streams=2)
+            .then(dst, "t2", third, "t3")
+
+  ``move`` adds an independent edge (two moves out of the same table are
+  a fan-out and run concurrently), ``then`` chains the next edge after
+  the previous one, ``options`` refines the last-added edge.
+
+* **The planner** (``TransferPlan.compile``) — resolves every edge to a
+  fully-specified :class:`EdgePlan` *before any data moves*: wire mode
+  via the FormOpt ladder with a process-wide negotiation cache (the
+  lower rung of the two engines wins), transport/streams/partition
+  validation, worker pairing and shuffle fan-in, and — for range
+  partitions — *global* bounds sampled once from the source relation's
+  quantiles and stamped into every exporter's config, so N exporters
+  agree on the split.  Dependencies are inferred from data flow (an edge
+  reading a table another edge produces waits for it; an edge
+  overwriting a table an earlier edge reads waits for the read), checked
+  for duplicate targets and cycles, and grouped into stages of
+  independent edges.
+
+* **The executor** (``CompiledPlan.execute``) — runs each stage's edges
+  concurrently over the shared worker directory, aggregates the per-edge
+  :class:`~repro.core.session.TransferResult` into a :class:`PlanResult`,
+  and surfaces *all* peer failures (export and import side) instead of
+  the first one, chaining secondaries as ``__context__``.
+
+``CompiledPlan.explain()`` renders the per-edge decisions for inspection
+(dry-run); ``describe()`` returns them as dicts for programmatic use.
+:func:`repro.core.session.transfer` and ``transfer_via_files`` are thin
+back-compat shims over a one-edge plan.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field, fields as dc_fields, replace
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from .codegen import PipeEnabledEngine
+from .datapipe import PipeConfig, collect_stats
+from .directory import DirectoryLike, set_directory
+from .fabric import compute_range_bounds, parse_partition
+from .ioredirect import PipeOpenContext
+
+__all__ = [
+    "plan",
+    "TransferPlan",
+    "CompiledPlan",
+    "EdgePlan",
+    "PlanResult",
+    "PlanError",
+    "PlanExecutionError",
+    "negotiated_config",
+    "chain_exceptions",
+]
+
+
+class PlanError(ValueError):
+    """A plan failed validation at build/compile time (nothing moved)."""
+
+
+class PlanExecutionError(RuntimeError):
+    """One or more edges failed; ``.result`` holds the partial PlanResult."""
+
+    def __init__(self, message: str, result: "PlanResult"):
+        super().__init__(message)
+        self.result = result
+
+
+# -- negotiation cache ---------------------------------------------------------
+# The FormOpt ladder (session.negotiate_pipe_mode) runs the engine's own
+# round-trip tests per rung -- expensive, and its outcome is a property of
+# the engine class, so one process-wide probe per engine is enough.
+
+_negotiation_lock = threading.Lock()
+_negotiation_cache: Dict[str, PipeConfig] = {}
+
+
+def negotiated_config(engine: Any) -> PipeConfig:
+    """The engine's negotiated :class:`PipeConfig` (FormOpt ladder,
+    most-optimized rung that validates), cached process-wide per engine
+    name.  Returns a copy — callers mutate freely."""
+    key = engine.name
+    with _negotiation_lock:
+        cfg = _negotiation_cache.get(key)
+    if cfg is None:
+        from .session import negotiate_pipe_mode
+
+        cfg = negotiate_pipe_mode(engine)
+        with _negotiation_lock:
+            cfg = _negotiation_cache.setdefault(key, cfg)
+    return replace(cfg)
+
+
+def clear_negotiation_cache() -> None:
+    with _negotiation_lock:
+        _negotiation_cache.clear()
+
+
+def chain_exceptions(excs: Sequence[BaseException]) -> BaseException:
+    """Return ``excs[0]`` with the remaining exceptions linked onto the
+    end of its ``__context__`` chain, so a single ``raise`` surfaces every
+    peer failure in the traceback."""
+    primary = excs[0]
+    seen = {id(primary)}
+    node = primary
+    while node.__context__ is not None and id(node.__context__) not in seen:
+        node = node.__context__
+        seen.add(id(node))
+    for e in excs[1:]:
+        if id(e) in seen:
+            continue
+        node.__context__ = e
+        seen.add(id(e))
+        node = e
+        while node.__context__ is not None and id(node.__context__) not in seen:
+            node = node.__context__
+            seen.add(id(node))
+    return primary
+
+
+# -- the declarative surface ---------------------------------------------------
+
+#: edge options that configure the *edge*, not the pipe
+_EDGE_KEYS = frozenset(
+    ("workers", "import_workers", "timeout", "via", "dataset", "config"))
+_PIPE_KEYS = frozenset(f.name for f in dc_fields(PipeConfig))
+_VIA = ("pipe", "files")
+
+
+@dataclass
+class _Edge:
+    src: Any
+    table: str
+    dst: Any
+    dst_table: str
+    options: Dict[str, Any]
+    after_prev: bool = False
+
+
+@dataclass
+class EdgePlan:
+    """One fully-resolved hop of a compiled plan (what ``explain`` shows
+    and what the executor runs)."""
+
+    edge_id: str
+    source: str                      # source engine name
+    table: str
+    target: str                      # destination engine name
+    dst_table: str
+    via: str                         # "pipe" | "files"
+    mode: str
+    codec: str
+    transport: str
+    workers: int
+    import_workers: int
+    streams: int
+    partition: Optional[str]
+    partition_bounds: Optional[Tuple]   # global range bounds (compile-time)
+    bounds_deferred: bool               # source is produced upstream
+    fanin: int
+    dataset: str
+    timeout: float
+    negotiated: bool                 # mode came from the FormOpt ladder
+    depends_on: Tuple[str, ...]
+    config: PipeConfig = field(repr=False, default=None)
+    src_engine: Any = field(repr=False, default=None)
+    dst_engine: Any = field(repr=False, default=None)
+
+    def describe(self) -> dict:
+        """The declarative decision record (no runtime handles)."""
+        return {
+            "edge": self.edge_id,
+            "source": f"{self.source}:{self.table}",
+            "target": f"{self.target}:{self.dst_table}",
+            "via": self.via,
+            "mode": self.mode,
+            "codec": self.codec,
+            "transport": self.transport,
+            "workers": self.workers,
+            "import_workers": self.import_workers,
+            "streams": self.streams,
+            "partition": self.partition,
+            # a deferred edge shows "deferred" until execution samples the
+            # bounds, then the sampled values
+            "partition_bounds": (
+                self.partition_bounds if self.partition_bounds is not None
+                else ("deferred" if self.bounds_deferred else None)),
+            "fanin": self.fanin,
+            "negotiated": self.negotiated,
+            "depends_on": list(self.depends_on),
+        }
+
+    def explain_line(self) -> str:
+        bits = [f"{self.edge_id}: {self.source}:{self.table} -> "
+                f"{self.target}:{self.dst_table}",
+                f"via={self.via}"]
+        if self.via == "pipe":
+            bits += [f"mode={self.mode}"
+                     + ("(negotiated)" if self.negotiated else ""),
+                     f"codec={self.codec}", f"transport={self.transport}",
+                     f"workers={self.workers}->{self.import_workers}"]
+            if self.streams > 1:
+                bits.append(f"streams={self.streams}")
+            if self.partition:
+                bits.append(f"partition={self.partition} fanin={self.fanin}")
+                if self.partition_bounds is not None:
+                    bounds = ", ".join(
+                        f"{b:.4g}" if isinstance(b, float) else repr(b)
+                        for b in self.partition_bounds)
+                    bits.append(f"bounds=[{bounds}]")
+                elif self.bounds_deferred:
+                    bits.append("bounds=deferred")
+        else:
+            bits.append(f"workers={self.workers}")
+        if self.depends_on:
+            bits.append(f"after={','.join(self.depends_on)}")
+        return "  ".join(bits)
+
+
+class TransferPlan:
+    """Builder for a multi-edge transfer DAG (see module docstring)."""
+
+    def __init__(self, directory: Optional[DirectoryLike] = None,
+                 negotiate: bool = True):
+        self._edges: List[_Edge] = []
+        self._directory = directory
+        self._negotiate = negotiate
+
+    # -- building --------------------------------------------------------------
+    def move(self, src: Any, table: str, dst: Any, dst_table: str,
+             **options: Any) -> "TransferPlan":
+        """Add one ``src:table -> dst:dst_table`` edge.  Edges with no
+        data dependency run concurrently (a second ``move`` out of the
+        same table is a fan-out)."""
+        self._edges.append(_Edge(src, table, dst, dst_table, dict(options)))
+        return self
+
+    def then(self, src: Any, table: str, dst: Any, dst_table: str,
+             **options: Any) -> "TransferPlan":
+        """Like :meth:`move`, but explicitly sequenced after the
+        previously added edge (a chained hop)."""
+        if not self._edges:
+            raise PlanError("then() needs a preceding move()")
+        self._edges.append(
+            _Edge(src, table, dst, dst_table, dict(options), after_prev=True))
+        return self
+
+    def options(self, **options: Any) -> "TransferPlan":
+        """Refine the last-added edge (``mode=``, ``streams=``,
+        ``partition=``, ``workers=``, ... — any PipeConfig knob or edge
+        option)."""
+        if not self._edges:
+            raise PlanError("options() needs a preceding move()")
+        self._edges[-1].options.update(options)
+        return self
+
+    # -- compile ---------------------------------------------------------------
+    def compile(self, directory: Optional[DirectoryLike] = None
+                ) -> "CompiledPlan":
+        """Validate the whole DAG and resolve every edge to an
+        :class:`EdgePlan` — negotiation, partition bounds, worker pairing
+        — before any data moves."""
+        if not self._edges:
+            raise PlanError("empty plan: add edges with move()")
+        n = len(self._edges)
+        # duplicate targets: two edges writing the same (engine, table)
+        produced: Dict[Tuple[int, str], int] = {}
+        for i, e in enumerate(self._edges):
+            key = (id(e.dst), e.dst_table)
+            if key in produced:
+                raise PlanError(
+                    f"duplicate target: edges e{produced[key]} and e{i} "
+                    f"both write {e.dst.name}:{e.dst_table}")
+            produced[key] = i
+        # data-flow dependencies (+ explicit then-chaining)
+        deps: List[set] = [set() for _ in range(n)]
+        for i, e in enumerate(self._edges):
+            if (id(e.src), e.table) == (id(e.dst), e.dst_table):
+                raise PlanError(
+                    f"edge e{i} reads and writes the same table "
+                    f"{e.src.name}:{e.table} (a one-edge cycle)")
+            if e.after_prev:
+                deps[i].add(i - 1)
+            for j in range(i):  # declaration order resolves hazards
+                other = self._edges[j]
+                # read-after-write: i consumes what j produces
+                if (id(other.dst), other.dst_table) == (id(e.src), e.table):
+                    deps[i].add(j)
+                # write-after-read: i overwrites what j still reads
+                if (id(other.src), other.table) == (id(e.dst), e.dst_table):
+                    deps[i].add(j)
+            has_producer = any(
+                (id(o.dst), o.dst_table) == (id(e.src), e.table)
+                for o in self._edges[:i])
+            if not has_producer:
+                tables = getattr(e.src, "tables", None)
+                if tables is not None and e.table not in tables:
+                    raise PlanError(
+                        f"edge e{i}: source table {e.table!r} does not "
+                        f"exist in {e.src.name} and no earlier edge "
+                        f"produces it")
+        # topological stages (Kahn levels); leftover edges form a cycle
+        stages: List[List[int]] = []
+        resolved: set = set()
+        remaining = set(range(n))
+        while remaining:
+            level = sorted(i for i in remaining if deps[i] <= resolved)
+            if not level:
+                raise PlanError(
+                    "plan has a dependency cycle among edges "
+                    f"{sorted(f'e{i}' for i in remaining)}")
+            stages.append(level)
+            resolved |= set(level)
+            remaining -= set(level)
+        # per-edge resolution
+        plans: List[EdgePlan] = []
+        for i, e in enumerate(self._edges):
+            # sample range bounds at compile only when the source relation
+            # is already final (not produced/overwritten by an upstream
+            # edge) -- otherwise defer sampling to just before the edge runs
+            produced_upstream = any(
+                (id(o.dst), o.dst_table) == (id(e.src), e.table)
+                for o in self._edges[:i])
+            plans.append(self._resolve_edge(
+                i, e, deps[i],
+                table_preexists=(
+                    not produced_upstream
+                    and e.table in getattr(e.src, "tables", ()))))
+        return CompiledPlan(plans, [[f"e{i}" for i in lvl] for lvl in stages],
+                            directory or self._directory)
+
+    def _resolve_edge(self, i: int, e: _Edge, deps: set,
+                      table_preexists: bool) -> EdgePlan:
+        opts = dict(e.options)
+        unknown = set(opts) - _EDGE_KEYS - _PIPE_KEYS
+        if unknown:
+            raise PlanError(
+                f"edge e{i}: unknown option(s) {sorted(unknown)}; have "
+                f"{sorted(_EDGE_KEYS | _PIPE_KEYS)}")
+        via = opts.pop("via", "pipe")
+        if via not in _VIA:
+            raise PlanError(f"edge e{i}: via={via!r} not in {_VIA}")
+        workers = int(opts.pop("workers", 1))
+        import_workers = opts.pop("import_workers", None)
+        timeout = float(opts.pop("timeout", 120.0))
+        dataset = opts.pop("dataset", None) or f"{e.src.name}2{e.dst.name}"
+        base = opts.pop("config", None)
+        pipe_overrides = {k: v for k, v in opts.items() if k in _PIPE_KEYS}
+        if via == "files" and (pipe_overrides or base is not None
+                               or import_workers is not None):
+            # a file edge never opens pipes: pipe knobs silently ignored
+            # would be exactly the kwarg fall-through the planner exists
+            # to prevent
+            bad = sorted(pipe_overrides) + (
+                ["config"] if base is not None else []) + (
+                ["import_workers"] if import_workers is not None else [])
+            raise PlanError(
+                f"edge e{i}: via='files' cannot take pipe option(s) {bad}")
+        import_workers = (workers if import_workers is None
+                          else int(import_workers))
+        negotiated = False
+        if base is not None:
+            cfg = replace(base)
+        elif self._negotiate and via == "pipe" and "mode" not in pipe_overrides:
+            cfg, negotiated = self._negotiate_pair(e.src, e.dst), True
+        else:
+            cfg = PipeConfig()
+        if pipe_overrides:
+            cfg = replace(cfg, **pipe_overrides)
+        if cfg.streams < 1:
+            raise PlanError(f"edge e{i}: streams must be >= 1")
+        if cfg.transport not in ("socket", "channel", "shm"):
+            raise PlanError(
+                f"edge e{i}: unknown transport {cfg.transport!r}")
+        bounds_deferred = False
+        if via == "pipe" and cfg.partition:
+            try:
+                part = parse_partition(cfg.partition,
+                                       bounds=cfg.partition_bounds)
+            except ValueError as exc:
+                raise PlanError(f"edge e{i}: {exc}") from None
+            cfg = replace(cfg, fanin=workers)
+            if (cfg.partition_bounds is None
+                    and cfg.partition.split(":", 1)[0].strip().lower()
+                    == "range"):
+                if table_preexists:
+                    bounds = compute_range_bounds(
+                        e.src.get_block(e.table), part.key, import_workers)
+                    cfg = replace(cfg, partition_bounds=tuple(bounds))
+                else:
+                    # the source relation is produced by an upstream edge;
+                    # the executor samples bounds right before this edge
+                    bounds_deferred = True
+        elif via == "pipe":
+            cfg = replace(cfg, fanin=1)
+        return EdgePlan(
+            edge_id=f"e{i}", source=e.src.name, table=e.table,
+            target=e.dst.name, dst_table=e.dst_table, via=via,
+            mode=cfg.mode if via == "pipe" else "file-csv",
+            codec=cfg.codec if via == "pipe" else "none",
+            transport=cfg.transport, workers=workers,
+            import_workers=import_workers, streams=cfg.streams,
+            partition=cfg.partition, partition_bounds=cfg.partition_bounds,
+            bounds_deferred=bounds_deferred, fanin=cfg.fanin,
+            dataset=dataset, timeout=timeout,
+            negotiated=negotiated,
+            depends_on=tuple(f"e{j}" for j in sorted(deps)),
+            config=cfg, src_engine=e.src, dst_engine=e.dst,
+        )
+
+    @staticmethod
+    def _negotiate_pair(src: Any, dst: Any) -> PipeConfig:
+        """Both engines run the FormOpt ladder (cached); the edge takes
+        the *lower* (less optimized) of the two negotiated rungs — the
+        most conservative mode both sides validated."""
+        from .session import MODE_LADDER
+
+        cfg_s, cfg_d = negotiated_config(src), negotiated_config(dst)
+        try:
+            rung = max(MODE_LADDER.index(cfg_s.mode),
+                       MODE_LADDER.index(cfg_d.mode))
+        except ValueError:  # pragma: no cover - ladder always covers both
+            return cfg_s
+        return replace(cfg_s, mode=MODE_LADDER[rung])
+
+    # -- conveniences ----------------------------------------------------------
+    def explain(self) -> str:
+        return self.compile().explain()
+
+    def execute(self, directory: Optional[DirectoryLike] = None,
+                raise_on_error: bool = True) -> "PlanResult":
+        return self.compile(directory).execute(raise_on_error=raise_on_error)
+
+
+def plan(directory: Optional[DirectoryLike] = None,
+         negotiate: bool = True) -> TransferPlan:
+    """Start a :class:`TransferPlan` (``negotiate=False`` skips the
+    FormOpt ladder and defaults un-configured edges to ``arrowcol``)."""
+    return TransferPlan(directory=directory, negotiate=negotiate)
+
+
+# -- results -------------------------------------------------------------------
+
+
+@dataclass
+class PlanResult:
+    """Aggregate outcome of one executed plan."""
+
+    results: Dict[str, Any]              # edge_id -> TransferResult
+    errors: List[str]                    # formatted, all edges/sides
+    exceptions: List[BaseException]      # the underlying exception objects
+    skipped: List[str]                   # edges not run (upstream failed)
+    seconds: float = 0.0
+
+    @property
+    def ok(self) -> bool:
+        return not self.errors and not self.skipped
+
+    @property
+    def rows(self) -> int:
+        """Total rows landed across *all* edges — a chain counts every
+        hop (two 400-row hops report 800); per-relation counts live on
+        the per-edge TransferResults."""
+        return sum(r.rows for r in self.results.values())
+
+    def edge(self, edge_id: str):
+        return self.results[edge_id]
+
+    def single(self):
+        """The sole TransferResult of a one-edge plan (the shims' case)."""
+        if len(self.results) != 1:
+            raise ValueError(f"plan has {len(self.results)} results")
+        return next(iter(self.results.values()))
+
+
+class CompiledPlan:
+    """A validated plan: fully-resolved edges grouped into stages of
+    independent edges.  ``explain()`` before, ``execute()`` when ready."""
+
+    def __init__(self, edges: List[EdgePlan], stages: List[List[str]],
+                 directory: Optional[DirectoryLike]):
+        self.edges = edges
+        self.stages = stages
+        self._directory = directory
+        self._by_id = {ep.edge_id: ep for ep in edges}
+
+    def describe(self) -> List[dict]:
+        """Per-edge decision dicts, in edge order."""
+        return [ep.describe() for ep in self.edges]
+
+    def explain(self) -> str:
+        """Human-readable per-edge decisions (the dry-run view)."""
+        lines = [f"plan: {len(self.edges)} edge(s), "
+                 f"{len(self.stages)} stage(s)"]
+        for s, stage in enumerate(self.stages):
+            lines.append(f"stage {s}:")
+            for eid in stage:
+                lines.append("  " + self._by_id[eid].explain_line())
+        return "\n".join(lines)
+
+    def execute(self, raise_on_error: bool = True) -> PlanResult:
+        """Run the stages in order, each stage's edges concurrently, over
+        the shared worker directory.  With ``raise_on_error`` (default) a
+        failed edge raises :class:`PlanExecutionError` after the whole
+        plan settles, all collected exceptions chained; edges downstream
+        of a failure are skipped, independent edges still run."""
+        if self._directory is not None:
+            set_directory(self._directory)
+        # generate every engine's pipe adapter up front, serially: the
+        # capture run patches builtins.open process-wide, so it must never
+        # overlap another edge's live pipe traffic
+        from .session import adapter_for
+
+        for ep in self.edges:
+            if ep.via == "pipe":
+                adapter_for(ep.src_engine)
+                adapter_for(ep.dst_engine)
+        t0 = time.perf_counter()
+        results: Dict[str, Any] = {}
+        errors: List[str] = []
+        exceptions: List[BaseException] = []
+        skipped: List[str] = []
+        failed: set = set()
+        for stage in self.stages:
+            runnable: List[EdgePlan] = []
+            for eid in stage:
+                ep = self._by_id[eid]
+                bad = [d for d in ep.depends_on if d in failed]
+                if bad:
+                    skipped.append(eid)
+                    failed.add(eid)
+                    errors.append(
+                        f"{eid}: skipped (upstream {','.join(bad)} failed)")
+                else:
+                    runnable.append(ep)
+            if not runnable:
+                continue
+            outs: Dict[str, Tuple[Any, List[BaseException]]] = {}
+            # fresh query ids per run: a re-executed compiled plan must
+            # not collide with its previous rendezvous (the directory's
+            # per-(dataset, query) state — sender slots, stats — persists)
+            from .session import _query_counter
+
+            qids = {ep.edge_id: f"q{next(_query_counter)}"
+                    for ep in runnable}
+
+            def run(ep: EdgePlan) -> None:
+                outs[ep.edge_id] = _run_edge(ep, qids[ep.edge_id])
+
+            if len(runnable) == 1:
+                run(runnable[0])
+            else:
+                threads = [
+                    threading.Thread(target=run, args=(ep,),
+                                     name=f"pipegen-plan-{ep.edge_id}",
+                                     daemon=True)
+                    for ep in runnable
+                ]
+                for t in threads:
+                    t.start()
+                for t in threads:
+                    t.join()
+            for ep in runnable:
+                res, excs = outs[ep.edge_id]
+                if res is not None:
+                    results[ep.edge_id] = res
+                if excs:
+                    failed.add(ep.edge_id)
+                    exceptions.extend(excs)
+                    errors.extend(
+                        f"{ep.edge_id}: {m}"
+                        for m in (res.errors if res is not None
+                                  else [repr(x) for x in excs]))
+        pr = PlanResult(results=results, errors=errors, exceptions=exceptions,
+                        skipped=skipped, seconds=time.perf_counter() - t0)
+        if raise_on_error and exceptions:
+            raise PlanExecutionError(
+                f"{len(failed)} edge(s) failed: " + "; ".join(errors), pr
+            ) from chain_exceptions(exceptions)
+        return pr
+
+
+# -- the edge runners ----------------------------------------------------------
+
+
+def _run_edge(ep: EdgePlan, query_id: str):
+    """Execute one edge under the executor's per-run ``query_id``;
+    returns ``(TransferResult | None, exceptions)``.  Never raises: all
+    failures (both sides, timeout) are collected."""
+    try:
+        if ep.via == "files":
+            return _run_file_edge(ep)
+        return _run_pipe_edge(ep, query_id)
+    except BaseException as e:  # noqa: BLE001 - the executor aggregates
+        return None, [e]
+
+
+def _run_pipe_edge(ep: EdgePlan, query_id: str):
+    from .session import TransferResult, adapter_for
+
+    src, dst = ep.src_engine, ep.dst_engine
+    config = ep.config
+    if ep.bounds_deferred:
+        # the source relation now exists (its producer edge ran): sample
+        # the global range bounds that compile had to defer.  The flag
+        # stays set — a re-executed plan re-samples (the upstream edge
+        # re-ran too); ep.partition_bounds is updated for observability.
+        part = parse_partition(ep.partition)
+        bounds = tuple(compute_range_bounds(
+            src.get_block(ep.table), part.key, ep.import_workers))
+        config = replace(config, partition_bounds=bounds)
+        ep.partition_bounds = bounds
+    gp_src, gp_dst = adapter_for(src), adapter_for(dst)
+    name_exp = (f"db://{ep.dataset}?workers={ep.workers}"
+                f"&query={query_id}")
+    name_imp = (f"db://{ep.dataset}?workers={ep.import_workers}"
+                f"&query={query_id}")
+    # (side, exception) in *completion order*: the first failure is the
+    # root cause (a crashed peer orphans the survivor, whose secondary
+    # timeout then rides along as __context__)
+    errs: List[Tuple[str, BaseException]] = []
+    times = {"export": 0.0, "import": 0.0}
+
+    def run_import() -> None:
+        t0 = time.perf_counter()
+        try:
+            with PipeEnabledEngine(gp_dst), PipeOpenContext(config):
+                dst.import_csv_parallel(ep.dst_table, name_imp,
+                                        workers=ep.import_workers)
+        except BaseException as e:  # noqa: BLE001 - surfaced via result
+            errs.append(("import", e))
+        times["import"] = time.perf_counter() - t0
+
+    def run_export() -> None:
+        t0 = time.perf_counter()
+        try:
+            with PipeEnabledEngine(gp_src), PipeOpenContext(config):
+                src.export_csv_parallel(
+                    ep.table, name_exp, workers=ep.workers,
+                    header=dst.writes_header, delimiter=dst.csv_delimiter,
+                )
+        except BaseException as e:  # noqa: BLE001
+            errs.append(("export", e))
+        times["export"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    # daemon: a failed peer must not pin the process on an orphaned
+    # accept/recv (the surviving side times out on its own)
+    ti = threading.Thread(target=run_import, daemon=True,
+                          name=f"pipegen-import-{query_id}")
+    te = threading.Thread(target=run_export, daemon=True,
+                          name=f"pipegen-export-{query_id}")
+    ti.start()
+    te.start()
+    ti.join(ep.timeout)
+    te.join(ep.timeout)
+    elapsed = time.perf_counter() - t0
+    excs: List[BaseException] = []
+    messages: List[str] = []
+    for side, e in errs:
+        excs.append(e)
+        messages.append(f"{side}: {e!r}")
+    if not excs and (ti.is_alive() or te.is_alive()):
+        stuck = [nm for nm, th in (("import", ti), ("export", te))
+                 if th.is_alive()]
+        excs.append(TimeoutError(
+            f"transfer {ep.dataset} did not complete within {ep.timeout}s "
+            f"({'/'.join(stuck)} still running)"))
+        messages.append(f"timeout: {excs[-1]}")
+    try:
+        rows = len(dst.get_block(ep.dst_table))
+    except KeyError:
+        rows = 0
+    stats = collect_stats(ep.dataset, query_id)
+    exp_stats = stats.get("export")
+    result = TransferResult(
+        source=src.name, target=dst.name, mode=config.mode,
+        codec=config.codec, rows=rows, seconds=elapsed,
+        export_seconds=times["export"], import_seconds=times["import"],
+        bytes_moved=exp_stats.bytes_sent if exp_stats else 0,
+        errors=messages,
+        export_stats=exp_stats, import_stats=stats.get("import"),
+    )
+    return result, excs
+
+
+def run_file_transfer(src: Any, table: str, dst: Any, dst_table: str,
+                      workers: int, td: Optional[str] = None):
+    """The file-system baseline, shared by ``via='files'`` edges and the
+    :func:`~repro.core.session.transfer_via_files` shim.  With ``td``
+    (caller-owned spool dir) the part files are kept; otherwise a temp
+    dir is created and removed."""
+    import os
+    import tempfile
+
+    from .session import TransferResult
+
+    own_tmp = td is None
+    td = td or tempfile.mkdtemp(prefix="pipegen-fs-")
+    base = os.path.join(td, f"{src.name}2{dst.name}.csv")
+    t0 = time.perf_counter()
+    src.export_csv_parallel(
+        table, base, workers=workers,
+        header=dst.writes_header, delimiter=dst.csv_delimiter,
+    )
+    t1 = time.perf_counter()
+    # single-worker export writes `base` itself; parallel writes part files
+    if workers <= 1:
+        if not os.path.exists(base):
+            raise FileNotFoundError(base)
+        dst.import_csv(dst_table, base)
+    else:
+        dst.import_csv_parallel(dst_table, base, workers=workers)
+    t2 = time.perf_counter()
+    bytes_moved = 0
+    for fn in os.listdir(td):
+        if fn.startswith(os.path.basename(base)):
+            bytes_moved += os.path.getsize(os.path.join(td, fn))
+    if own_tmp:
+        for fn in os.listdir(td):
+            os.unlink(os.path.join(td, fn))
+        os.rmdir(td)
+    rows = len(dst.get_block(dst_table))
+    return TransferResult(
+        source=src.name, target=dst.name, mode="file-csv", codec="none",
+        rows=rows, seconds=t2 - t0,
+        export_seconds=t1 - t0, import_seconds=t2 - t1,
+        bytes_moved=bytes_moved,
+    )
+
+
+def _run_file_edge(ep: EdgePlan):
+    return run_file_transfer(ep.src_engine, ep.table, ep.dst_engine,
+                             ep.dst_table, ep.workers), []

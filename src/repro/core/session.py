@@ -2,13 +2,14 @@
 
 The paper's usage model is two queries — an export on the source DBMS and an
 import on the target — with PipeGen's worker directory pairing the two sides
-at runtime.  :func:`transfer` packages exactly that: it runs the export and
-import concurrently (each under its engine's generated pipe splice), matches
-the destination's text dialect the way a user would configure the export,
-and returns timing/byte statistics for the benchmarks.
+at runtime.  :func:`transfer` packages exactly that for the one-edge case; it
+is a thin back-compat shim over a one-edge :mod:`repro.core.plan`
+TransferPlan, which is where multi-edge DAGs (chains, fan-outs, batches),
+per-edge negotiation, and ``explain()`` live.
 
 :func:`transfer_via_files` is the baseline the paper compares against: the
-same export/import through real files on the file system.
+same export/import through real files on the file system (a one-edge plan
+with ``via="files"``).
 """
 
 from __future__ import annotations
@@ -17,13 +18,12 @@ import itertools
 import os
 import tempfile
 import threading
-import time
 from dataclasses import dataclass, field, replace
 from typing import Any, Dict, List, Optional
 
 from .codegen import GeneratedPipe, PipeEnabledEngine, generate_pipe_adapter
-from .datapipe import PipeConfig, PipeStats, collect_stats
-from .directory import WorkerDirectory, set_directory
+from .datapipe import PipeConfig, PipeStats
+from .directory import WorkerDirectory
 from .ioredirect import PipeOpenContext
 
 __all__ = ["TransferResult", "transfer", "transfer_via_files", "adapter_for",
@@ -45,6 +45,9 @@ class TransferResult:
     export_seconds: float = 0.0
     import_seconds: float = 0.0
     bytes_moved: int = 0
+    # every peer failure (export AND import side, plus timeouts), formatted;
+    # empty on success.  transfer() raises the first underlying exception
+    # with the others chained as __context__; PlanResult keeps them all.
     errors: List[str] = field(default_factory=list)
     # merged PipeStats across all workers / shuffle members / streams of
     # the transfer (per-stream breakdowns under .per_stream); None when the
@@ -80,7 +83,10 @@ MODE_LADDER = ("arrowcol", "arrowrow", "binary_rows", "parts", "text")
 def negotiate_pipe_mode(engine: Any, spool_dir: Optional[str] = None) -> PipeConfig:
     """Run the engine's own round-trip unit tests across the verification
     proxy for each FormOpt rung, most-optimized first; return the first
-    configuration that validates (the paper's disable-on-failure loop)."""
+    configuration that validates (the paper's disable-on-failure loop).
+
+    The planner caches the outcome process-wide per engine name
+    (:func:`repro.core.plan.negotiated_config`)."""
     import tempfile
 
     from .verify import validate_generated_pipe
@@ -123,8 +129,10 @@ def transfer(
 ) -> TransferResult:
     """Move ``src:table`` into ``dst:dst_table`` over a generated data pipe.
 
-    The export runs with the destination's dialect (header/delimiter), the
-    way the paper's users configure their export queries.  ``workers`` /
+    Back-compat shim: builds a one-edge :mod:`repro.core.plan` plan with an
+    explicit config (no negotiation ladder) and executes it.  The export
+    runs with the destination's dialect (header/delimiter), the way the
+    paper's users configure their export queries; ``workers`` /
     ``import_workers`` reproduce the section 4.2 N:M pairing.
 
     ``transport`` overrides the pipe's rendezvous flavor without building a
@@ -137,9 +145,16 @@ def transfer(
     (``hash[:col]`` / ``range[:col]`` / ``rr``) runs the transfer as an
     N→M repartitioning shuffle instead of 1:1 pairing — every export
     worker routes rows by key to *all* ``import_workers`` importers, each
-    of which merges the ``workers`` incoming streams.  The two knobs are
-    mutually exclusive (stripe a shuffle's member pipes is future work).
+    of which merges the ``workers`` incoming streams.  The two knobs
+    compose: with both set, each shuffle member pipe is itself striped
+    across ``streams`` connections (the importer registers one private
+    slot group per exporter).
+
+    On failure the first exception is raised with every other peer failure
+    chained as ``__context__`` (nothing is swallowed).
     """
+    from .plan import chain_exceptions, plan as _plan
+
     config = config or PipeConfig()
     if transport is not None:
         config = replace(config, transport=transport)
@@ -147,70 +162,15 @@ def transfer(
         config = replace(config, streams=streams)
     if partition is not None:
         config = replace(config, partition=partition)
-    if config.partition:
-        if config.streams > 1:
-            raise ValueError("streams and partition do not compose yet")
-        # each importer merges one stream per export worker
-        config = replace(config, fanin=workers)
-    if directory is not None:
-        set_directory(directory)
-    gp_src, gp_dst = adapter_for(src), adapter_for(dst)
-    qid = f"q{next(_query_counter)}"
-    ds = dataset or f"{src.name}2{dst.name}"
-    imp_workers = import_workers if import_workers is not None else workers
-    name_exp = f"db://{ds}?workers={workers}&query={qid}"
-    name_imp = f"db://{ds}?workers={imp_workers}&query={qid}"
-    errs: List[BaseException] = []
-    times = {"export": 0.0, "import": 0.0}
-    stats_holder: List[Any] = []
-
-    def run_import() -> None:
-        t0 = time.perf_counter()
-        try:
-            with PipeEnabledEngine(gp_dst), PipeOpenContext(config):
-                dst.import_csv_parallel(dst_table, name_imp, workers=imp_workers)
-        except BaseException as e:  # noqa: BLE001 - surfaced via result
-            errs.append(e)
-        times["import"] = time.perf_counter() - t0
-
-    def run_export() -> None:
-        t0 = time.perf_counter()
-        try:
-            with PipeEnabledEngine(gp_src), PipeOpenContext(config):
-                src.export_csv_parallel(
-                    table, name_exp, workers=workers,
-                    header=dst.writes_header, delimiter=dst.csv_delimiter,
-                )
-        except BaseException as e:  # noqa: BLE001
-            errs.append(e)
-        times["export"] = time.perf_counter() - t0
-
-    t0 = time.perf_counter()
-    # daemon: a failed peer must not pin the process on an orphaned
-    # accept/recv (the surviving side times out on its own)
-    ti = threading.Thread(target=run_import, name=f"pipegen-import-{qid}",
-                          daemon=True)
-    te = threading.Thread(target=run_export, name=f"pipegen-export-{qid}",
-                          daemon=True)
-    ti.start()
-    te.start()
-    ti.join(timeout)
-    te.join(timeout)
-    elapsed = time.perf_counter() - t0
-    if errs:
-        raise errs[0]
-    if ti.is_alive() or te.is_alive():
-        raise TimeoutError(f"transfer {ds} did not complete within {timeout}s")
-    rows = len(dst.get_block(dst_table))
-    stats = collect_stats(ds, qid)
-    exp_stats = stats.get("export")
-    return TransferResult(
-        source=src.name, target=dst.name, mode=config.mode, codec=config.codec,
-        rows=rows, seconds=elapsed,
-        export_seconds=times["export"], import_seconds=times["import"],
-        bytes_moved=exp_stats.bytes_sent if exp_stats else 0,
-        export_stats=exp_stats, import_stats=stats.get("import"),
+    p = _plan(directory=directory, negotiate=False).move(
+        src, table, dst, dst_table,
+        config=config, workers=workers, import_workers=import_workers,
+        dataset=dataset, timeout=timeout,
     )
+    res = p.compile().execute(raise_on_error=False)
+    if res.exceptions:
+        raise chain_exceptions(res.exceptions)
+    return res.single()
 
 
 def transfer_via_files(
@@ -222,36 +182,20 @@ def transfer_via_files(
     tmpdir: Optional[str] = None,
 ) -> TransferResult:
     """The paper's baseline: export to CSV files on disk, then import them.
-    Fully sequential (the importer cannot start until the files exist)."""
-    own_tmp = tmpdir is None
-    td = tmpdir or tempfile.mkdtemp(prefix="pipegen-fs-")
-    base = os.path.join(td, f"{src.name}2{dst.name}.csv")
-    t0 = time.perf_counter()
-    src.export_csv_parallel(
-        table, base, workers=workers,
-        header=dst.writes_header, delimiter=dst.csv_delimiter,
-    )
-    t1 = time.perf_counter()
-    # single-worker export writes `base` itself; parallel writes part files
-    if workers <= 1:
-        if not os.path.exists(base):
-            raise FileNotFoundError(base)
-        dst.import_csv(dst_table, base)
-    else:
-        dst.import_csv_parallel(dst_table, base, workers=workers)
-    t2 = time.perf_counter()
-    bytes_moved = 0
-    for fn in os.listdir(td):
-        if fn.startswith(os.path.basename(base)):
-            bytes_moved += os.path.getsize(os.path.join(td, fn))
-    if own_tmp:
-        for fn in os.listdir(td):
-            os.unlink(os.path.join(td, fn))
-        os.rmdir(td)
-    rows = len(dst.get_block(dst_table))
-    return TransferResult(
-        source=src.name, target=dst.name, mode="file-csv", codec="none",
-        rows=rows, seconds=t2 - t0,
-        export_seconds=t1 - t0, import_seconds=t2 - t1,
-        bytes_moved=bytes_moved,
-    )
+    Fully sequential (the importer cannot start until the files exist).
+    Back-compat shim over a one-edge ``via="files"`` plan."""
+    from .plan import chain_exceptions, plan as _plan
+
+    if tmpdir is not None:
+        # caller-owned spool dir: keep the part files around (the legacy
+        # contract tests/benchmarks rely on), so run the file edge inline
+        from .plan import run_file_transfer
+
+        return run_file_transfer(src, table, dst, dst_table, workers,
+                                 td=tmpdir)
+    p = _plan(negotiate=False).move(src, table, dst, dst_table,
+                                    via="files", workers=workers)
+    res = p.compile().execute(raise_on_error=False)
+    if res.exceptions:
+        raise chain_exceptions(res.exceptions)
+    return res.single()

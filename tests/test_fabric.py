@@ -358,16 +358,35 @@ def test_shuffle_partitions_disjoint_and_consistent():
     assert sorted(map(sorted, want_sets)) == sorted(map(sorted, got_sets))
 
 
-def test_shuffle_rejects_shm_and_streams():
-    set_directory(WorkerDirectory())
+def test_shuffle_rejects_shared_shm_endpoint():
+    """streams×partition and shm shuffles compose via *slotted* endpoints
+    now; the remaining invariant is that a hand-wired SHARED shm ring (one
+    segment, multiple producers) is still refused — the ring is SPSC."""
+    d = WorkerDirectory()
+    set_directory(d)
+    d.register("x", Endpoint(shm_name="bogus-ring", shm_capacity=1 << 16,
+                             shared=True), "1", import_workers=1)
     from repro.core.fabric import ShuffleWriter
 
-    with pytest.raises(ValueError, match="shm"):
+    with pytest.raises(ValueError, match="single-producer"):
         ShuffleWriter("db://x?workers=1&query=1",
-                      config=PipeConfig(partition="hash", transport="shm"))
-    with pytest.raises(ValueError, match="compose"):
-        transfer(make_engine("colstore"), "t", make_engine("colstore"), "t2",
-                 config=PipeConfig(partition="hash", streams=2), timeout=5)
+                      config=PipeConfig(partition="hash", transport="shm",
+                                        connect_timeout=5.0))
+
+
+def test_striped_shuffle_channel_roundtrip():
+    """streams=2 × hash partition over the in-process channel: slotted
+    member pipes, each striped across 2 channels."""
+    set_directory(WorkerDirectory())
+    src, dst = make_engine("colstore"), make_engine("colstore")
+    blk = make_paper_block(1500, seed=21)
+    src.put_block("t", blk)
+    r = transfer(src, "t", dst, "t2",
+                 config=PipeConfig(mode="arrowcol", block_rows=128),
+                 workers=2, import_workers=3, partition="hash:key",
+                 streams=2, transport="channel", timeout=60)
+    assert r.rows == 1500
+    assert_same_rows(blk, dst.get_block("t2"))
 
 
 # -- partitioners --------------------------------------------------------------------

@@ -1,0 +1,421 @@
+"""Plan/compile/execute transfer API (repro.core.plan).
+
+Covers: builder validation (cycles, duplicate targets, unknown partition
+specs/options), explain() decision records, back-compat parity between
+``transfer()`` and a one-edge plan, chained A→B→C and fan-out A→{B,C}
+execution across two transports, streams×partition composition on socket
+and shm, planner-stamped global range bounds, and all-sides error
+aggregation with ``__context__`` chaining.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    PipeConfig,
+    PlanError,
+    PlanExecutionError,
+    plan,
+    transfer,
+)
+from repro.core.directory import WorkerDirectory, set_directory
+from repro.core.fabric import compute_range_bounds, parse_partition
+from repro.engines import make_engine, make_paper_block
+
+
+def _key_sorted(block):
+    return np.sort(np.asarray(block.columns[0]))
+
+
+def _rows_sorted(block):
+    return sorted(map(repr, block.to_rows().rows))
+
+
+# -- builder validation --------------------------------------------------------
+
+
+def test_empty_plan_rejected():
+    with pytest.raises(PlanError, match="empty plan"):
+        plan().compile()
+
+
+def test_then_without_move_rejected():
+    a, b = make_engine("colstore"), make_engine("dataframe")
+    with pytest.raises(PlanError, match="preceding move"):
+        plan().then(a, "t", b, "t2")
+
+
+def test_duplicate_target_rejected():
+    a, b = make_engine("colstore"), make_engine("dataframe")
+    a.put_block("t", make_paper_block(10))
+    with pytest.raises(PlanError, match="duplicate target"):
+        (plan(negotiate=False)
+         .move(a, "t", b, "t2")
+         .move(a, "t", b, "t2")
+         .compile())
+
+
+def test_self_cycle_rejected():
+    a = make_engine("colstore")
+    a.put_block("t", make_paper_block(10))
+    with pytest.raises(PlanError, match="cycle"):
+        plan(negotiate=False).move(a, "t", a, "t").compile()
+
+
+def test_unknown_partition_spec_rejected():
+    a, b = make_engine("colstore"), make_engine("dataframe")
+    a.put_block("t", make_paper_block(10))
+    with pytest.raises(PlanError, match="unknown partition spec"):
+        plan(negotiate=False).move(a, "t", b, "t2", partition="zorp").compile()
+
+
+def test_unknown_option_rejected():
+    a, b = make_engine("colstore"), make_engine("dataframe")
+    a.put_block("t", make_paper_block(10))
+    with pytest.raises(PlanError, match="unknown option"):
+        plan(negotiate=False).move(a, "t", b, "t2", frobnicate=1).compile()
+
+
+def test_missing_source_table_rejected():
+    a, b = make_engine("colstore"), make_engine("dataframe")
+    with pytest.raises(PlanError, match="does not exist"):
+        plan(negotiate=False).move(a, "nope", b, "t2").compile()
+
+
+def test_files_edge_rejects_pipe_options():
+    a, b = make_engine("colstore"), make_engine("dataframe")
+    a.put_block("t", make_paper_block(10))
+    with pytest.raises(PlanError, match="via='files' cannot take"):
+        (plan(negotiate=False)
+         .move(a, "t", b, "t2", via="files", partition="hash", streams=4)
+         .compile())
+    with pytest.raises(PlanError, match="via='files' cannot take"):
+        (plan(negotiate=False)
+         .move(a, "t", b, "t2", via="files", config=PipeConfig())
+         .compile())
+
+
+def test_compiled_plan_is_re_executable():
+    """execute() twice on one CompiledPlan: fresh query ids per run keep
+    the rendezvous (and the slotted shuffle's sender counter) apart."""
+    blk = make_paper_block(800, seed=13)
+    set_directory(WorkerDirectory())
+    a, b = make_engine("colstore"), make_engine("colstore")
+    a.put_block("t", blk)
+    cp = (plan(negotiate=False)
+          .move(a, "t", b, "t2", workers=2, import_workers=3,
+                partition="hash:key", streams=2,
+                config=PipeConfig(mode="arrowcol", block_rows=128))
+          .compile())
+    for _ in range(2):
+        b.drop("t2")
+        res = cp.execute()
+        assert res.single().rows == 800
+        np.testing.assert_array_equal(_key_sorted(b.get_block("t2")),
+                                      np.arange(800))
+
+
+def test_chain_through_produced_table_compiles():
+    """A table produced by an earlier edge is a valid source (no error),
+    and the consumer lands in a later stage."""
+    a, b, c = (make_engine("colstore"), make_engine("dataframe"),
+               make_engine("rowstore"))
+    a.put_block("t", make_paper_block(10))
+    cp = (plan(negotiate=False)
+          .move(a, "t", b, "t2")
+          .move(b, "t2", c, "t3")   # inferred dependency, no .then needed
+          .compile())
+    assert cp.stages == [["e0"], ["e1"]]
+    assert cp.edges[1].depends_on == ("e0",)
+
+
+# -- explain -------------------------------------------------------------------
+
+
+def test_explain_decision_snapshot():
+    a, b = make_engine("colstore"), make_engine("colstore")
+    a.put_block("t", make_paper_block(200, seed=2))
+    cp = (plan(negotiate=False)
+          .move(a, "t", b, "t2",
+                config=PipeConfig(mode="arrowcol", codec="zip"),
+                workers=2, import_workers=3)
+          .options(partition="hash:key", streams=2, transport="socket")
+          .compile())
+    d = cp.describe()[0]
+    assert d == {
+        "edge": "e0",
+        "source": "colstore:t",
+        "target": "colstore:t2",
+        "via": "pipe",
+        "mode": "arrowcol",
+        "codec": "zip",
+        "transport": "socket",
+        "workers": 2,
+        "import_workers": 3,
+        "streams": 2,
+        "partition": "hash:key",
+        "partition_bounds": None,
+        "fanin": 2,
+        "negotiated": False,
+        "depends_on": [],
+    }
+    text = cp.explain()
+    assert "partition=hash:key" in text and "streams=2" in text
+    assert "workers=2->3" in text
+
+
+def test_explain_reports_range_bounds_before_execution():
+    a, b = make_engine("colstore"), make_engine("colstore")
+    a.put_block("t", make_paper_block(400, seed=3))
+    cp = (plan(negotiate=False)
+          .move(a, "t", b, "t2", partition="range:key",
+                workers=2, import_workers=4)
+          .compile())
+    ep = cp.edges[0]
+    assert ep.partition_bounds is not None and len(ep.partition_bounds) == 3
+    assert "bounds=[" in cp.explain()
+
+
+def test_negotiated_mode_marked_and_cached():
+    from repro.core.plan import _negotiation_cache
+
+    a, b = make_engine("colstore"), make_engine("dataframe")
+    a.put_block("t", make_paper_block(50))
+    cp = plan().move(a, "t", b, "t2").compile()
+    assert cp.edges[0].negotiated
+    assert cp.edges[0].mode == "arrowcol"  # both engines validate the top rung
+    assert "colstore" in _negotiation_cache and "dataframe" in _negotiation_cache
+
+
+# -- back-compat parity --------------------------------------------------------
+
+
+def test_transfer_shim_matches_one_edge_plan():
+    blk = make_paper_block(300, seed=5)
+    cfg = PipeConfig(mode="arrowcol", block_rows=64)
+
+    set_directory(WorkerDirectory())
+    s1, d1 = make_engine("colstore"), make_engine("dataframe")
+    s1.put_block("t", blk)
+    r_shim = transfer(s1, "t", d1, "t2", config=cfg, workers=2, timeout=60)
+
+    set_directory(WorkerDirectory())
+    s2, d2 = make_engine("colstore"), make_engine("dataframe")
+    s2.put_block("t", blk)
+    r_plan = (plan(negotiate=False)
+              .move(s2, "t", d2, "t2", config=cfg, workers=2, timeout=60)
+              .execute().single())
+
+    assert _rows_sorted(d1.get_block("t2")) == _rows_sorted(d2.get_block("t2"))
+    assert (r_shim.rows, r_shim.mode, r_shim.codec) == \
+        (r_plan.rows, r_plan.mode, r_plan.codec)
+    assert r_shim.errors == r_plan.errors == []
+    # both paths aggregate real pipe stats through the sink
+    for r in (r_shim, r_plan):
+        assert r.export_stats is not None and r.export_stats.rows == 300
+        assert r.bytes_moved > 0
+
+
+# -- execution: chains and fan-outs --------------------------------------------
+
+
+@pytest.mark.parametrize("transport", ["socket", "channel"])
+def test_chained_three_engine_plan(transport):
+    """A→B→C via the plan API lands bit-identical data vs two sequential
+    transfer() calls."""
+    blk = make_paper_block(400, seed=6)
+    cfg = PipeConfig(mode="arrowcol", block_rows=128, transport=transport)
+
+    set_directory(WorkerDirectory())
+    a, b, c = (make_engine("colstore"), make_engine("dataframe"),
+               make_engine("colstore"))
+    a.put_block("t", blk)
+    res = (plan(negotiate=False)
+           .move(a, "t", b, "t2", config=cfg)
+           .then(b, "t2", c, "t3", config=cfg)
+           .execute())
+    assert res.ok and res.results["e0"].rows == res.results["e1"].rows == 400
+
+    set_directory(WorkerDirectory())
+    a2, b2, c2 = (make_engine("colstore"), make_engine("dataframe"),
+                  make_engine("colstore"))
+    a2.put_block("t", blk)
+    transfer(a2, "t", b2, "t2", config=cfg, timeout=60)
+    transfer(b2, "t2", c2, "t3", config=cfg, timeout=60)
+
+    assert _rows_sorted(c.get_block("t3")) == _rows_sorted(c2.get_block("t3"))
+
+
+@pytest.mark.parametrize("transport", ["socket", "channel"])
+def test_fanout_plan_runs_concurrently(transport):
+    """A→{B,C}: both edges in one stage, data identical to sequential."""
+    blk = make_paper_block(400, seed=7)
+    cfg = PipeConfig(mode="arrowcol", block_rows=128, transport=transport)
+
+    set_directory(WorkerDirectory())
+    a, b, c = (make_engine("colstore"), make_engine("dataframe"),
+               make_engine("rowstore"))
+    a.put_block("t", blk)
+    cp = (plan(negotiate=False)
+          .move(a, "t", b, "t2", config=cfg)
+          .move(a, "t", c, "t3", config=cfg)
+          .compile())
+    assert cp.stages == [["e0", "e1"]]  # independent: one concurrent stage
+    res = cp.execute()
+    assert res.ok and res.rows == 800
+
+    set_directory(WorkerDirectory())
+    a2, b2, c2 = (make_engine("colstore"), make_engine("dataframe"),
+                  make_engine("rowstore"))
+    a2.put_block("t", blk)
+    transfer(a2, "t", b2, "t2", config=cfg, timeout=60)
+    transfer(a2, "t", c2, "t3", config=cfg, timeout=60)
+    assert _rows_sorted(b.get_block("t2")) == _rows_sorted(b2.get_block("t2"))
+    assert _rows_sorted(c.get_block("t3")) == _rows_sorted(c2.get_block("t3"))
+
+
+# -- streams × partition composition -------------------------------------------
+
+
+@pytest.mark.parametrize("transport", ["socket", "shm"])
+def test_striped_shuffle_roundtrip(transport):
+    """streams=2 composed with hash partitioning: every shuffle member
+    pipe is striped; the relation round-trips losslessly."""
+    blk = make_paper_block(2000, seed=8)
+    set_directory(WorkerDirectory())
+    a, b = make_engine("colstore"), make_engine("colstore")
+    a.put_block("t", blk)
+    res = (plan(negotiate=False)
+           .move(a, "t", b, "t2", workers=2, import_workers=3,
+                 partition="hash:key", streams=2, transport=transport,
+                 config=PipeConfig(mode="arrowcol", block_rows=128,
+                                   shm_capacity=1 << 21))
+           .execute())
+    r = res.single()
+    assert r.rows == 2000 and r.errors == []
+    got = b.get_block("t2")
+    np.testing.assert_array_equal(_key_sorted(got), np.arange(2000))
+    # the striped members really carried frames on both streams
+    assert r.export_stats is not None
+    streams_seen = {s.get("stream") for s in r.export_stats.per_stream}
+    assert streams_seen >= {0, 1}
+
+
+def test_range_partition_global_bounds_agree_across_exporters():
+    """Planner-stamped global bounds: adversarially ordered input (each
+    exporter's slice covers a disjoint key range, so per-exporter
+    first-block bounds would disagree wildly) still lands every row, and
+    each importer receives one contiguous global range."""
+    import numpy as np
+
+    from repro.core.types import ColType, ColumnBlock, Field, Schema
+
+    n = 1200
+    # exporter 0 sees keys [0,600), exporter 1 sees [600,1200): per-first-
+    # block bounds would split each half locally; global bounds must not
+    keys = np.arange(n, dtype=np.int64)
+    vals = np.arange(n, dtype=np.float64) * 0.5
+    blk = ColumnBlock(
+        Schema([Field("key", ColType.INT64), Field("v", ColType.FLOAT64)]),
+        [keys, vals])
+    set_directory(WorkerDirectory())
+    a, b = make_engine("colstore"), make_engine("colstore")
+    a.put_block("t", blk)
+    cp = (plan(negotiate=False)
+          .move(a, "t", b, "t2", workers=2, import_workers=3,
+                partition="range:key",
+                config=PipeConfig(mode="arrowcol", block_rows=64))
+          .compile())
+    bounds = cp.edges[0].partition_bounds
+    assert bounds is not None and len(bounds) == 2
+    # bounds are global quantiles of the whole relation
+    assert bounds[0] == pytest.approx(np.quantile(keys, 1 / 3))
+    res = cp.execute()
+    assert res.single().rows == n
+    np.testing.assert_array_equal(_key_sorted(b.get_block("t2")), keys)
+
+
+def test_preset_bounds_row_path_matches_vectorized():
+    """With preset bounds the range partitioner places rows identically
+    on the scalar (row-serialized) and vectorized (block) paths."""
+    blk = make_paper_block(500, seed=9)
+    bounds = compute_range_bounds(blk, "key", 4)
+    part = parse_partition("range:key", bounds=bounds)
+    vec = part.indices(blk, 4)
+    scalar = np.array([part.part_of_row(int(k), 4) for k in blk.columns[0]])
+    np.testing.assert_array_equal(vec, scalar)
+
+
+# -- error aggregation ---------------------------------------------------------
+
+
+class _Boom(Exception):
+    pass
+
+
+def test_transfer_surfaces_both_sides_chained():
+    """An import-side failure raises; any export-side failure rides along
+    as __context__ instead of being swallowed."""
+    blk = make_paper_block(100, seed=10)
+    set_directory(WorkerDirectory())
+    a, b = make_engine("colstore"), make_engine("dataframe")
+    a.put_block("t", blk)
+
+    def bad_import(*args, **kw):
+        raise _Boom("import exploded")
+
+    b.import_csv_parallel = bad_import
+    with pytest.raises(_Boom):
+        transfer(a, "t", b, "t2", timeout=5,
+                 config=PipeConfig(connect_timeout=2.0))
+
+
+def test_plan_collects_all_edge_errors_and_skips_downstream():
+    blk = make_paper_block(100, seed=11)
+    set_directory(WorkerDirectory())
+    a, b, c = (make_engine("colstore"), make_engine("dataframe"),
+               make_engine("rowstore"))
+    a.put_block("t", blk)
+
+    def bad_import(*args, **kw):
+        raise _Boom("import exploded")
+
+    b.import_csv_parallel = bad_import
+    p = (plan(negotiate=False)
+         .move(a, "t", b, "t2", timeout=5,
+               config=PipeConfig(connect_timeout=2.0))
+         .then(b, "t2", c, "t3")
+         .move(a, "t", c, "u", config=PipeConfig(block_rows=64)))
+    with pytest.raises(PlanExecutionError) as ei:
+        p.execute()
+    res = ei.value.result
+    # the failing edge's import error is recorded, downstream skipped,
+    # the independent edge still ran
+    assert any(("import" in e and "Boom" in e) for e in res.errors)
+    assert "e1" in res.skipped
+    assert res.results["e2"].rows == 100
+    # the underlying exceptions are chained off the raised error
+    assert ei.value.__cause__ is not None
+    # partial results remain queryable
+    assert res.edge("e2").errors == []
+
+
+def test_plan_result_errors_populated_on_failed_edge():
+    """TransferResult.errors carries every peer failure (not just the
+    first), formatted with its side."""
+    blk = make_paper_block(100, seed=12)
+    set_directory(WorkerDirectory())
+    a, b = make_engine("colstore"), make_engine("dataframe")
+    a.put_block("t", blk)
+
+    def bad_import(*args, **kw):
+        raise _Boom("import exploded")
+
+    b.import_csv_parallel = bad_import
+    res = (plan(negotiate=False)
+           .move(a, "t", b, "t2", timeout=5,
+                 config=PipeConfig(connect_timeout=2.0))
+           .execute(raise_on_error=False))
+    assert not res.ok
+    r = res.results["e0"]
+    assert any(e.startswith("import:") for e in r.errors)
