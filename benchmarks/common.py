@@ -67,6 +67,12 @@ def file_transfer(src_name: str, dst_name: str, n_rows: int,
     return timed(run)
 
 
+#: every :func:`emit` also lands here, so ``run.py --json`` can dump the
+#: whole sweep as one structured artifact (name -> seconds/derived)
+RESULTS: Dict[str, dict] = {}
+
+
 def emit(name: str, seconds: float, derived: str = "") -> None:
+    RESULTS[name] = {"seconds": seconds, "derived": derived}
     print(f"{name},{seconds * 1e6:.0f},{derived}")
     sys.stdout.flush()

@@ -3,20 +3,25 @@
 Prints ``name,us_per_call,derived`` CSV.  Usage:
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig09,...] \
-        [--transport socket,shm] [--streams 1,2,4] [--plan]
+        [--transport socket,shm] [--streams 1,2,4] [--plan] [--json PATH]
 
 ``--transport``/``--streams`` widen the fig11 stream-fabric sweep (which
 transports to stripe over and which stream counts to compare; defaults:
 socket, 1 vs 4).  ``--plan`` adds the plan-API sweep (single edge vs
 chained A→B→C vs fan-out A→{B,C}; ``benchmarks/plan_sweep.py``).
+``--json PATH`` additionally writes every emitted rung (plus per-module
+elapsed times and errors) as one structured JSON document — the artifact
+CI uploads so the perf trajectory is machine-readable, not stdout-only.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
+from . import common
 from . import (
     fig09_pairwise,
     fig10_datatypes,
@@ -61,6 +66,9 @@ def main(argv=None) -> int:
     ap.add_argument("--plan", action="store_true",
                     help="include the plan-API sweep (chain vs fan-out "
                          "vs single edge)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write all emitted rungs as one structured "
+                         "JSON file (name -> seconds/derived)")
     args = ap.parse_args(argv)
 
     if not args.only:
@@ -100,8 +108,17 @@ def main(argv=None) -> int:
         except Exception as e:  # noqa: BLE001
             failures += 1
             print(f"{name}.ERROR,0,{type(e).__name__}: {e}")
-        print(f"{name}.elapsed,{(time.time() - t0) * 1e6:.0f},")
+            common.RESULTS[f"{name}.ERROR"] = {
+                "seconds": 0.0, "derived": f"{type(e).__name__}: {e}"}
+        elapsed = time.time() - t0
+        print(f"{name}.elapsed,{elapsed * 1e6:.0f},")
+        common.RESULTS[f"{name}.elapsed"] = {"seconds": elapsed,
+                                             "derived": ""}
         sys.stdout.flush()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(common.RESULTS, f, indent=2, sort_keys=True)
+            f.write("\n")
     return 1 if failures else 0
 
 

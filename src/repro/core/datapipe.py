@@ -42,6 +42,7 @@ from .directory import DirectoryLike, Endpoint, get_directory
 from .iobuf import BufferPool, DecodeArena, SegmentList, default_pool
 from .shm_ring import (
     DEFAULT_RING_CAPACITY,
+    ShmRing,
     ShmRingTransport,
     acquire_ring,
     attach_ring,
@@ -150,7 +151,14 @@ class PipeConfig:
     shared-memory ring, zero intermediate copies); ``decode_arena`` supplies
     a dedicated :class:`~repro.core.iobuf.DecodeArena` so decode pool stats
     attribute to one pipe (default: a per-pipe arena over the process-wide
-    decode pool).
+    decode pool).  ``shm_doorbell`` (importer-local, on by default) gives
+    the ring a fifo/eventfd doorbell so a blocked side wakes in
+    microseconds; off (or on doorbell-less platforms) it falls back to the
+    exponential-backoff poll.  ``broadcast`` (importer-local, shm only)
+    joins this pipe as one of N readers of a *broadcast ring*: the
+    exporter encodes and publishes every frame once and all N colocated
+    importers consume it from the same segment (the planner sets this on
+    fan-out edges it compiles onto one export).
 
     Stream-fabric knobs (``repro.core.stream`` / ``repro.core.fabric``):
     ``streams`` (importer-local) stripes each pipe across N member
@@ -184,6 +192,8 @@ class PipeConfig:
     pool: Optional[BufferPool] = None
     transport: str = "socket"  # socket | channel | shm (importer-side)
     shm_capacity: int = DEFAULT_RING_CAPACITY  # ring data-region bytes
+    shm_doorbell: bool = True  # fifo/eventfd wakeups (False = backoff poll)
+    broadcast: int = 0  # shm fan-out: join as one of N broadcast readers
     decode_arena: Optional[DecodeArena] = None  # importer-side decode pool
     streams: int = 1  # stripe each pipe across N member connections
     stream_window: int = DEFAULT_STREAM_WINDOW  # reorder window (frames)
@@ -214,6 +224,11 @@ class PipeStats:
     decode_pool_hits: int = 0    # importer: arena stores served from retention
     decode_pool_misses: int = 0
     shm_spans: int = 0           # frames carried as in-place shm ring spans
+    # shm ring wait attribution: how blocked sides woke up.  A doorbell
+    # regression (back to polling) shows up as poll_sleeps > 0 here.
+    doorbell_waits: int = 0      # waits resolved by a doorbell wakeup
+    spin_wakeups: int = 0        # waits resolved during the brief spin
+    poll_sleeps: int = 0         # backoff-poll sleeps (fallback path only)
     # striped pipes: one dict per member stream ({stream, bytes, frames, ...});
     # merged views concatenate, so a shuffle's M members each contribute theirs
     per_stream: List[dict] = field(default_factory=list)
@@ -221,7 +236,7 @@ class PipeStats:
     _SUMMED = ("bytes_sent", "frames_sent", "rows", "blocks",
                "copies_avoided", "pool_hits", "pool_misses",
                "send_overlap_s", "decode_pool_hits", "decode_pool_misses",
-               "shm_spans")
+               "shm_spans", "doorbell_waits", "spin_wakeups", "poll_sleeps")
 
     def merge(self, other: "PipeStats") -> "PipeStats":
         """Fold ``other`` into this view (counters sum, per-stream
@@ -491,6 +506,12 @@ class DataPipeOutput:
             self.stats.pool_hits = self._pool.hits
             self.stats.pool_misses = self._pool.misses
             self.stats.shm_spans = getattr(self._transport, "shm_spans", 0)
+            self.stats.doorbell_waits = getattr(
+                self._transport, "doorbell_waits", 0)
+            self.stats.spin_wakeups = getattr(
+                self._transport, "spin_wakeups", 0)
+            self.stats.poll_sleeps = getattr(
+                self._transport, "poll_sleeps", 0)
             per_stream = getattr(self._transport, "per_stream", None)
             if per_stream is not None:
                 self.stats.per_stream = per_stream()
@@ -728,6 +749,8 @@ class DataPipeInput:
         import_workers: Optional[int] = None,
         transport: Optional[str] = None,
         shm_capacity: int = DEFAULT_RING_CAPACITY,
+        shm_doorbell: bool = True,
+        broadcast: int = 0,
         arena: Optional[DecodeArena] = None,
         streams: int = 1,
         fanin: int = 1,
@@ -744,15 +767,19 @@ class DataPipeInput:
             raise ValueError(
                 f"unknown transport {transport!r}; have socket/channel/shm")
         workers = import_workers or rn.workers
+        if broadcast > 1 and (transport != "shm" or fanin > 1 or streams > 1):
+            raise ValueError(
+                "broadcast pipes require transport='shm' with streams=1 "
+                "and fanin=1 (one ring, one writer, N reader cursors)")
         if fanin > 1:
             self._transport: Transport = self._rendezvous_fanin(
                 rn, directory, transport, fanin, host, link, workers,
                 streams=streams, window=stream_window,
-                shm_capacity=shm_capacity)
+                shm_capacity=shm_capacity, shm_doorbell=shm_doorbell)
         elif streams > 1:
             self._transport = self._rendezvous_striped(
                 rn, directory, transport, streams, stream_window,
-                host, link, shm_capacity, workers)
+                host, link, shm_capacity, workers, shm_doorbell)
         elif transport == "channel":
             ch = channel if channel is not None else Channel()
             directory.register(
@@ -760,8 +787,12 @@ class DataPipeInput:
                 import_workers=workers,
             )
             self._transport = ChannelTransport(ch, link)
+        elif transport == "shm" and broadcast > 1:
+            self._transport = self._rendezvous_broadcast(
+                rn, directory, broadcast, shm_capacity, shm_doorbell,
+                link, workers)
         elif transport == "shm":
-            ring = acquire_ring(shm_capacity)
+            ring = acquire_ring(shm_capacity, doorbell=shm_doorbell)
             directory.register(
                 rn.dataset,
                 Endpoint(shm_name=ring.name, shm_capacity=ring.capacity),
@@ -800,8 +831,35 @@ class DataPipeInput:
 
     # -- fabric rendezvous -------------------------------------------------------
     @staticmethod
+    def _rendezvous_broadcast(rn, directory, readers, shm_capacity,
+                              shm_doorbell, link, workers) -> Transport:
+        """Join the transfer's broadcast ring as one of ``readers``
+        cursors.  The directory hands out slot indexes: slot 0 creates
+        the ring (it owns the segment, like every shm importer) and
+        publishes its endpoint — which also registers it for the single
+        exporter's ``query`` — and slots 1..R-1 attach to it."""
+        slot, ep = directory.join_broadcast(
+            rn.dataset, rn.query_id, readers=readers)
+        if ep is None:  # first joiner: create (or re-lease warm) + publish
+            from .shm_ring import acquire_broadcast_ring
+
+            ring = acquire_broadcast_ring(shm_capacity, readers,
+                                          doorbell=shm_doorbell)
+            directory.publish_broadcast(
+                rn.dataset,
+                Endpoint(shm_name=ring.name, shm_capacity=ring.capacity,
+                         broadcast=readers, shared=True),
+                rn.query_id,
+                import_workers=workers,
+            )
+        else:
+            ring = ShmRing.attach(ep.shm_name, role="reader", slot=slot)
+        return ShmRingTransport(ring, link)
+
+    @staticmethod
     def _rendezvous_striped(rn, directory, transport, streams, window,
-                            host, link, shm_capacity, workers) -> Transport:
+                            host, link, shm_capacity, workers,
+                            shm_doorbell: bool = True) -> Transport:
         """Register one multi-endpoint group and reassemble N member
         connections into one ordered stream (repro.core.stream)."""
         if transport == "channel":
@@ -811,7 +869,8 @@ class DataPipeInput:
                                rn.query_id, import_workers=workers)
             parts: List[Transport] = [ChannelTransport(c, link) for c in chans]
         elif transport == "shm":
-            rings = [acquire_ring(shm_capacity) for _ in range(streams)]
+            rings = [acquire_ring(shm_capacity, doorbell=shm_doorbell)
+                     for _ in range(streams)]
             members = tuple(
                 Endpoint(shm_name=r.name, shm_capacity=r.capacity)
                 for r in rings)
@@ -840,6 +899,7 @@ class DataPipeInput:
                           workers, streams: int = 1,
                           window: int = DEFAULT_STREAM_WINDOW,
                           shm_capacity: int = DEFAULT_RING_CAPACITY,
+                          shm_doorbell: bool = True,
                           ) -> Transport:
         """Register the shuffle's import-side rendezvous and merge
         ``fanin`` exporter streams.
@@ -900,7 +960,8 @@ class DataPipeInput:
                 slot_parts.append([ChannelTransport(c, link) for c in chans])
                 slot_socks.append([])
             elif transport == "shm":
-                rings = [acquire_ring(shm_capacity) for _ in range(streams)]
+                rings = [acquire_ring(shm_capacity, doorbell=shm_doorbell)
+                         for _ in range(streams)]
                 mems = tuple(
                     Endpoint(shm_name=r.name, shm_capacity=r.capacity)
                     for r in rings)
@@ -1247,6 +1308,10 @@ class DataPipeInput:
         self.stats.decode_pool_hits = self._arena.hits
         self.stats.decode_pool_misses = self._arena.misses
         self.stats.shm_spans = getattr(self._transport, "shm_spans", 0)
+        self.stats.doorbell_waits = getattr(
+            self._transport, "doorbell_waits", 0)
+        self.stats.spin_wakeups = getattr(self._transport, "spin_wakeups", 0)
+        self.stats.poll_sleeps = getattr(self._transport, "poll_sleeps", 0)
         per_stream = getattr(self._transport, "per_stream", None)
         if per_stream is not None:
             self.stats.per_stream = per_stream()
@@ -1329,6 +1394,11 @@ def _connect(ep: Endpoint, link: Optional[LinkSim]) -> Transport:
         # not by any single finishing exporter
         return ChannelTransport(ep.channel, link, owns_channel=not ep.shared)
     if ep.is_shm:
+        if ep.broadcast > 1:
+            # broadcast ring: the single writer of an R-reader fan-out
+            # (never cached — the slot table is single-use)
+            return ShmRingTransport(
+                ShmRing.attach(ep.shm_name, role="writer"), link)
         return ShmRingTransport(attach_ring(ep.shm_name), link)
     s = socket.create_connection((ep.host, ep.port), timeout=30.0)
     return SocketTransport(s, link)

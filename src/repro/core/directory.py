@@ -79,7 +79,10 @@ class Endpoint:
     must connect to every member, in order (``repro.core.stream``).
     ``shared`` marks a rendezvous that multiple exporters connect to
     concurrently (the shuffle's fan-in over one in-process channel), so a
-    finishing exporter must not tear it down under its peers.  ``pid`` is
+    finishing exporter must not tear it down under its peers.
+    ``broadcast`` marks a shm *broadcast ring*: one writer, ``broadcast``
+    reader cursor slots — the exporter sends every frame once and R
+    colocated importers consume it from the same segment.  ``pid`` is
     the registrant, stamped by the directory for dead-worker GC.
     """
 
@@ -90,6 +93,7 @@ class Endpoint:
     shm_capacity: int = 0
     members: Tuple["Endpoint", ...] = ()  # striped group (one per stream)
     shared: bool = False               # multiple exporters attach (shuffle)
+    broadcast: int = 0                 # shm fan-out: reader slot count
     pid: int = 0                       # registrant, for dead-worker GC
 
     @property
@@ -114,6 +118,12 @@ class _QueryState:
     import_workers: Optional[int] = None
     stubbed: bool = False
     senders: int = 0  # slot indexes handed out (striped/shm shuffles)
+    # broadcast fan-out rendezvous: R importers share one shm ring.  The
+    # first joiner creates the ring (slot 0) and publishes its endpoint;
+    # later joiners block on the publication and attach slots 1..R-1.
+    bc_total: int = 0       # declared reader count
+    bc_joined: int = 0      # slots handed out so far
+    bc_ep: Optional[Endpoint] = None  # published ring endpoint
 
 
 class WorkerDirectory:
@@ -217,6 +227,78 @@ class WorkerDirectory:
                         f"registered within timeout"
                     )
                 self._lock.wait(remaining)
+
+    # -- broadcast fan-out (one shm ring, R reader slots) ------------------------
+    def join_broadcast(
+        self,
+        dataset: str,
+        query_id: str = "0",
+        readers: int = 0,
+        timeout: float = 30.0,
+    ) -> Tuple[int, Optional[Endpoint]]:
+        """Claim a reader slot of the broadcast ring for this transfer.
+
+        The first joiner gets ``(0, None)``: it must create the ring and
+        :meth:`publish_broadcast` its endpoint.  Later joiners block until
+        publication and get ``(slot, endpoint)``.  Every joiner must
+        declare the same ``readers`` count (the ring's slot table size).
+        A joiner that times out waiting for the publication returns its
+        slot, so a retried transfer is not starved of slots; a *creator*
+        that dies between join and publish is not recoverable under the
+        same (dataset, query) — use fresh query ids per attempt (the plan
+        executor always does).
+        """
+        deadline = time.monotonic() + timeout
+        with self._lock:
+            st = self._state(dataset, query_id)
+            if st.bc_total == 0:
+                st.bc_total = readers
+            elif readers and st.bc_total != readers:
+                raise IOError(
+                    f"broadcast on {dataset!r} (query {query_id!r}): "
+                    f"readers disagree on the slot count "
+                    f"({st.bc_total} vs {readers})")
+            slot = st.bc_joined
+            if slot >= st.bc_total:
+                raise IOError(
+                    f"broadcast on {dataset!r} (query {query_id!r}): "
+                    f"all {st.bc_total} reader slots already claimed")
+            st.bc_joined += 1
+            if slot == 0:
+                return 0, None
+            while st.bc_ep is None:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    # give the slot back for a retry — but only if it is
+                    # the most recently issued one (returning an inner
+                    # index could hand it out again while a later-slotted
+                    # joiner is still waiting on the same publication)
+                    if slot == st.bc_joined - 1:
+                        st.bc_joined -= 1
+                    raise TimeoutError(
+                        f"broadcast ring for {dataset!r} (query "
+                        f"{query_id!r}) was not published within timeout")
+                self._lock.wait(remaining)
+            return slot, st.bc_ep
+
+    def publish_broadcast(
+        self,
+        dataset: str,
+        endpoint: Endpoint,
+        query_id: str = "0",
+        import_workers: Optional[int] = None,
+    ) -> None:
+        """Publish the broadcast ring's endpoint: wakes the waiting
+        joiners *and* registers it as a normal entry so the (single)
+        exporter's :meth:`query` finds it."""
+        if endpoint.pid == 0:
+            endpoint = _dc_replace(endpoint, pid=os.getpid())
+        with self._lock:
+            st = self._state(dataset, query_id)
+            st.bc_ep = endpoint
+            self._lock.notify_all()
+        self.register(dataset, endpoint, query_id,
+                      import_workers=import_workers)
 
     def next_sender(self, dataset: str, query_id: str = "0") -> int:
         """Claim the next exporter *slot index* for a slotted shuffle.
@@ -333,6 +415,7 @@ def _ep_to_doc(ep: Endpoint) -> dict:
         "shm_name": ep.shm_name,
         "shm_capacity": ep.shm_capacity,
         "shared": ep.shared,
+        "broadcast": ep.broadcast,
         "pid": ep.pid,
         "members": [_ep_to_doc(m) for m in ep.members],
     }
@@ -345,6 +428,7 @@ def _ep_from_doc(doc: dict) -> Endpoint:
         shm_name=doc.get("shm_name", ""),
         shm_capacity=int(doc.get("shm_capacity", 0)),
         shared=bool(doc.get("shared", False)),
+        broadcast=int(doc.get("broadcast", 0)),
         pid=int(doc.get("pid", 0)),
         members=tuple(_ep_from_doc(m) for m in doc.get("members", [])),
     )
@@ -421,6 +505,26 @@ class DirectoryServer:
                             "endpoints": [_ep_to_doc(e) for e in eps]}
                 except TimeoutError as e:
                     resp = {"ok": False, "error": str(e)}
+            elif req["op"] == "join_broadcast":
+                try:
+                    slot, ep = self.directory.join_broadcast(
+                        req["dataset"],
+                        req.get("query_id", "0"),
+                        int(req.get("readers", 0)),
+                        timeout=float(req.get("timeout", 30.0)),
+                    )
+                    resp = {"ok": True, "slot": slot,
+                            "endpoint": _ep_to_doc(ep) if ep else None}
+                except (TimeoutError, IOError) as e:
+                    resp = {"ok": False, "error": str(e)}
+            elif req["op"] == "publish_broadcast":
+                self.directory.publish_broadcast(
+                    req["dataset"],
+                    _ep_from_doc(req["endpoint"]),
+                    req.get("query_id", "0"),
+                    req.get("import_workers"),
+                )
+                resp = {"ok": True}
             elif req["op"] == "next_sender":
                 resp = {"ok": True,
                         "sender": self.directory.next_sender(
@@ -509,6 +613,46 @@ class DirectoryClient:
         if not resp.get("ok"):
             raise TimeoutError(resp.get("error", "directory query failed"))
         return [_ep_from_doc(d) for d in resp.get("endpoints", [])]
+
+    def join_broadcast(
+        self,
+        dataset: str,
+        query_id: str = "0",
+        readers: int = 0,
+        timeout: float = 30.0,
+    ) -> Tuple[int, Optional[Endpoint]]:
+        resp = self._rpc(
+            {
+                "op": "join_broadcast",
+                "dataset": dataset,
+                "query_id": query_id,
+                "readers": readers,
+                "timeout": timeout,
+            }
+        )
+        if not resp.get("ok"):
+            raise TimeoutError(resp.get("error", "broadcast join failed"))
+        doc = resp.get("endpoint")
+        return int(resp["slot"]), _ep_from_doc(doc) if doc else None
+
+    def publish_broadcast(
+        self,
+        dataset: str,
+        endpoint: Endpoint,
+        query_id: str = "0",
+        import_workers: Optional[int] = None,
+    ) -> None:
+        if endpoint.pid == 0:
+            endpoint = _dc_replace(endpoint, pid=os.getpid())
+        self._rpc(
+            {
+                "op": "publish_broadcast",
+                "dataset": dataset,
+                "query_id": query_id,
+                "import_workers": import_workers,
+                "endpoint": _ep_to_doc(endpoint),
+            }
+        )
 
     def next_sender(self, dataset: str, query_id: str = "0") -> int:
         resp = self._rpc(

@@ -45,6 +45,10 @@ Semantics and limits:
   via :meth:`WorkerDirectory.next_sender`) lift that limit — each
   (exporter, importer) pair gets its own connection set, which is also
   how ``streams`` stripes each shuffle member pipe across N connections.
+  The shared-shm refusal applies to fan-*in* only: fan-*out* over one
+  shared segment is the broadcast ring (one writer, R reader cursors;
+  ``repro.core.shm_ring``), which the planner compiles fan-out edges
+  onto — but it is not a shuffle member (it has no partitioning).
 """
 
 from __future__ import annotations
@@ -362,11 +366,23 @@ class ShuffleWriter:
                         f"slots but this is exporter #{sender + 1}")
                 resolved.append(ep.members[sender])
             endpoints = resolved
-        elif any(ep.is_shm and ep.shared for ep in endpoints):
+        elif any(ep.is_shm and ep.shared and not ep.broadcast
+                 for ep in endpoints):
             raise ValueError(
                 "a shared shm ring cannot take multiple exporters "
                 "(single-producer); the importer must register slotted "
                 "endpoints (it does when fanin > 1 and transport='shm')")
+        elif any(ep.broadcast for ep in endpoints):
+            # fan-OUT over shared shm is legal (one writer, R reader
+            # cursors — the planner's broadcast path), but it is not a
+            # shuffle: a partitioned transfer sends each importer a
+            # different row subset, a broadcast ring delivers every frame
+            # to every reader
+            raise ValueError(
+                "shuffle members cannot be broadcast rings; fan-out over "
+                "shared shm compiles through the planner's broadcast "
+                "groups (one export per fan-out), not the partitioned "
+                "shuffle")
         # members are plain 1:1 pipes: no nested partitioning, no verify
         # (row order across sources is undefined), striping composes at the
         # member level whenever the importer's slot is a group endpoint

@@ -219,6 +219,8 @@ def pipegen_open(
         pipe = DataPipeInput(str(filename), link=cfg.link,
                              transport=cfg.transport,
                              shm_capacity=cfg.shm_capacity,
+                             shm_doorbell=cfg.shm_doorbell,
+                             broadcast=cfg.broadcast,
                              arena=cfg.decode_arena,
                              streams=cfg.streams,
                              fanin=cfg.fanin,

@@ -131,9 +131,13 @@ def chain_exceptions(excs: Sequence[BaseException]) -> BaseException:
 
 # -- the declarative surface ---------------------------------------------------
 
-#: edge options that configure the *edge*, not the pipe
+#: edge options that configure the *edge*, not the pipe.  ``broadcast``
+#: (default True) gates the planner's fan-out detection: shm edges reading
+#: the same source compile onto ONE export over a broadcast ring unless an
+#: edge opts out with ``broadcast=False``.
 _EDGE_KEYS = frozenset(
-    ("workers", "import_workers", "timeout", "via", "dataset", "config"))
+    ("workers", "import_workers", "timeout", "via", "dataset", "config",
+     "broadcast"))
 _PIPE_KEYS = frozenset(f.name for f in dc_fields(PipeConfig))
 _VIA = ("pipe", "files")
 
@@ -173,6 +177,14 @@ class EdgePlan:
     timeout: float
     negotiated: bool                 # mode came from the FormOpt ladder
     depends_on: Tuple[str, ...]
+    # fan-out compiled onto one export (shm broadcast ring): all edges of
+    # a group share one dataset/query, the leader's edge runs the single
+    # export, and every edge's importer reads a cursor slot of one ring
+    broadcast: int = 0               # group size (0 = ordinary edge)
+    broadcast_group: Optional[str] = None
+    broadcast_leader: bool = False
+    broadcast_allowed: bool = field(repr=False, default=True)
+    dataset_explicit: bool = field(repr=False, default=False)
     config: PipeConfig = field(repr=False, default=None)
     src_engine: Any = field(repr=False, default=None)
     dst_engine: Any = field(repr=False, default=None)
@@ -199,6 +211,10 @@ class EdgePlan:
             "fanin": self.fanin,
             "negotiated": self.negotiated,
             "depends_on": list(self.depends_on),
+            "broadcast": (
+                {"group": self.broadcast_group, "readers": self.broadcast,
+                 "leader": self.broadcast_leader}
+                if self.broadcast_group else None),
         }
 
     def explain_line(self) -> str:
@@ -221,6 +237,11 @@ class EdgePlan:
                     bits.append(f"bounds=[{bounds}]")
                 elif self.bounds_deferred:
                     bits.append("bounds=deferred")
+            if self.broadcast_group:
+                bits.append(
+                    f"broadcast={self.broadcast_group}"
+                    f"[{'1-export' if self.broadcast_leader else 'shared'}"
+                    f",{self.broadcast} readers]")
         else:
             bits.append(f"workers={self.workers}")
         if self.depends_on:
@@ -337,8 +358,46 @@ class TransferPlan:
                 table_preexists=(
                     not produced_upstream
                     and e.table in getattr(e.src, "tables", ()))))
+        self._group_broadcasts(plans)
         return CompiledPlan(plans, [[f"e{i}" for i in lvl] for lvl in stages],
                             directory or self._directory)
+
+    @staticmethod
+    def _group_broadcasts(plans: List[EdgePlan]) -> None:
+        """Detect fan-outs that can share one export: N shm pipe edges
+        reading the same source relation to colocated importers, with
+        identical wire decisions (mode/codec/block framing), dialect, and
+        dependencies.  Each group compiles onto ONE export feeding one
+        broadcast ring with N reader cursor slots instead of N exports
+        re-encoding the same relation."""
+        groups: Dict[Tuple, List[EdgePlan]] = {}
+        for ep in plans:
+            cfg = ep.config
+            if (not ep.broadcast_allowed or ep.via != "pipe"
+                    or ep.transport != "shm" or ep.workers != 1
+                    or ep.import_workers != 1 or ep.streams != 1
+                    or ep.partition or cfg.broadcast
+                    # an explicit dataset= names the edge's rendezvous;
+                    # grouping would silently rename it to the leader's
+                    or ep.dataset_explicit):
+                continue
+            dst = ep.dst_engine
+            key = (id(ep.src_engine), ep.table, ep.mode, ep.codec,
+                   cfg.block_rows, cfg.text_format, cfg.delimiter,
+                   cfg.verify_first_n, cfg.shm_capacity, cfg.shm_doorbell,
+                   id(cfg.link), ep.depends_on,
+                   bool(getattr(dst, "writes_header", False)),
+                   getattr(dst, "csv_delimiter", ","))
+            groups.setdefault(key, []).append(ep)
+        gid = 0
+        for members in groups.values():
+            if len(members) < 2:
+                continue
+            for k, ep in enumerate(members):
+                ep.broadcast = len(members)
+                ep.broadcast_group = f"b{gid}"
+                ep.broadcast_leader = k == 0
+            gid += 1
 
     def _resolve_edge(self, i: int, e: _Edge, deps: set,
                       table_preexists: bool) -> EdgePlan:
@@ -351,10 +410,20 @@ class TransferPlan:
         via = opts.pop("via", "pipe")
         if via not in _VIA:
             raise PlanError(f"edge e{i}: via={via!r} not in {_VIA}")
+        broadcast_allowed = opts.pop("broadcast", True)
+        if not isinstance(broadcast_allowed, bool):
+            # the reader count is the planner's to derive (group size);
+            # a silent bool() coercion would discard a user's int
+            raise PlanError(
+                f"edge e{i}: broadcast takes True/False (opt in/out of "
+                f"fan-out grouping — the planner derives the reader "
+                f"count from the group), got {broadcast_allowed!r}")
         workers = int(opts.pop("workers", 1))
         import_workers = opts.pop("import_workers", None)
         timeout = float(opts.pop("timeout", 120.0))
-        dataset = opts.pop("dataset", None) or f"{e.src.name}2{e.dst.name}"
+        dataset = opts.pop("dataset", None)
+        dataset_explicit = dataset is not None
+        dataset = dataset or f"{e.src.name}2{e.dst.name}"
         base = opts.pop("config", None)
         pipe_overrides = {k: v for k, v in opts.items() if k in _PIPE_KEYS}
         if via == "files" and (pipe_overrides or base is not None
@@ -416,6 +485,8 @@ class TransferPlan:
             dataset=dataset, timeout=timeout,
             negotiated=negotiated,
             depends_on=tuple(f"e{j}" for j in sorted(deps)),
+            broadcast_allowed=broadcast_allowed,
+            dataset_explicit=dataset_explicit,
             config=cfg, src_engine=e.src, dst_engine=e.dst,
         )
 
@@ -547,25 +618,45 @@ class CompiledPlan:
             if not runnable:
                 continue
             outs: Dict[str, Tuple[Any, List[BaseException]]] = {}
+            # work units: ordinary edges run alone; a broadcast group's
+            # edges run as ONE unit (one export + R importers over one
+            # ring), sharing a single dataset/query rendezvous
+            units: List[List[EdgePlan]] = []
+            by_group: Dict[str, List[EdgePlan]] = {}
+            for ep in runnable:
+                if ep.broadcast_group:
+                    grp = by_group.setdefault(ep.broadcast_group, [])
+                    grp.append(ep)
+                    if len(grp) == 1:
+                        units.append(grp)
+                else:
+                    units.append([ep])
             # fresh query ids per run: a re-executed compiled plan must
             # not collide with its previous rendezvous (the directory's
             # per-(dataset, query) state — sender slots, stats — persists)
             from .session import _query_counter
 
-            qids = {ep.edge_id: f"q{next(_query_counter)}"
-                    for ep in runnable}
+            qids = {id(unit): f"q{next(_query_counter)}" for unit in units}
 
-            def run(ep: EdgePlan) -> None:
-                outs[ep.edge_id] = _run_edge(ep, qids[ep.edge_id])
+            def run(unit: List[EdgePlan]) -> None:
+                if len(unit) == 1 and not unit[0].broadcast_group:
+                    outs[unit[0].edge_id] = _run_edge(unit[0],
+                                                      qids[id(unit)])
+                    return
+                try:
+                    outs.update(_run_broadcast_group(unit, qids[id(unit)]))
+                except BaseException as e:  # noqa: BLE001 - aggregated
+                    for ep in unit:
+                        outs[ep.edge_id] = (None, [e])
 
-            if len(runnable) == 1:
-                run(runnable[0])
+            if len(units) == 1:
+                run(units[0])
             else:
                 threads = [
-                    threading.Thread(target=run, args=(ep,),
-                                     name=f"pipegen-plan-{ep.edge_id}",
+                    threading.Thread(target=run, args=(unit,),
+                                     name=f"pipegen-plan-{unit[0].edge_id}",
                                      daemon=True)
-                    for ep in runnable
+                    for unit in units
                 ]
                 for t in threads:
                     t.start()
@@ -693,6 +784,108 @@ def _run_pipe_edge(ep: EdgePlan, query_id: str):
         export_stats=exp_stats, import_stats=stats.get("import"),
     )
     return result, excs
+
+
+def _run_broadcast_group(eps: List[EdgePlan], query_id: str
+                         ) -> Dict[str, Tuple[Any, List[BaseException]]]:
+    """Run one compiled fan-out group: a SINGLE export of the shared
+    source relation into a broadcast shm ring, consumed concurrently by
+    every edge's importer from its own cursor slot.  All edges share the
+    leader's dataset and this run's ``query_id``; the one export's stats
+    land on the leader edge (the other edges carry no export stats — the
+    encode genuinely happened once).  Never raises: failures are collected
+    per edge (an import failure is that edge's own; an export failure
+    fails the whole group)."""
+    from .session import TransferResult, adapter_for
+
+    n_readers = len(eps)
+    leader = next((ep for ep in eps if ep.broadcast_leader), eps[0])
+    src = leader.src_engine
+    dataset = leader.dataset
+    name = f"db://{dataset}?workers=1&query={query_id}"
+    timeout = max(ep.timeout for ep in eps)
+    errs: List[Tuple[str, BaseException]] = []  # (edge_id | "export", exc)
+    times: Dict[str, float] = {}
+
+    def run_import(ep: EdgePlan) -> None:
+        t0 = time.perf_counter()
+        cfg = replace(ep.config, transport="shm", broadcast=n_readers,
+                      partition=None, fanin=1, streams=1)
+        try:
+            with PipeEnabledEngine(adapter_for(ep.dst_engine)), \
+                    PipeOpenContext(cfg):
+                ep.dst_engine.import_csv_parallel(ep.dst_table, name,
+                                                  workers=1)
+        except BaseException as e:  # noqa: BLE001 - aggregated
+            errs.append((ep.edge_id, e))
+        times[ep.edge_id] = time.perf_counter() - t0
+
+    def run_export() -> None:
+        t0 = time.perf_counter()
+        cfg = replace(leader.config, partition=None, fanin=1)
+        try:
+            with PipeEnabledEngine(adapter_for(src)), PipeOpenContext(cfg):
+                src.export_csv_parallel(
+                    leader.table, name, workers=1,
+                    header=leader.dst_engine.writes_header,
+                    delimiter=leader.dst_engine.csv_delimiter,
+                )
+        except BaseException as e:  # noqa: BLE001
+            errs.append(("export", e))
+        times["export"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    imp_threads = [
+        threading.Thread(target=run_import, args=(ep,), daemon=True,
+                         name=f"pipegen-bcast-{ep.edge_id}")
+        for ep in eps
+    ]
+    te = threading.Thread(target=run_export, daemon=True,
+                          name=f"pipegen-bcast-export-{query_id}")
+    for t in imp_threads:
+        t.start()
+    te.start()
+    deadline = time.monotonic() + timeout
+    for t in imp_threads + [te]:
+        t.join(max(0.1, deadline - time.monotonic()))
+    elapsed = time.perf_counter() - t0
+    stats = collect_stats(dataset, query_id)
+    exp_stats = stats.get("export")
+    imp_stats = stats.get("import")  # merged across all reader slots
+    export_excs = [e for tag, e in errs if tag == "export"]
+    out: Dict[str, Tuple[Any, List[BaseException]]] = {}
+    for ep, th in zip(eps, imp_threads):
+        own = [e for tag, e in errs if tag == ep.edge_id]
+        excs = own + export_excs
+        messages = [f"import: {e!r}" for e in own]
+        messages += [f"export: {e!r}" for e in export_excs]
+        if not excs and (th.is_alive() or te.is_alive()):
+            stuck = [nm for nm, alive in (("import", th.is_alive()),
+                                          ("export", te.is_alive()))
+                     if alive]
+            excs = [TimeoutError(
+                f"broadcast transfer {dataset} did not complete within "
+                f"{timeout}s ({'/'.join(stuck)} still running)")]
+            messages = [f"timeout: {excs[0]}"]
+        try:
+            rows = len(ep.dst_engine.get_block(ep.dst_table))
+        except KeyError:
+            rows = 0
+        result = TransferResult(
+            source=src.name, target=ep.dst_engine.name,
+            mode=leader.mode, codec=leader.codec, rows=rows,
+            seconds=elapsed,
+            export_seconds=(times.get("export", 0.0)
+                            if ep.broadcast_leader else 0.0),
+            import_seconds=times.get(ep.edge_id, 0.0),
+            bytes_moved=(exp_stats.bytes_sent
+                         if exp_stats and ep.broadcast_leader else 0),
+            errors=messages,
+            export_stats=exp_stats if ep.broadcast_leader else None,
+            import_stats=imp_stats if ep.broadcast_leader else None,
+        )
+        out[ep.edge_id] = (result, excs)
+    return out
 
 
 def run_file_transfer(src: Any, table: str, dst: Any, dst_table: str,

@@ -5,66 +5,106 @@ SegmentList path across process boundaries).
 still pays one materialization per frame because the consuming thread may
 run after the producer's pooled buffers are recycled.  ``ShmRing`` removes
 that copy *and* the process boundary: a fixed-capacity byte ring mapped
-through ``multiprocessing.shared_memory``, single-producer/single-consumer,
-with a small header region holding the monotonic head/tail cursors and the
-peer liveness fields.
+through ``multiprocessing.shared_memory`` with a small header region
+holding the monotonic head/tail cursors and the peer liveness fields.
 
 Zero-copy contract:
 
 * the writer **reserves a contiguous span** inside the mapped region
   (:meth:`ShmRing.begin_frame`), the transport gathers the encoded
   ``SegmentList`` views straight into it, and :meth:`ShmRing.commit_frame`
-  publishes the advanced head — no intermediate ``bytes`` is ever built;
+  publishes the frame — no intermediate ``bytes`` is ever built;
 * the reader hands out a **``memoryview`` slice of the mapped region**
   (:meth:`ShmRing.recv`) that ``decode_block`` consumes in place; the span
   is recycled (:meth:`ShmRing.consume`) only after the next frame is
   requested, by which point the decoder has copied the values out into
   arena-backed columns.
 
-Frame records never wrap: when the remaining run to the end of the data
-region is too small, the writer stamps a 1-byte wrap marker (0x00) and both
-sides skip to the region start.  Waiting is futex-style polling with
-exponential backoff (spin first, then sleep 1 µs → 2 ms), with peer-death
-detection on both sides so neither a dead importer nor a dead exporter can
-hang the survivor (the socket path gets this for free from the FIN).
-
-Layout (offsets in bytes)::
+Layout **v2** (offsets in bytes)::
 
     0   u32  magic 'PGR1'
-    4   u32  version
+    4   u32  version (2)
     8   u64  capacity of the data region
     16  u64  head  (monotonic bytes written, wrap padding included)
-    24  u64  tail  (monotonic bytes consumed)
+    24  u64  tail  (monotonic bytes consumed; SPSC reader cursor)
     32  u32  writer pid (0 = not yet attached)
-    36  u32  reader pid
+    36  u32  reader pid (SPSC)
     40  u32  writer closed flag
-    44  u32  reader closed flag
-    48..64   reserved
-    64..     data region (capacity bytes)
+    44  u32  reader closed flag (SPSC)
+    48  u32  doorbell kind (0 = poll fallback, 1 = fifo/eventfd pair)
+    52  u32  reader waiting flag (SPSC)
+    56  u32  writer waiting flag
+    60  u32  reader slot count (0 = SPSC, R = broadcast)
+    64  u32  lease epoch (bumped by reset(); keys the seqlock tokens)
+    68..96   reserved
+    96..     broadcast only: R reader-cursor slots of 32 bytes each
+             (+0 u64 tail, +8 u32 pid, +12 u32 state, +16 u32 waiting,
+              +20 f64 reserved-claim deadline)
+    ...      data region (capacity bytes)
+
+Frame records never wrap and carry a **per-frame seqlock word**::
+
+    commit u32 | kind u8 | length u32 | payload
+
+The writer stamps ``commit = 0`` when it reserves the span, fills kind/
+length/payload, and only then stores the commit token — a value derived
+from the frame's monotonic byte offset *and the ring's lease epoch*
+(never 0).  The reader polls *the commit word at its own cursor*, not
+the shared head, and validates token + length again after reading the
+frame header, so a frame is only ever parsed after its publication is
+complete: the head-before-payload reordering the v1 docstring had to
+caveat for weakly-ordered ISAs can no longer desync the reader (a torn
+publication reads as "not ready" or fails loudly, never as a bogus
+frame).  The epoch key closes the pooled-reuse hole: ``reset()`` rewinds
+the monotonic cursors, which would make the previous lease's stale
+commit words token-valid at the same offsets again — bumping the epoch
+makes every stale word a guaranteed mismatch, so even a maximally
+reordered view degrades to "not ready", never to a stale payload.  When
+the run to the region end is too short the writer stamps the *wrap
+token* (the same keyed token space, wrap bit set) and both sides skip to
+the region start.
+
+**Doorbell.**  Blocked sides no longer rely on exponential-backoff polling
+(which capped idle wakeup latency at 2 ms): each direction gets a real
+doorbell — a per-ring named pipe created next to the segment (the fifo
+path derives from the segment name, which travels through the
+``WorkerDirectory``/``DirectoryServer`` rendezvous) plus, for same-process
+peers, an ``os.eventfd`` shared via a process-local registry.  A waiter
+publishes its *waiting flag* in the header, re-checks readiness, and parks
+in ``select`` on the doorbell fds; the peer rings (one write syscall) only
+when the flag is set, so the streaming hot path pays a single u32 load per
+frame.  Wakeup is microseconds instead of up to ``_SLEEP_MAX``.  Where
+``os.eventfd``/fifos are unavailable (non-Linux) the v1 backoff poll
+remains as the fallback, selected per ring at creation.  Per-instance
+wakeup counters (``spin``/``doorbell``/``poll``) feed
+``PipeStats.doorbell_waits``/``spin_wakeups``/``poll_sleeps``.
+
+**Broadcast variant** (``nreaders > 0``): one writer, R reader cursor
+slots.  Every reader consumes every frame at its own pace; a span recycles
+only when the *minimum* of the live reader tails passes it, so one export
+(one encode) feeds R colocated importers from one segment.  Readers claim
+pre-reserved slots by index (handed out by the directory's broadcast
+rendezvous), a slot whose process dies is **evicted by pid-probe** so a
+SIGKILLed reader cannot wedge the writer, and a closed slot stops gating
+recycling.  Broadcast rings are never pooled.
 
 The reader side *creates* (and ultimately unlinks) the segment — it is the
-rendezvous registrant, mirroring the socket path where the importer listens.
-On Python < 3.13 the attaching process must be unregistered from the
-``resource_tracker`` or its exit would unlink the segment under the still
-running reader (bpo-39959); :meth:`ShmRing.attach` handles that.
-
-Memory-ordering caveat: cursors are published with plain (GIL-serialized)
-stores — pure Python offers no cross-process fence, so the
-payload-before-head publication order relies on x86-TSO total store order.
-On weakly-ordered ISAs (ARM64) a reader could in principle observe the
-advanced head before the payload bytes; the reader fails loudly on a torn
-header (length sanity check) rather than desyncing, but the in-place
-payload contents are not similarly guarded.  Production hardening would
-put a seqlock word per frame or an eventfd doorbell here (ROADMAP).
+rendezvous registrant, mirroring the socket path where the importer
+listens.  On Python < 3.13 the attaching process must be unregistered from
+the ``resource_tracker`` or its exit would unlink the segment under the
+still running reader (bpo-39959); :meth:`ShmRing.attach` handles that.
 """
 
 from __future__ import annotations
 
 import atexit
 import errno
+import glob
 import os
 import secrets
+import select
 import struct
+import tempfile
 import threading
 import time
 from multiprocessing import resource_tracker, shared_memory
@@ -74,16 +114,18 @@ from .iobuf import Buffer, _seg_len
 from .transport import FRAME_EOF, LinkSim, Transport
 
 __all__ = ["ShmRing", "ShmRingTransport", "DEFAULT_RING_CAPACITY",
-           "acquire_ring"]
+           "acquire_ring", "acquire_broadcast_ring", "attach_ring",
+           "doorbell_supported"]
 
 _MAGIC = 0x50475231  # 'PGR1'
-_VERSION = 1
+_VERSION = 2
 _HDR = struct.Struct("<IIQ")      # magic, version, capacity
 _U64 = struct.Struct("<Q")
 _U32 = struct.Struct("<I")
-_FRAME = struct.Struct("<cI")     # kind, payload length (shared with transport)
+_FRAME = struct.Struct("<IcI")    # commit word, kind, payload length
+_KL = struct.Struct("<cI")        # kind + length (at frame offset +4)
 
-HEADER_SIZE = 64
+HEADER_SIZE = 96
 _OFF_CAPACITY = 8
 _OFF_HEAD = 16
 _OFF_TAIL = 24
@@ -91,20 +133,82 @@ _OFF_WRITER_PID = 32
 _OFF_READER_PID = 36
 _OFF_WRITER_CLOSED = 40
 _OFF_READER_CLOSED = 44
+_OFF_DOORBELL = 48
+_OFF_READER_WAIT = 52
+_OFF_WRITER_WAIT = 56
+_OFF_NREADERS = 60
+_OFF_EPOCH = 64
 
-_WRAP = 0x00                      # 1-byte marker: skip to region start
+# tail, pid, state, waiting, reserved-claim deadline (+pad) = 32 B
+_SLOT = struct.Struct("<QIIId4x")
+_SLOT_OFF_DEADLINE = 20
+_F64 = struct.Struct("<d")
+_SLOT_STATE_RESERVED = 0  # pre-created by the ring owner, not yet claimed
+_SLOT_STATE_ATTACHED = 1
+_SLOT_STATE_CLOSED = 2
+_SLOT_STATE_EVICTED = 3   # pid-probe / claim-deadline found it dead
+
+#: how long a pre-reserved broadcast slot may stay unclaimed before the
+#: writer evicts it — an importer that died between the directory join
+#: and the ring attach must not wedge the group (legitimate attaches
+#: happen within milliseconds of the join)
+_RESERVED_GRACE = 15.0
+
+# seqlock publication tokens: derived from the frame's monotonic byte
+# offset, the ring's lease epoch, and a wrap bit — never 0 (unpublished),
+# and never valid across a pooled reset() (the epoch bump guarantees a
+# stale word mismatches even at the same offset)
+_TOKEN_MOD = 0xFFFFFFFD
+_M64 = (1 << 64) - 1
+
+
+def _token(mono: int, epoch: int = 0, wrap: bool = False) -> int:
+    v = (mono << 1) | (1 if wrap else 0)
+    if epoch:
+        v ^= (epoch * 0x9E3779B1) & _M64
+    return (v % _TOKEN_MOD) + 1
+
+
+#: the *logical* frame header charged to bytes_sent/LinkSim — kept at the
+#: socket/channel transports' 5 bytes so PipeStats stay comparable; the
+#: 4-byte seqlock word is physical ring overhead, not wire accounting
+_WIRE_HEADER = 5
 
 DEFAULT_RING_CAPACITY = 1 << 25   # 32 MiB: several default-size blocks deep
 
-_SPIN = 200                       # polls before the first sleep
+_SPIN = 200                       # polls before any sleeping at all
 _SLEEP_MIN = 1e-6
-# Backoff restarts on every wait, so a *streaming* peer wakes within
-# microseconds of the cursor moving; only a genuinely idle wait (e.g. the
-# importer parked on the schema frame while the exporter is still setting
-# up) escalates to the cap.  Keep the cap high enough that an idle poller
-# does not churn the GIL out from under the working thread.
+# Poll-fallback backoff (doorbell-less platforms): restarts on every wait,
+# so a *streaming* peer wakes within microseconds of the cursor moving;
+# only a genuinely idle wait escalates to the cap.
 _SLEEP_MAX = 2e-3
 _LIVENESS_EVERY = 64              # peer pid probes, once per N sleeps
+_PARK_AFTER = 256e-6              # micro-backoff budget before parking on
+                                  # the doorbell: streaming gaps (peer
+                                  # mid-encode) resolve in here without a
+                                  # single doorbell syscall; only a
+                                  # demonstrably idle wait pays the park
+_DB_SLICE_MIN = 2e-3              # first doorbell select slice: escalates
+                                  # per wait, so a doorbell that cannot be
+                                  # rung (fifo path mismatch across mount
+                                  # namespaces, raced unlink) degrades to
+                                  # poll-cap behaviour, not 50 ms stalls
+_DB_SLICE = 0.05                  # slice cap (liveness-probe cadence, and
+                                  # the self-heal bound for the rare
+                                  # cross-process lost-wakeup window)
+
+#: platform gate for the doorbell machinery; tests monkeypatch this to
+#: exercise the poll fallback on doorbell-capable hosts
+_DOORBELL_OK = (hasattr(os, "eventfd") and hasattr(os, "mkfifo")
+                and hasattr(select, "select"))
+
+_DB_NONE = 0
+_DB_FDS = 1
+
+
+def doorbell_supported() -> bool:
+    return _DOORBELL_OK
+
 
 # segment names created by THIS process: an in-process attach (exporter and
 # importer threads of one transfer) must not unregister the creator's
@@ -137,39 +241,196 @@ def _pid_alive(pid: int) -> bool:
     return True  # pragma: no cover
 
 
-class ShmRing:
-    """SPSC frame ring over one shared-memory segment.
+# -- doorbells ----------------------------------------------------------------------
+#
+# One named pipe per direction (to-writer: ".w"; to-reader slot i:
+# ".r<i>"), created by the segment creator; the path derives from the
+# segment name so it rides the same directory rendezvous.  Same-process
+# peers additionally share an os.eventfd through a refcounted registry —
+# the waiter selects on both fds, the ringer rings both, so mixed
+# in-process/cross-process peerings always wake.
 
-    The creator (reader side by default) owns the segment name and unlinks
-    it on close; the attacher only closes its mapping.
+_DB_BYTE = b"\x01"
+_ev_lock = threading.Lock()
+_ev_reg: Dict[str, List[int]] = {}  # fifo path -> [eventfd, refcount]
+
+
+def _db_path(name: str, suffix: str) -> str:
+    return os.path.join(tempfile.gettempdir(), f"{name}.pgdb-{suffix}")
+
+
+def _evfd_acquire(path: str, create: bool) -> Optional[int]:
+    if not hasattr(os, "eventfd"):  # pragma: no cover - linux-only API
+        return None
+    with _ev_lock:
+        ent = _ev_reg.get(path)
+        if ent is None:
+            if not create:
+                return None  # creator is another process: fifo carries it
+            try:
+                fd = os.eventfd(0, os.EFD_NONBLOCK)
+            except OSError:  # pragma: no cover - fd exhaustion
+                return None
+            ent = _ev_reg[path] = [fd, 0]
+        ent[1] += 1
+        return ent[0]
+
+
+def _evfd_release(path: str) -> None:
+    with _ev_lock:
+        ent = _ev_reg.get(path)
+        if ent is None:  # pragma: no cover - double release
+            return
+        ent[1] -= 1
+        if ent[1] <= 0:
+            del _ev_reg[path]
+            try:
+                os.close(ent[0])
+            except OSError:  # pragma: no cover
+                pass
+
+
+class _Doorbell:
+    """One wakeup channel: a named-pipe fd plus (same-process) an eventfd."""
+
+    __slots__ = ("path", "fd", "evfd")
+
+    def __init__(self, path: str, create_event: bool):
+        self.path = path
+        self.fd = os.open(path, os.O_RDWR | os.O_NONBLOCK)
+        self.evfd = _evfd_acquire(path, create=create_event)
+
+    def ring(self) -> None:
+        try:
+            os.write(self.fd, _DB_BYTE)
+        except OSError:
+            pass  # pipe full: wakeups already pending
+        if self.evfd is not None:
+            try:
+                os.eventfd_write(self.evfd, 1)
+            except OSError:  # pragma: no cover - counter saturated
+                pass
+
+    def wait(self, timeout: float) -> bool:
+        fds = [self.fd] if self.evfd is None else [self.fd, self.evfd]
+        try:
+            ready, _, _ = select.select(fds, [], [], max(0.0, timeout))
+        except OSError:  # pragma: no cover - fd raced a close
+            return False
+        for fd in ready:
+            try:
+                if fd == self.evfd:
+                    os.eventfd_read(fd)
+                else:
+                    os.read(fd, 64)
+            except OSError:
+                pass
+        return bool(ready)
+
+    def close(self) -> None:
+        try:
+            os.close(self.fd)
+        except OSError:  # pragma: no cover
+            pass
+        if self.evfd is not None:
+            _evfd_release(self.path)
+            self.evfd = None
+
+
+def _make_fifos(name: str, readers: int) -> bool:
+    """Create the per-ring doorbell fifos (one to-writer, one per reader
+    slot).  Returns False — poll fallback — when the platform refuses."""
+    paths = [_db_path(name, "w")] + [
+        _db_path(name, f"r{i}") for i in range(max(1, readers))]
+    made = []
+    try:
+        for p in paths:
+            try:
+                os.unlink(p)
+            except FileNotFoundError:
+                pass
+            os.mkfifo(p)
+            made.append(p)
+        return True
+    except OSError:  # pragma: no cover - exotic tmpdir
+        for p in made:
+            try:
+                os.unlink(p)
+            except OSError:
+                pass
+        return False
+
+
+def _remove_fifos(name: str) -> None:
+    for p in glob.glob(_db_path(name, "*")):
+        try:
+            os.unlink(p)
+        except OSError:  # pragma: no cover
+            pass
+
+
+class ShmRing:
+    """Frame ring over one shared-memory segment.
+
+    Single-producer/single-consumer by default; with ``nreaders > 0`` the
+    broadcast variant (one writer, R reader cursor slots — see module
+    docstring).  The creator (reader side by default) owns the segment
+    name and unlinks it on close; the attacher only closes its mapping.
     """
 
     def __init__(self, shm: shared_memory.SharedMemory, owner: bool,
-                 capacity: int):
+                 capacity: int, nreaders: int = 0, slot: int = -1):
         self.shm = shm
         self.owner = owner
         self.capacity = capacity
+        self.nreaders = nreaders
+        self.slot = slot  # this instance's broadcast reader slot (-1: n/a)
         self._buf: memoryview = shm.buf
-        self._data: memoryview = self._buf[HEADER_SIZE:HEADER_SIZE + capacity]
+        data_off = HEADER_SIZE + _SLOT.size * nreaders
+        self._data: memoryview = self._buf[data_off:data_off + capacity]
         self.closed = False
         self._reserved: Optional[Tuple[int, int]] = None  # (pos, need)
         self._pending_consume = 0
+        # per-instance wait attribution (each side attaches its own
+        # instance, so these split cleanly into reader/writer stats)
+        self.wakeups = {"spin": 0, "doorbell": 0, "poll": 0}
+        self.readers_evicted = 0
+        self._dbs: Dict[str, Optional[_Doorbell]] = {}
+        self._epoch = self._u32(_OFF_EPOCH)  # refreshed by claim()/reset()
 
     # -- construction ------------------------------------------------------------
     @classmethod
     def create(cls, capacity: int = DEFAULT_RING_CAPACITY,
-               name: Optional[str] = None, role: str = "reader") -> "ShmRing":
+               name: Optional[str] = None, role: str = "reader",
+               doorbell: bool = True, readers: int = 0) -> "ShmRing":
+        """Create a segment.  ``readers > 0`` makes it a broadcast ring
+        with that many pre-reserved cursor slots (the creator claims slot
+        0 when ``role == 'reader'``)."""
         name = name or f"pgring-{secrets.token_hex(6)}"
-        shm = shared_memory.SharedMemory(name=name, create=True,
-                                         size=HEADER_SIZE + capacity)
+        size = HEADER_SIZE + _SLOT.size * readers + capacity
+        shm = shared_memory.SharedMemory(name=name, create=True, size=size)
         _created_here.add(shm.name)
         _HDR.pack_into(shm.buf, 0, _MAGIC, _VERSION, capacity)
-        ring = cls(shm, owner=True, capacity=capacity)
+        _U32.pack_into(shm.buf, _OFF_NREADERS, readers)
+        kind = _DB_NONE
+        if doorbell and _DOORBELL_OK and _make_fifos(name, readers):
+            kind = _DB_FDS
+        _U32.pack_into(shm.buf, _OFF_DOORBELL, kind)
+        claim_by = time.monotonic() + _RESERVED_GRACE
+        for i in range(readers):
+            _SLOT.pack_into(shm.buf, HEADER_SIZE + _SLOT.size * i,
+                            0, 0, _SLOT_STATE_RESERVED, 0, claim_by)
+        slot = 0 if (readers and role == "reader") else -1
+        ring = cls(shm, owner=True, capacity=capacity, nreaders=readers,
+                   slot=slot)
         ring.claim(role)
         return ring
 
     @classmethod
-    def attach(cls, name: str, role: str = "writer") -> "ShmRing":
+    def attach(cls, name: str, role: str = "writer",
+               slot: int = -1) -> "ShmRing":
+        """Attach to an existing segment.  Broadcast readers must pass the
+        ``slot`` index the directory handed them."""
         shm = shared_memory.SharedMemory(name=name, create=False)
         # Python < 3.13 registers even plain attaches with the resource
         # tracker, whose cleanup at *this* process's exit would unlink the
@@ -183,30 +444,77 @@ class ShmRing:
         magic, version, capacity = _HDR.unpack_from(shm.buf, 0)
         if magic != _MAGIC or version != _VERSION:
             shm.close()
-            raise IOError(f"{name!r} is not a PipeGen ring segment")
-        ring = cls(shm, owner=False, capacity=capacity)
-        ring.claim(role)
+            raise IOError(f"{name!r} is not a PipeGen v{_VERSION} ring "
+                          f"segment")
+        nreaders = _U32.unpack_from(shm.buf, _OFF_NREADERS)[0]
+        if nreaders and role == "reader" and not 0 <= slot < nreaders:
+            shm.close()
+            raise ValueError(
+                f"broadcast ring {name!r} has {nreaders} reader slots; "
+                f"got slot={slot}")
+        ring = cls(shm, owner=False, capacity=capacity, nreaders=nreaders,
+                   slot=slot if (nreaders and role == "reader") else -1)
+        try:
+            ring.claim(role)
+        except BaseException:  # e.g. the slot was evicted: unmap cleanly
+            ring.close()
+            raise
         return ring
 
     def claim(self, role: Optional[str]) -> None:
         """Record this process as the ring's reader or writer (for the
         peer's liveness probe).  Claiming re-opens that side: a pooled ring
-        may carry the previous lease's closed flag."""
+        may carry the previous lease's closed flag.  Broadcast readers
+        claim their cursor slot instead of the SPSC header fields."""
+        self._epoch = self._u32(_OFF_EPOCH)
+        # a claim starts a lease: wait attribution belongs to it alone
+        # (a pooled/cached instance must not leak the previous transfer's
+        # counters into the next one's PipeStats)
+        self.wakeups = {"spin": 0, "doorbell": 0, "poll": 0}
+        self.readers_evicted = 0
         if role == "reader":
-            _U32.pack_into(self._buf, _OFF_READER_PID, os.getpid())
-            _U32.pack_into(self._buf, _OFF_READER_CLOSED, 0)
+            if self.nreaders:
+                off = self._slot_off(self.slot)
+                if self._u32(off + 12) == _SLOT_STATE_EVICTED:
+                    raise IOError(
+                        f"broadcast slot {self.slot} of {self.name!r} was "
+                        f"evicted (this reader arrived after the claim "
+                        f"grace expired; frames are already recycled)")
+                _U32.pack_into(self._buf, off + 8, os.getpid())
+                _U32.pack_into(self._buf, off + 12, _SLOT_STATE_ATTACHED)
+                # re-verify: the writer's grace eviction may have raced
+                # our store (check-then-act on its side); losing that
+                # race must be loud here, not a silent partial import
+                if self._u32(off + 12) == _SLOT_STATE_EVICTED:
+                    raise IOError(
+                        f"broadcast slot {self.slot} of {self.name!r} was "
+                        f"evicted while attaching (claim grace expired)")
+            else:
+                _U32.pack_into(self._buf, _OFF_READER_PID, os.getpid())
+                _U32.pack_into(self._buf, _OFF_READER_CLOSED, 0)
         elif role == "writer":
             _U32.pack_into(self._buf, _OFF_WRITER_PID, os.getpid())
             _U32.pack_into(self._buf, _OFF_WRITER_CLOSED, 0)
 
     def reset(self) -> None:
-        """Rewind a (drained) ring for a fresh lease: cursors to zero, no
-        peers, no closed flags.  Owner-side only, between pooled reuses."""
+        """Rewind a (drained) ring for a fresh lease: cursors to zero,
+        no peers, no closed flags, no waiting flags, broadcast slots back
+        to freshly-reserved — and a fresh lease epoch, so the previous
+        lease's commit words (which would be token-valid again at the
+        rewound offsets) can never re-validate.  Owner-side only, between
+        pooled reuses."""
         self._set_u64(_OFF_HEAD, 0)
         self._set_u64(_OFF_TAIL, 0)
         for off in (_OFF_WRITER_PID, _OFF_READER_PID,
-                    _OFF_WRITER_CLOSED, _OFF_READER_CLOSED):
+                    _OFF_WRITER_CLOSED, _OFF_READER_CLOSED,
+                    _OFF_READER_WAIT, _OFF_WRITER_WAIT):
             _U32.pack_into(self._buf, off, 0)
+        claim_by = time.monotonic() + _RESERVED_GRACE
+        for i in range(self.nreaders):
+            _SLOT.pack_into(self._buf, self._slot_off(i),
+                            0, 0, _SLOT_STATE_RESERVED, 0, claim_by)
+        self._epoch = (self._epoch + 1) & 0xFFFFFFFF
+        _U32.pack_into(self._buf, _OFF_EPOCH, self._epoch)
         self._reserved = None
         self._pending_consume = 0
 
@@ -224,6 +532,28 @@ class ShmRing:
     def _u32(self, off: int) -> int:
         return _U32.unpack_from(self._buf, off)[0]
 
+    def _slot_off(self, i: int) -> int:
+        return HEADER_SIZE + _SLOT.size * i
+
+    def _tail_get(self) -> int:
+        if self.nreaders and self.slot >= 0:
+            return self._u64(self._slot_off(self.slot))
+        return self._u64(_OFF_TAIL)
+
+    def _min_tail(self) -> int:
+        """Broadcast: the laggiest cursor still gating recycling (reserved
+        slots count — their reader has not attached yet and must not miss
+        frames; closed/evicted slots do not)."""
+        head = self._u64(_OFF_HEAD)
+        lo = None
+        for i in range(self.nreaders):
+            off = self._slot_off(i)
+            state = self._u32(off + 12)
+            if state in (_SLOT_STATE_RESERVED, _SLOT_STATE_ATTACHED):
+                t = self._u64(off)
+                lo = t if lo is None or t < lo else lo
+        return head if lo is None else lo
+
     @property
     def writer_closed(self) -> bool:
         return bool(self._u32(_OFF_WRITER_CLOSED))
@@ -233,26 +563,142 @@ class ShmRing:
         return bool(self._u32(_OFF_READER_CLOSED))
 
     def reader_alive(self) -> bool:
+        if self.nreaders:
+            return self._readers_ok()
         return not self.reader_closed and _pid_alive(self._u32(_OFF_READER_PID))
 
     def writer_alive(self) -> bool:
         return not self.writer_closed and _pid_alive(self._u32(_OFF_WRITER_PID))
 
+    def _readers_ok(self) -> bool:
+        """Broadcast liveness: evict attached slots whose process died
+        (pid-probe) and reserved slots whose reader never arrived within
+        the claim grace (an importer that failed between the directory
+        join and the ring attach must not wedge the group), then report
+        whether anyone still wants data."""
+        ok = False
+        for i in range(self.nreaders):
+            off = self._slot_off(i)
+            state = self._u32(off + 12)
+            if state == _SLOT_STATE_ATTACHED:
+                if not _pid_alive(self._u32(off + 8)):
+                    _U32.pack_into(self._buf, off + 12, _SLOT_STATE_EVICTED)
+                    _U32.pack_into(self._buf, off + 16, 0)
+                    self.readers_evicted += 1
+                    continue
+                ok = True
+            elif state == _SLOT_STATE_RESERVED:
+                deadline = _F64.unpack_from(
+                    self._buf, off + _SLOT_OFF_DEADLINE)[0]
+                if deadline and time.monotonic() > deadline:
+                    _U32.pack_into(self._buf, off + 12, _SLOT_STATE_EVICTED)
+                    self.readers_evicted += 1
+                    continue
+                ok = True  # not yet attached: still owed every frame
+        return ok
+
     def used(self) -> int:
-        return self._u64(_OFF_HEAD) - self._u64(_OFF_TAIL)
+        if self.nreaders and self.slot < 0:  # broadcast writer view
+            return self._u64(_OFF_HEAD) - self._min_tail()
+        return self._u64(_OFF_HEAD) - self._tail_get()
+
+    # -- doorbells ---------------------------------------------------------------
+    def _doorbell(self, suffix: str) -> Optional[_Doorbell]:
+        if self._u32(_OFF_DOORBELL) != _DB_FDS:
+            return None
+        db = self._dbs.get(suffix, False)
+        if db is False:
+            try:
+                db = _Doorbell(_db_path(self.name, suffix),
+                               create_event=self.owner)
+            except OSError:
+                db = None  # fifo vanished (peer cleanup raced): poll
+            self._dbs[suffix] = db
+        return db
+
+    def _my_wait_channel(self, side: str) -> Tuple[Optional[_Doorbell], int]:
+        """(doorbell this side parks on, waiting-flag offset)."""
+        if side == "writer":
+            return self._doorbell("w"), _OFF_WRITER_WAIT
+        if self.nreaders:
+            off = self._slot_off(self.slot) + 16
+            return self._doorbell(f"r{self.slot}"), off
+        return self._doorbell("r0"), _OFF_READER_WAIT
+
+    def _ring_readers(self) -> None:
+        """Writer side: wake every reader that published a waiting flag."""
+        if self.nreaders:
+            for i in range(self.nreaders):
+                if self._u32(self._slot_off(i) + 16):
+                    db = self._doorbell(f"r{i}")
+                    if db is not None:
+                        db.ring()
+        elif self._u32(_OFF_READER_WAIT):
+            db = self._doorbell("r0")
+            if db is not None:
+                db.ring()
+
+    def _ring_writer(self) -> None:
+        if self._u32(_OFF_WRITER_WAIT):
+            db = self._doorbell("w")
+            if db is not None:
+                db.ring()
 
     # -- waiting -----------------------------------------------------------------
-    def _wait(self, ready, peer_ok, timeout: Optional[float], what: str):
-        """Futex-style poll: spin, then sleep with exponential backoff,
-        probing peer liveness as we go.  Returns the truthy ``ready()``
-        value; raises BrokenPipeError/TimeoutError."""
+    def _wait(self, ready, peer_ok, timeout: Optional[float], what: str,
+              side: str):
+        """Spin briefly, then park on this side's doorbell (waiting flag
+        published first, so the peer's post-publish flag check cannot miss
+        us).  Doorbell-less rings fall back to the v1 exponential-backoff
+        poll.  Returns the truthy ``ready()`` value; raises
+        BrokenPipeError/TimeoutError."""
+        r = ready()
+        if r:
+            return r
         deadline = None if timeout is None else time.monotonic() + timeout
-        sleep = _SLEEP_MIN
-        sleeps = 0
         for _ in range(_SPIN):
             r = ready()
             if r:
+                self.wakeups["spin"] += 1
                 return r
+        db, flag_off = self._my_wait_channel(side)
+        if db is not None:
+            # brief escalating micro-sleeps before the park: a bursting
+            # peer catches up within microseconds (the GIL hand-off the
+            # spin alone cannot give), and the waiting flag stays clear,
+            # so the streaming hot path never pays a doorbell syscall
+            sleep = _SLEEP_MIN
+            t_micro = time.monotonic()  # wall budget: a nominal 1 µs
+            while time.monotonic() - t_micro < _PARK_AFTER:  # sleep really
+                time.sleep(sleep)                            # costs ~60 µs
+                r = ready()
+                if r:
+                    self.wakeups["spin"] += 1
+                    return r
+                sleep = min(sleep * 2, _PARK_AFTER / 4)
+            slice_ = _DB_SLICE_MIN
+            try:
+                while True:
+                    _U32.pack_into(self._buf, flag_off, 1)
+                    r = ready()
+                    if r:
+                        self.wakeups["doorbell"] += 1
+                        return r
+                    if not peer_ok():
+                        raise BrokenPipeError(
+                            f"shm ring peer died while {what}")
+                    if deadline is not None:
+                        remaining = deadline - time.monotonic()
+                        if remaining <= 0:
+                            raise TimeoutError(f"shm ring timed out {what}")
+                        db.wait(min(slice_, remaining))
+                    else:
+                        db.wait(slice_)
+                    slice_ = min(slice_ * 2, _DB_SLICE)
+            finally:
+                _U32.pack_into(self._buf, flag_off, 0)
+        sleep = _SLEEP_MIN
+        sleeps = 0
         while True:
             r = ready()
             if r:
@@ -262,15 +708,20 @@ class ShmRing:
             if deadline is not None and time.monotonic() > deadline:
                 raise TimeoutError(f"shm ring timed out {what}")
             time.sleep(sleep)
+            self.wakeups["poll"] += 1
             sleep = min(sleep * 2, _SLEEP_MAX)
             sleeps += 1
 
     # -- writer side ---------------------------------------------------------------
+    def _free_tail(self) -> int:
+        return self._min_tail() if self.nreaders else self._u64(_OFF_TAIL)
+
     def begin_frame(self, kind: bytes, nbytes: int,
                     timeout: Optional[float] = None) -> memoryview:
-        """Reserve a contiguous span, stamp the frame header into it, and
-        return the writable payload view.  Blocks (with backoff) while the
-        ring is full; fails fast when the reader dies."""
+        """Reserve a contiguous span, stamp the frame header into it
+        (commit word cleared), and return the writable payload view.
+        Blocks (doorbell wait) while the ring is full; fails fast when the
+        reader dies — broadcast writers evict dead readers instead."""
         if self.closed:
             raise ValueError("write on closed ring")
         if self._reserved is not None:
@@ -284,85 +735,145 @@ class ShmRing:
         cap = self.capacity
 
         def _free_at_least(n):
-            return lambda: cap - (self._u64(_OFF_HEAD) - self._u64(_OFF_TAIL)) >= n
+            return lambda: cap - (self._u64(_OFF_HEAD) - self._free_tail()) >= n
 
         # phase 1: if the contiguous run at head is too short, wait until
-        # the dead run fits in the free space, stamp the wrap marker, and
-        # publish the skip (the reader recycles it while we wait on)
+        # the dead run fits in the free space, stamp the wrap magic, and
+        # publish the skip (readers recycle it while we wait on)
         head = self._u64(_OFF_HEAD)
         pos = head % cap
         if cap - pos < need:
             pad = cap - pos
             self._wait(_free_at_least(pad), self.reader_alive, timeout,
-                       "waiting for ring space (wrap)")
-            self._data[pos] = _WRAP
+                       "waiting for ring space (wrap)", side="writer")
+            if pad >= _U32.size:
+                _U32.pack_into(self._data, pos,
+                               _token(head, self._epoch, wrap=True))
+            # a run shorter than a u32 cannot even hold the wrap token;
+            # readers infer the wrap from run < frame size once head
+            # passes it
             head += pad
             self._set_u64(_OFF_HEAD, head)
+            self._ring_readers()
             pos = 0
         # phase 2: wait for the frame itself to fit
         self._wait(_free_at_least(need), self.reader_alive, timeout,
-                   "waiting for ring space")
-        _FRAME.pack_into(self._data, pos, kind, nbytes)
+                   "waiting for ring space", side="writer")
+        _U32.pack_into(self._data, pos, 0)  # unpublished until commit
+        _KL.pack_into(self._data, pos + _U32.size, kind, nbytes)
         self._reserved = (head, need)
         return self._data[pos + _FRAME.size: pos + _FRAME.size + nbytes]
 
     def commit_frame(self) -> None:
-        """Publish the reserved frame (payload must be fully written)."""
+        """Publish the reserved frame: payload and header are fully
+        written, so store the seqlock token *last*, then advance head and
+        ring any waiting reader."""
         if self._reserved is None:
             raise RuntimeError("commit_frame without begin_frame")
         head, need = self._reserved
         self._reserved = None
+        _U32.pack_into(self._data, head % self.capacity,
+                       _token(head, self._epoch))
         self._set_u64(_OFF_HEAD, head + need)
+        self._ring_readers()
 
     def mark_closed(self, role: str) -> None:
         """Publish this side's closed flag without dropping the mapping
         (the peer's liveness probe reads it; a cached attachment clears it
-        again on the next :meth:`claim`)."""
-        off = _OFF_READER_CLOSED if role == "reader" else _OFF_WRITER_CLOSED
-        _U32.pack_into(self._buf, off, 1)
+        again on the next :meth:`claim`).  Rings the peer's doorbell so a
+        parked waiter observes the close immediately."""
+        if role == "reader":
+            if self.nreaders:
+                if self.slot >= 0:
+                    _U32.pack_into(self._buf, self._slot_off(self.slot) + 12,
+                                   _SLOT_STATE_CLOSED)
+            else:
+                _U32.pack_into(self._buf, _OFF_READER_CLOSED, 1)
+            self._ring_writer()
+        else:
+            _U32.pack_into(self._buf, _OFF_WRITER_CLOSED, 1)
+            self._ring_readers()
 
     def writer_close(self) -> None:
         self.mark_closed("writer")
         self.close()
 
     # -- reader side ---------------------------------------------------------------
+    def _advance_tail(self, n: int) -> None:
+        if self.nreaders:
+            off = self._slot_off(self.slot)
+            self._set_u64(off, self._u64(off) + n)
+        else:
+            self._set_u64(_OFF_TAIL, self._u64(_OFF_TAIL) + n)
+        self._ring_writer()
+
     def recv(self, timeout: Optional[float] = None
              ) -> Optional[Tuple[int, memoryview]]:
         """Next frame as ``(kind_byte, payload view)``, or ``None`` at end
         of stream (writer closed or died with the ring drained).  The view
-        is valid until :meth:`consume` / the next :meth:`recv`."""
+        is valid until :meth:`consume` / the next :meth:`recv`.
+
+        Readiness is judged from the frame's own seqlock word at this
+        reader's cursor — never from the shared head — so a partially
+        published frame reads as "not ready" and a corrupt one fails
+        loudly instead of desyncing."""
         if self.closed:
             return None
         self.consume()
         cap = self.capacity
 
         def _readable():
-            avail = self.used()
-            if not avail:
+            tail = self._tail_get()
+            # the head gate is NECESSARY, the commit token SUFFICIENT:
+            # head only advances once a frame (or wrap skip) is fully
+            # published, so nothing before it is ever examined — in
+            # particular not a *pooled* ring's previous-lease frames,
+            # whose commit words are token-valid again after reset()
+            # rewinds the monotonic cursors (tokens derive from the byte
+            # offset alone).  The token then guards what head alone
+            # cannot: head-before-payload visibility off x86-TSO reads
+            # as "not ready", never as a frame.
+            if self._u64(_OFF_HEAD) - tail <= 0:
                 return None
-            pos = self._u64(_OFF_TAIL) % cap
-            if self._data[pos] == _WRAP:
-                # recycle the dead run at the region end and re-poll
-                self._set_u64(_OFF_TAIL, self._u64(_OFF_TAIL) + (cap - pos))
+            pos = tail % cap
+            run = cap - pos
+            if run < _FRAME.size:
+                # run too short for any frame: an implied wrap skip
+                self._advance_tail(run)
                 return None
-            if avail < _FRAME.size:  # header partially published: re-poll
-                return None
-            return pos + 1  # avoid falsy 0
+            commit = _U32.unpack_from(self._data, pos)[0]
+            if commit == _token(tail, self._epoch):
+                return pos + 1  # avoid falsy 0
+            if commit == _token(tail, self._epoch, wrap=True):
+                self._advance_tail(run)
+            return None
 
         def _writer_ok():
+            if self.nreaders and self.slot >= 0 and (
+                    self._u32(self._slot_off(self.slot) + 12)
+                    == _SLOT_STATE_EVICTED):
+                # the writer evicted THIS slot (the claim raced the grace
+                # deadline): frames have been recycled underneath us, so
+                # a silent EOF here would be a silent partial import
+                raise IOError(
+                    f"broadcast slot {self.slot} of {self.name!r} was "
+                    f"evicted mid-stream; the delivered rows are "
+                    f"incomplete")
             if self.writer_alive():
                 return True
             return self.used() > 0  # drain what a dead writer published
 
         try:
             pos = self._wait(_readable, _writer_ok, timeout,
-                             "waiting for a frame") - 1
+                             "waiting for a frame", side="reader") - 1
         except BrokenPipeError:
             return None  # unclean writer death == end of stream (fail-fast)
-        kind, ln = _FRAME.unpack_from(self._data, pos)
-        if _FRAME.size + ln > cap - pos:
-            # a length that overruns the contiguous run means the header
-            # bytes were torn or trampled; fail loudly over desyncing
+        tail = self._tail_get()
+        commit, kind, ln = _FRAME.unpack_from(self._data, pos)
+        # seqlock re-check + bounds: the commit token must still match and
+        # the length must fit the contiguous run it was committed into
+        if (commit != _token(tail, self._epoch)
+                or _FRAME.size + ln > cap - pos):
             raise IOError(
                 f"shm ring frame header corrupt at {pos}: length {ln}")
         self._pending_consume = _FRAME.size + ln
@@ -372,9 +883,8 @@ class ShmRing:
         """Recycle the span returned by the last :meth:`recv` (its view is
         dead afterwards)."""
         if self._pending_consume:
-            self._set_u64(_OFF_TAIL,
-                          self._u64(_OFF_TAIL) + self._pending_consume)
-            self._pending_consume = 0
+            n, self._pending_consume = self._pending_consume, 0
+            self._advance_tail(n)
 
     def reader_close(self) -> None:
         self.mark_closed("reader")
@@ -383,14 +893,18 @@ class ShmRing:
     # -- lifecycle -----------------------------------------------------------------
     def close(self) -> None:
         """Close this side's mapping; the owner also unlinks the segment
-        name so an unclean peer cannot leak it (test: unclean-shutdown
-        cleanup).  Outstanding payload views keep the mapping alive until
-        they are garbage collected."""
+        name (and the doorbell fifos) so an unclean peer cannot leak them.
+        Outstanding payload views keep the mapping alive until they are
+        garbage collected."""
         if self.closed:
             return
         self.closed = True
         self._reserved = None
         self._pending_consume = 0
+        for db in self._dbs.values():
+            if db is not None:
+                db.close()
+        self._dbs = {}
         try:
             self._data.release()
             self._buf.release()
@@ -412,12 +926,15 @@ class ShmRing:
                 self.shm.unlink()
             except FileNotFoundError:
                 pass
+            _remove_fifos(self.shm.name)
             _created_here.discard(self.shm.name)
 
     @staticmethod
     def cleanup(name: str) -> bool:
-        """Best-effort unlink of a segment left behind by an unclean
-        shutdown.  Returns True when a segment was removed."""
+        """Best-effort unlink of a segment (and its doorbell fifos) left
+        behind by an unclean shutdown.  Returns True when a segment was
+        removed."""
+        _remove_fifos(name)
         try:
             shm = shared_memory.SharedMemory(name=name, create=False)
         except FileNotFoundError:
@@ -449,31 +966,37 @@ class ShmRing:
 # mappings (same story as the encode BufferPool, at segment granularity):
 # the reader parks cleanly drained rings for the next lease, the writer
 # caches its attachment per segment name.  Unclean shutdowns still unlink
-# immediately.
+# immediately.  Broadcast rings pool too (keyed by slot count as well):
+# the creator slot parks once the writer and every peer slot are done,
+# and reset() re-reserves the whole slot table for the next group.
 
 _PARK_MAX = 4
-_parked: Dict[int, List[ShmRing]] = {}
+_parked: Dict[Tuple[int, bool], List[ShmRing]] = {}
+_bc_parked: Dict[Tuple[int, int, bool], List[ShmRing]] = {}
 _writer_cache: Dict[str, ShmRing] = {}  # segment name -> live attachment
 _park_lock = threading.Lock()
 
 
-def acquire_ring(capacity: int = DEFAULT_RING_CAPACITY) -> ShmRing:
-    """A reader-claimed ring of ``capacity``: a parked warm one if
+def acquire_ring(capacity: int = DEFAULT_RING_CAPACITY,
+                 doorbell: bool = True) -> ShmRing:
+    """A reader-claimed SPSC ring of ``capacity``: a parked warm one if
     available, else freshly created."""
+    want = bool(doorbell) and _DOORBELL_OK  # effective capability
+    key = (capacity, want)
     with _park_lock:
-        rings = _parked.get(capacity)
+        rings = _parked.get(key)
         ring = rings.pop() if rings else None
     if ring is not None:
         ring.reset()
         ring.claim("reader")
         return ring
-    return ShmRing.create(capacity=capacity, role="reader")
+    return ShmRing.create(capacity=capacity, role="reader", doorbell=want)
 
 
 def _park_ring(ring: ShmRing) -> bool:
     """Park an owner ring after a clean EOF.  Refuses (caller unlinks) when
     the writer side might still touch the segment or the pool is full."""
-    if ring.closed or not ring.owner:
+    if ring.closed or not ring.owner or ring.nreaders:
         return False
 
     def _writer_done() -> bool:
@@ -489,8 +1012,69 @@ def _park_ring(ring: ShmRing) -> bool:
         if time.monotonic() > deadline:
             return False  # writer still live and attached: do not recycle
         time.sleep(1e-4)
+    key = (ring.capacity, ring._u32(_OFF_DOORBELL) == _DB_FDS)
     with _park_lock:
-        rings = _parked.setdefault(ring.capacity, [])
+        rings = _parked.setdefault(key, [])
+        if len(rings) >= _PARK_MAX:
+            return False
+        rings.append(ring)
+    return True
+
+
+def acquire_broadcast_ring(capacity: int, readers: int,
+                           doorbell: bool = True) -> ShmRing:
+    """A creator-claimed (slot 0) broadcast ring: a parked warm one if
+    available — its slot table re-reserved by :meth:`ShmRing.reset` —
+    else freshly created."""
+    want = bool(doorbell) and _DOORBELL_OK
+    key = (capacity, readers, want)
+    with _park_lock:
+        rings = _bc_parked.get(key)
+        ring = rings.pop() if rings else None
+    if ring is not None:
+        ring.reset()
+        ring.claim("reader")
+        return ring
+    return ShmRing.create(capacity=capacity, role="reader", doorbell=want,
+                          readers=readers)
+
+
+def _park_broadcast(ring: ShmRing) -> bool:
+    """Park the creator slot's ring after a clean EOF — but only once the
+    writer and every *other* slot are demonstrably done (closed, evicted,
+    or their process gone), so no peer can touch the recycled segment.
+    Peers usually drain the same EOF within a millisecond; a brief
+    bounded poll covers the stragglers, anything slower unlinks as
+    before."""
+    if ring.closed or not ring.owner or not ring.nreaders:
+        return False
+
+    def _peers_done() -> bool:
+        writer_pid = ring._u32(_OFF_WRITER_PID)
+        if not (ring.writer_closed or writer_pid == 0
+                or not _pid_alive(writer_pid)):
+            return False
+        for i in range(ring.nreaders):
+            if i == ring.slot:
+                continue
+            off = ring._slot_off(i)
+            state = ring._u32(off + 12)
+            if state in (_SLOT_STATE_CLOSED, _SLOT_STATE_EVICTED):
+                continue
+            if (state == _SLOT_STATE_ATTACHED
+                    and not _pid_alive(ring._u32(off + 8))):
+                continue  # dead reader: it will never touch the segment
+            return False
+        return True
+
+    deadline = time.monotonic() + 0.02
+    while not _peers_done():
+        if time.monotonic() > deadline:
+            return False
+        time.sleep(5e-4)
+    key = (ring.capacity, ring.nreaders, ring._u32(_OFF_DOORBELL) == _DB_FDS)
+    with _park_lock:
+        rings = _bc_parked.setdefault(key, [])
         if len(rings) >= _PARK_MAX:
             return False
         rings.append(ring)
@@ -511,7 +1095,7 @@ def attach_ring(name: str) -> ShmRing:
 
 
 def _park_writer(ring: ShmRing) -> bool:
-    if ring.closed or ring.owner:
+    if ring.closed or ring.owner or ring.nreaders:
         return False
     with _park_lock:
         # a re-leased segment can briefly have two attachments in this
@@ -530,8 +1114,10 @@ def _park_writer(ring: ShmRing) -> bool:
 def _drain_parked() -> None:  # pragma: no cover - exercised at interpreter exit
     with _park_lock:
         rings = [r for lst in _parked.values() for r in lst]
+        rings += [r for lst in _bc_parked.values() for r in lst]
         rings += list(_writer_cache.values())
         _parked.clear()
+        _bc_parked.clear()
         _writer_cache.clear()
     for r in rings:
         r.close()
@@ -543,7 +1129,7 @@ atexit.register(_drain_parked)
 class ShmRingTransport(Transport):
     """Framed transport over a :class:`ShmRing` (the third transport, next
     to :class:`~repro.core.transport.SocketTransport` and
-    :class:`~repro.core.transport.ChannelTransport`).
+    :class:`~repro.core.transport.ChannelTransport`), SPSC or broadcast.
 
     Send path: one reserved span per frame, segments gathered straight into
     the mapped region — no queue materialization, no join.  Receive path:
@@ -553,7 +1139,8 @@ class ShmRingTransport(Transport):
     ``.decode()`` string handling keeps working.
 
     Header-byte accounting matches the other transports exactly: every
-    frame charges ``payload + 5`` to ``bytes_sent`` and to ``LinkSim``, so
+    frame charges ``payload + 5`` to ``bytes_sent`` and to ``LinkSim``
+    (the per-frame seqlock word is ring overhead, not wire bytes), so
     `PipeStats` and the fig. 15 link emulation stay comparable across
     socket/channel/shm.
     """
@@ -574,6 +1161,19 @@ class ShmRingTransport(Transport):
         self._sent_eof = False   # we published the writer-closed flag
         self._closed = False
 
+    # wait attribution for PipeStats (this side's ring instance)
+    @property
+    def doorbell_waits(self) -> int:
+        return self.ring.wakeups["doorbell"]
+
+    @property
+    def spin_wakeups(self) -> int:
+        return self.ring.wakeups["spin"]
+
+    @property
+    def poll_sleeps(self) -> int:
+        return self.ring.wakeups["poll"]
+
     def send_frames(self, kind: bytes, segments: Iterable[Buffer]) -> None:
         views = []
         payload_len = 0
@@ -586,7 +1186,7 @@ class ShmRingTransport(Transport):
                 mv = mv.cast("B")
             views.append((mv, n))
             payload_len += n
-        self._charge_link(payload_len + _FRAME.size)
+        self._charge_link(payload_len + _WIRE_HEADER)
         span = self.ring.begin_frame(kind, payload_len,
                                      timeout=self.send_timeout)
         off = 0
@@ -600,7 +1200,7 @@ class ShmRingTransport(Transport):
             # (instead of waiting on our transport close)
             self.ring.mark_closed("writer")
             self._sent_eof = True
-        self.bytes_sent += payload_len + _FRAME.size
+        self.bytes_sent += payload_len + _WIRE_HEADER
         self.frames_sent += 1
         self.shm_spans += 1
 
@@ -623,6 +1223,24 @@ class ShmRingTransport(Transport):
         if self._closed:  # a second close must not double-park the ring
             return
         self._closed = True
+        if self.ring.nreaders:
+            # a reader closes its slot (the creator parks the ring warm
+            # when the writer and every peer slot are already done, else
+            # unlinks — peers' live mappings survive the unlink); the
+            # writer marks itself closed so every reader drains to EOF
+            if self.ring.slot >= 0:
+                if self.ring.owner and self._clean_eof:
+                    self.ring.mark_closed("reader")
+                    if _park_broadcast(self.ring):
+                        return
+                    self.ring.close()
+                else:
+                    self.ring.reader_close()
+            else:
+                if not self._sent_eof and not self.ring.closed:
+                    self.ring.mark_closed("writer")
+                self.ring.close()
+            return
         if self.ring.owner:
             # a cleanly drained ring goes back to the pool warm (page
             # faults already paid); anything else unlinks right away

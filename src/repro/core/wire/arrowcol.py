@@ -35,22 +35,50 @@ from ..types import ColType, ColumnBlock, Schema
 from .base import WireFormat, register_wire_format, tobytes
 
 
+#: string columns ship each encoded part as its own scatter-gather
+#: segment (no heap materialization at all) while the whole *frame* stays
+#: under this many segments; past the budget — long columns, or wide
+#: blocks of many string columns — the per-part iovec bookkeeping would
+#: outweigh one gather, so the parts go into a single pooled store
+_STRING_SEG_CAP = 1024
+
+
 def _encode_string_col(col, n: int, pool: BufferPool, out: SegmentList) -> None:
     """Append offsets + heap segments for one string column.
 
     Single pass: each string is encoded exactly once; lengths fall out of
     the encoded parts (no second length-scan, no ascii re-check).  Offsets
-    are cumsummed straight into a pooled int32 store.
+    are cumsummed straight into a pooled int32 store.  The heap never
+    re-materializes through ``b"".join`` (the seed path's second full copy
+    of every string column): short columns ship the encoded parts as
+    individual segments — the transport's vectored send walks them — and
+    long columns gather them into one pooled store, so steady-state string
+    traffic allocates no fresh heap either way.
     """
     bparts: List[bytes] = [s.encode("utf-8", "surrogatepass") for s in col]
     off_buf = pool.acquire(4 * (n + 1))
     offsets = np.frombuffer(off_buf.store, np.int32, n + 1)
     offsets[0] = 0
+    heap_len = 0
     if n:
         lens = np.fromiter(map(len, bparts), np.int32, count=n)
         np.cumsum(lens, out=offsets[1:])
+        heap_len = int(offsets[n])
     out.append_pooled(off_buf)
-    out.append(b"".join(bparts))
+    if n + len(out.segments) <= _STRING_SEG_CAP:  # per-FRAME budget
+        for b in bparts:
+            if b:
+                out.append(b)
+        out.copies_avoided += 1  # the joined-heap copy never happened
+        return
+    heap_buf = pool.acquire(heap_len)
+    store = heap_buf.store
+    pos = 0
+    for b in bparts:
+        ln = len(b)
+        store[pos:pos + ln] = b
+        pos += ln
+    out.append_pooled(heap_buf)
 
 
 def _fixed_col_view(col, dtype: np.dtype, out: SegmentList) -> None:

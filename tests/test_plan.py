@@ -158,6 +158,7 @@ def test_explain_decision_snapshot():
         "fanin": 2,
         "negotiated": False,
         "depends_on": [],
+        "broadcast": None,
     }
     text = cp.explain()
     assert "partition=hash:key" in text and "streams=2" in text
@@ -272,6 +273,81 @@ def test_fanout_plan_runs_concurrently(transport):
     transfer(a2, "t", c2, "t3", config=cfg, timeout=60)
     assert _rows_sorted(b.get_block("t2")) == _rows_sorted(b2.get_block("t2"))
     assert _rows_sorted(c.get_block("t3")) == _rows_sorted(c2.get_block("t3"))
+
+
+# -- broadcast fan-out (one export over a shared shm ring) ---------------------
+
+
+def test_shm_fanout_compiles_to_single_broadcast_export():
+    """A→{B,C,D} over shm: the planner groups the three edges onto ONE
+    export feeding one broadcast ring — asserted via explain() and the
+    per-edge PipeStats (only the leader carries export stats, with one
+    stream's worth of encoded blocks)."""
+    blk = make_paper_block(2000, seed=21, strings=True)
+    set_directory(WorkerDirectory())
+    a = make_engine("colstore")
+    dsts = [make_engine("colstore") for _ in range(3)]
+    a.put_block("t", blk)
+    p = plan(negotiate=False)
+    for i, d in enumerate(dsts):
+        p.move(a, "t", d, f"t{i}", transport="shm",
+               config=PipeConfig(mode="arrowcol", block_rows=256))
+    cp = p.compile()
+    text = cp.explain()
+    assert "broadcast=b0[1-export,3 readers]" in text
+    assert text.count("broadcast=b0") == 3
+    assert [d["broadcast"] and d["broadcast"]["leader"]
+            for d in cp.describe()] == [True, False, False]
+    res = cp.execute()
+    assert res.ok
+    for i, d in enumerate(dsts):
+        assert _rows_sorted(d.get_block(f"t{i}")) == _rows_sorted(blk)
+    lead = res.edge("e0")
+    # exactly one export: one stream of ceil(2000/256) = 8 encoded blocks
+    assert lead.export_stats is not None and lead.export_stats.blocks == 8
+    assert res.edge("e1").export_stats is None
+    assert res.edge("e2").export_stats is None
+    # all three importers decoded in-place spans of the ONE ring
+    assert lead.import_stats.shm_spans >= 3 * 8
+
+
+def test_shm_fanout_broadcast_opt_out_runs_independent_exports():
+    """broadcast=False keeps the pre-PR behaviour: every edge exports for
+    itself (each edge carries its own export stats)."""
+    blk = make_paper_block(600, seed=22)
+    set_directory(WorkerDirectory())
+    a = make_engine("colstore")
+    dsts = [make_engine("colstore") for _ in range(2)]
+    a.put_block("t", blk)
+    p = plan(negotiate=False)
+    for i, d in enumerate(dsts):
+        p.move(a, "t", d, f"t{i}", transport="shm", broadcast=False,
+               config=PipeConfig(mode="arrowcol", block_rows=256))
+    cp = p.compile()
+    assert all(ep.broadcast_group is None for ep in cp.edges)
+    res = cp.execute()
+    assert res.ok
+    for eid in ("e0", "e1"):
+        assert res.edge(eid).export_stats is not None
+        assert res.edge(eid).export_stats.blocks == 3  # encoded per edge
+
+
+def test_mismatched_fanout_edges_not_broadcast_grouped():
+    """Edges that disagree on wire framing (block_rows) — or that aren't
+    shm at all — stay independent."""
+    a = make_engine("colstore")
+    b, c, d = (make_engine("colstore"), make_engine("colstore"),
+               make_engine("colstore"))
+    a.put_block("t", make_paper_block(100, seed=23))
+    cp = (plan(negotiate=False)
+          .move(a, "t", b, "t1", transport="shm",
+                config=PipeConfig(block_rows=128))
+          .move(a, "t", c, "t2", transport="shm",
+                config=PipeConfig(block_rows=256))
+          .move(a, "t", d, "t3", transport="socket",
+                config=PipeConfig(block_rows=128))
+          .compile())
+    assert all(ep.broadcast_group is None for ep in cp.edges)
 
 
 # -- streams × partition composition -------------------------------------------
