@@ -27,6 +27,7 @@ URI schemes (section 6.1).
 from __future__ import annotations
 
 import io
+import json
 import queue
 import re
 import socket
@@ -64,6 +65,7 @@ from .transport import (
     FRAME_BLOCK,
     FRAME_EOF,
     FRAME_PARTS,
+    FRAME_RESUME,
     FRAME_SCHEMA,
     FRAME_TEXT,
     FRAME_VERIFY,
@@ -89,7 +91,12 @@ __all__ = [
     "open_pipe_reader",
     "PipeStats",
     "collect_stats",
+    "clear_resume",
 ]
+
+#: data-carrying frame kinds — the only kinds counted by the resume
+#: watermark (schema/verify/resume/EOF are per-attempt control frames)
+_DATA_FRAME_KINDS = (FRAME_TEXT, FRAME_PARTS, FRAME_BLOCK)
 
 RESERVED_SCHEME = "db"
 RESERVED_TEMPLATE = "/tmp/__reserved__"
@@ -200,6 +207,18 @@ class PipeConfig:
     partition: Optional[str] = None  # N→M shuffle: hash[:col]|range[:col]|rr
     partition_bounds: Optional[Tuple] = None  # preset global range bounds
     fanin: int = 1  # importer-side: exporter streams to merge (shuffle)
+    # robustness knobs (set by the plan executor's retry policy).  ``resume``
+    # names the process-global resume ledger for this edge: stable across
+    # attempts, so a retried importer replays the data frames the previous
+    # attempt already received and registers its acked watermark for the
+    # exporter to skip to.  ``attempt`` is the retry epoch (0 = first try),
+    # echoed in the RESUME hello.  ``lease_s`` > 0 makes the importer's
+    # directory registration a leased one: a renewer thread re-stamps it
+    # while the importer is alive, and an expired lease is GC'd like a dead
+    # pid (crashed peers stop haunting the rendezvous).
+    resume: Optional[str] = None  # resume-ledger token (edge-stable)
+    attempt: int = 0  # retry epoch (0 = first try)
+    lease_s: float = 0.0  # directory lease TTL (0 = unleased)
 
     def meta(self) -> dict:
         return {
@@ -229,6 +248,12 @@ class PipeStats:
     doorbell_waits: int = 0      # waits resolved by a doorbell wakeup
     spin_wakeups: int = 0        # waits resolved during the brief spin
     poll_sleeps: int = 0         # backoff-poll sleeps (fallback path only)
+    # resumable edges: how much of a retried transfer was NOT re-moved.
+    # The exporter skips re-encoded frames the importer already acked
+    # (resume_skipped); the importer replays its staged prefix locally
+    # (resume_replayed).  Both zero on first attempts and non-resumed runs.
+    resume_skipped: int = 0      # exporter: data frames dropped at the cut
+    resume_replayed: int = 0     # importer: staged frames served locally
     # striped pipes: one dict per member stream ({stream, bytes, frames, ...});
     # merged views concatenate, so a shuffle's M members each contribute theirs
     per_stream: List[dict] = field(default_factory=list)
@@ -236,7 +261,8 @@ class PipeStats:
     _SUMMED = ("bytes_sent", "frames_sent", "rows", "blocks",
                "copies_avoided", "pool_hits", "pool_misses",
                "send_overlap_s", "decode_pool_hits", "decode_pool_misses",
-               "shm_spans", "doorbell_waits", "spin_wakeups", "poll_sleeps")
+               "shm_spans", "doorbell_waits", "spin_wakeups", "poll_sleeps",
+               "resume_skipped", "resume_replayed")
 
     def merge(self, other: "PipeStats") -> "PipeStats":
         """Fold ``other`` into this view (counters sum, per-stream
@@ -274,6 +300,42 @@ def collect_stats(dataset: str, query_id: str = "0") -> "dict[str, PipeStats]":
     transfer — aggregated across workers, shuffle members, and streams."""
     with _sink_lock:
         return _stats_sink.pop((dataset, query_id), {})
+
+
+# -- resume ledgers ------------------------------------------------------------
+# A resumable edge stages every *fully received* data frame (decompressed
+# payload bytes) under its ledger token.  A retry attempt opens a fresh
+# importer against the same token: the staged prefix replays locally, the
+# new registration carries ``resume_seq = len(staged)`` as the acked
+# watermark, and the exporter's RESUME hello says where it restarts so any
+# overlap (exporter behind the watermark) is deduped by count.  The plan
+# executor owns the token lifecycle and clears it once the edge settles.
+
+class _ResumeLedger:
+    __slots__ = ("staged", "lock")
+
+    def __init__(self) -> None:
+        self.staged: List[Tuple[bytes, bytes]] = []  # (kind, payload)
+        self.lock = threading.Lock()
+
+
+_resume_lock = threading.Lock()
+_RESUME_LEDGERS: "dict[str, _ResumeLedger]" = {}
+
+
+def _resume_ledger(token: str) -> _ResumeLedger:
+    with _resume_lock:
+        led = _RESUME_LEDGERS.get(token)
+        if led is None:
+            led = _RESUME_LEDGERS[token] = _ResumeLedger()
+        return led
+
+
+def clear_resume(token: str) -> None:
+    """Drop the staged frames of one edge (call when the edge settles —
+    success or final failure — so the ledger cannot leak across plans)."""
+    with _resume_lock:
+        _RESUME_LEDGERS.pop(token, None)
 
 
 class _PoolHandle:
@@ -315,6 +377,12 @@ class _PipelinedSender:
         self._q: "queue.Queue" = queue.Queue(maxsize=max(1, depth))
         self.busy_s = 0.0   # sender-thread time spent compressing/sending
         self.wait_s = 0.0   # producer time blocked on the bounded queue
+        # (start, end) spans, each list appended in time order by one
+        # thread: busy by the sender, blocked by the producer.  overlap_s
+        # intersects them, so sender work done while the producer ran free
+        # (including the post-final-submit drain) counts exactly once.
+        self._busy_iv: List[Tuple[float, float]] = []
+        self._blocked_iv: List[Tuple[float, float]] = []
         self.error: Optional[BaseException] = None
         self._thread = threading.Thread(
             target=self._run, name="pipegen-sender", daemon=True
@@ -331,7 +399,9 @@ class _PipelinedSender:
             # costs microseconds and would drown the overlap signal)
             t0 = time.perf_counter()
             self._q.put((kind, segs, compress))
-            self.wait_s += time.perf_counter() - t0
+            t1 = time.perf_counter()
+            self.wait_s += t1 - t0
+            self._blocked_iv.append((t0, t1))
 
     def _run(self) -> None:
         while True:
@@ -351,7 +421,9 @@ class _PipelinedSender:
                 self.error = e
             finally:
                 segs.release()  # recycle pooled stores on success AND error
-                self.busy_s += time.perf_counter() - t0
+                t1 = time.perf_counter()
+                self.busy_s += t1 - t0
+                self._busy_iv.append((t0, t1))
 
     def close(self) -> None:
         """Drain, join, and surface any latched send error."""
@@ -362,7 +434,24 @@ class _PipelinedSender:
 
     @property
     def overlap_s(self) -> float:
-        return max(0.0, self.busy_s - self.wait_s)
+        """Sender work hidden behind the producer: total busy time minus
+        the part spent while the producer sat blocked on the bounded
+        queue.  Interval intersection (not ``busy - wait``): a blocked
+        put also covers sender scheduling latency, which is not sender
+        work, and would otherwise cancel genuine overlap down to 0."""
+        busy = 0.0
+        inter = 0.0
+        j = 0
+        blocked = self._blocked_iv
+        for a, b in self._busy_iv:
+            busy += b - a
+            while j < len(blocked) and blocked[j][1] <= a:
+                j += 1
+            k = j
+            while k < len(blocked) and blocked[k][0] < b:
+                inter += min(b, blocked[k][1]) - max(a, blocked[k][0])
+                k += 1
+        return max(0.0, busy - inter)
 
 
 class DataPipeOutput:
@@ -408,6 +497,19 @@ class DataPipeOutput:
             self._transport: Transport = StripedSender(members)
         else:
             self._transport = _connect(endpoint, self.config.link)
+        # resumable edge: the importer's registration carries the acked
+        # watermark from the previous attempt; this export skips its first
+        # ``resume_seq`` data frames at the _send funnel (mode-agnostic —
+        # the engine re-produces the stream, the cut point is exact) and
+        # announces the restart position in a RESUME hello after the schema
+        self._resume_token: Optional[str] = None
+        self._resume_from = 0
+        self._resume_skip_left = 0
+        if (self.config.resume is not None and not endpoint.is_group
+                and getattr(endpoint, "broadcast", 0) <= 1):
+            self._resume_token = self.config.resume
+            self._resume_from = int(getattr(endpoint, "resume_seq", 0) or 0)
+            self._resume_skip_left = self._resume_from
         self._pool = _PoolHandle(self.config.pool or default_pool())
         self._sender: Optional[_PipelinedSender] = None
         if self.config.pipelined:
@@ -532,6 +634,12 @@ class DataPipeOutput:
         double-buffered sender thread (pipelined) or an inline vectored
         send.  ``scatter_gather=False`` re-materializes the payload first,
         reproducing the seed path's concatenate-then-send copy profile."""
+        if self._resume_skip_left and kind in _DATA_FRAME_KINDS:
+            # the importer acked this frame on a previous attempt
+            self._resume_skip_left -= 1
+            self.stats.resume_skipped += 1
+            segs.release()
+            return
         if not self.config.scatter_gather:
             payload = segs.join()
             segs.release()
@@ -713,11 +821,20 @@ class DataPipeOutput:
             meta["header"] = list(self._asm.header_names)
         self._send(FRAME_SCHEMA, SegmentList([encode_schema(schema, meta)]),
                    compress=False)
+        if self._resume_token is not None:
+            hello = json.dumps({"epoch": self.config.attempt,
+                                "from": self._resume_from}).encode("utf-8")
+            self._send(FRAME_RESUME, SegmentList([hello]), compress=False)
         self._schema_sent = True
 
     def _send_verify(self, rb: RowBlock) -> None:
         """Probabilistic runtime check: ship the original text rendering of
         the first n rows so the importer can compare (section 4.1)."""
+        if self._resume_from:
+            # resumed attempt: the verify region was checked (and staged)
+            # before the crash; re-sent expectations would misalign against
+            # the post-watermark blocks actually on the wire
+            return
         if self.config.text_format == "json":
             text = render_json(rb)
         else:
@@ -755,6 +872,9 @@ class DataPipeInput:
         streams: int = 1,
         fanin: int = 1,
         stream_window: int = DEFAULT_STREAM_WINDOW,
+        resume: Optional[str] = None,
+        attempt: int = 0,
+        lease_s: float = 0.0,
     ):
         rn = parse_reserved(filename)
         if rn is None:
@@ -771,6 +891,22 @@ class DataPipeInput:
             raise ValueError(
                 "broadcast pipes require transport='shm' with streams=1 "
                 "and fanin=1 (one ring, one writer, N reader cursors)")
+        # resumable edge (plain single-stream pipes only: stripes, shuffles
+        # and broadcast rings have per-member frame orders a single frame
+        # watermark cannot describe): stage received data frames under the
+        # ledger token and register the acked watermark for the exporter
+        self._ledger: Optional[_ResumeLedger] = None
+        self._replay_idx = 0
+        self._resume_base = 0
+        self._resume_skip = 0
+        if (resume is not None and fanin == 1 and streams == 1
+                and broadcast <= 1):
+            self._ledger = _resume_ledger(resume)
+            self._resume_base = len(self._ledger.staged)
+        _reg_kw: dict = {"lease_s": lease_s} if lease_s else {}
+        _res_kw: dict = (
+            {"resume_seq": self._resume_base, "resume_epoch": attempt}
+            if self._ledger is not None else {})
         if fanin > 1:
             self._transport: Transport = self._rendezvous_fanin(
                 rn, directory, transport, fanin, host, link, workers,
@@ -783,8 +919,8 @@ class DataPipeInput:
         elif transport == "channel":
             ch = channel if channel is not None else Channel()
             directory.register(
-                rn.dataset, Endpoint(channel=ch), rn.query_id,
-                import_workers=workers,
+                rn.dataset, Endpoint(channel=ch, **_res_kw), rn.query_id,
+                import_workers=workers, **_reg_kw,
             )
             self._transport = ChannelTransport(ch, link)
         elif transport == "shm" and broadcast > 1:
@@ -795,22 +931,41 @@ class DataPipeInput:
             ring = acquire_ring(shm_capacity, doorbell=shm_doorbell)
             directory.register(
                 rn.dataset,
-                Endpoint(shm_name=ring.name, shm_capacity=ring.capacity),
+                Endpoint(shm_name=ring.name, shm_capacity=ring.capacity,
+                         **_res_kw),
                 rn.query_id,
-                import_workers=workers,
+                import_workers=workers, **_reg_kw,
             )
             self._transport = ShmRingTransport(ring, link)
         else:
             lsock = listen_socket(host)
             h, p = lsock.getsockname()
             directory.register(
-                rn.dataset, Endpoint(h, p), rn.query_id,
-                import_workers=workers,
+                rn.dataset, Endpoint(h, p, **_res_kw), rn.query_id,
+                import_workers=workers, **_reg_kw,
             )
             lsock.settimeout(60.0)
             conn, _ = lsock.accept()
             lsock.close()
             self._transport = SocketTransport(conn, link)
+        # leased registration: keep re-stamping the directory entry while
+        # this importer is alive; if it dies (thread or process), renewals
+        # stop and the lease expires into the directory's dead-peer GC
+        self._renew_stop: Optional[threading.Event] = None
+        renew = getattr(directory, "renew", None)
+        if lease_s and renew is not None:
+            self._renew_stop = threading.Event()
+            period = max(0.05, lease_s / 3.0)
+
+            def _renew_loop(stop=self._renew_stop, fn=renew, rn=rn, p=period):
+                while not stop.wait(p):
+                    try:
+                        fn(rn.dataset, rn.query_id)
+                    except Exception:
+                        return  # directory gone: let the lease lapse
+
+            threading.Thread(target=_renew_loop, name="pipegen-lease-renew",
+                             daemon=True).start()
         self._arena = arena or DecodeArena()
         self.stats = PipeStats()
         self.schema: Optional[Schema] = None
@@ -1020,16 +1175,44 @@ class DataPipeInput:
     # -- frame pump (all protocols drain through here) -----------------------------
     def _recv_data_frame(self) -> Optional[Tuple[bytes, bytes]]:
         """Next (kind, decompressed payload) data frame, or None at EOF.
-        VERIFY frames are absorbed into the expected-text buffer."""
+        VERIFY frames are absorbed into the expected-text buffer.  On a
+        resumable edge the staged prefix (frames a previous attempt fully
+        received) replays first — no wire reads — then wire frames are
+        deduped against the watermark and staged as they arrive."""
+        led = self._ledger
+        if led is not None and self._replay_idx < len(led.staged):
+            kind, data = led.staged[self._replay_idx]
+            self._replay_idx += 1
+            self.stats.resume_replayed += 1
+            return kind, data
         while not self._eof:
             kind, payload = self._transport.recv_frame()
             if kind == FRAME_EOF:
                 self._eof = True
                 return None
+            if kind == FRAME_RESUME:
+                # exporter hello: it restarts at `from`; frames between
+                # that and our staged watermark arrive twice — drop them
+                doc = json.loads(bytes(payload).decode("utf-8"))
+                self._resume_skip = max(
+                    0, self._resume_base - int(doc.get("from", 0)))
+                continue
             if kind == FRAME_VERIFY:
+                if self._resume_base:
+                    continue  # verified (and staged) before the crash
                 self._verify_expected.extend(payload.decode("utf-8").splitlines())
                 continue
-            return kind, self._codec.decompress(payload)
+            data = self._codec.decompress(payload)
+            if led is not None:
+                if self._resume_skip:
+                    self._resume_skip -= 1
+                    continue  # duplicate of a staged frame
+                # copy: shm payloads are live ring spans consumed by the
+                # next recv, and a staged frame must outlive this attempt
+                with led.lock:
+                    led.staged.append((kind, bytes(data)))
+                self._replay_idx = len(led.staged)
+            return kind, data
         return None
 
     def _next_block(self) -> Optional[ColumnBlock]:
@@ -1305,6 +1488,8 @@ class DataPipeInput:
             yield line
 
     def close(self) -> None:
+        if self._renew_stop is not None:
+            self._renew_stop.set()
         self.stats.decode_pool_hits = self._arena.hits
         self.stats.decode_pool_misses = self._arena.misses
         self.stats.shm_spans = getattr(self._transport, "shm_spans", 0)

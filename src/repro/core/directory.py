@@ -53,6 +53,7 @@ import time
 from dataclasses import dataclass, field, replace as _dc_replace
 from typing import Dict, List, Optional, Tuple, Union
 
+from . import faults
 from .transport import (
     FRAME_EOF,
     Channel,
@@ -84,6 +85,14 @@ class Endpoint:
     reader cursor slots — the exporter sends every frame once and R
     colocated importers consume it from the same segment.  ``pid`` is
     the registrant, stamped by the directory for dead-worker GC.
+
+    ``resume_seq``/``resume_epoch`` carry the importer's acknowledged
+    data-frame watermark into a re-registration after a failed attempt:
+    the exporter that pops this endpoint restarts its stream from
+    ``resume_seq`` (and says so in a RESUME hello) instead of frame 0.
+    ``lease_deadline`` is stamped by the directory (its own monotonic
+    clock) when leases are enabled; an entry whose lease expires without
+    a renewal is GC'd exactly like a dead registrant.
     """
 
     host: str = ""
@@ -95,6 +104,9 @@ class Endpoint:
     shared: bool = False               # multiple exporters attach (shuffle)
     broadcast: int = 0                 # shm fan-out: reader slot count
     pid: int = 0                       # registrant, for dead-worker GC
+    resume_seq: int = 0                # acked data frames (resumed edges)
+    resume_epoch: int = 0              # attempt number of this registration
+    lease_deadline: float = 0.0        # directory-stamped TTL (0 = no lease)
 
     @property
     def is_channel(self) -> bool:
@@ -127,16 +139,35 @@ class _QueryState:
 
 
 class WorkerDirectory:
-    """In-process, thread-safe worker directory."""
+    """In-process, thread-safe worker directory.
 
-    def __init__(self, multiplex: bool = False):
+    ``lease_ttl`` (seconds) puts every registration on a lease: the
+    directory stamps a deadline at register time, live peers extend it
+    with :meth:`renew`, and :meth:`_gc_dead_locked` treats an expired
+    lease exactly like a dead registrant — the entry is dropped and its
+    shm segment/doorbell fifos are released.  Leases catch what the pid
+    probe cannot: hung-but-alive registrants, and (behind a
+    DirectoryServer) registrants on hosts where a local pid probe is
+    meaningless."""
+
+    def __init__(self, multiplex: bool = False,
+                 lease_ttl: Optional[float] = None):
         self._lock = threading.Condition()
         self._queries: Dict[Tuple[str, str], _QueryState] = {}
         self.multiplex = multiplex
+        self.lease_ttl = lease_ttl
         self._all_popped: Dict[Tuple[str, str], List[Endpoint]] = {}
 
     def _state(self, dataset: str, query_id: str) -> _QueryState:
         return self._queries.setdefault((dataset, query_id), _QueryState())
+
+    def _stamp_lease(self, endpoint: Endpoint,
+                     lease_s: Optional[float]) -> Endpoint:
+        ttl = lease_s if lease_s else self.lease_ttl
+        if ttl:
+            endpoint = _dc_replace(
+                endpoint, lease_deadline=time.monotonic() + ttl)
+        return endpoint
 
     # -- importer side ---------------------------------------------------------
     def register(
@@ -145,9 +176,12 @@ class WorkerDirectory:
         endpoint: Endpoint,
         query_id: str = "0",
         import_workers: Optional[int] = None,
+        lease_s: Optional[float] = None,
     ) -> None:
+        _rpc_fault("register")
         if endpoint.pid == 0:
             endpoint = _dc_replace(endpoint, pid=os.getpid())
+        endpoint = self._stamp_lease(endpoint, lease_s)
         with self._lock:
             st = self._state(dataset, query_id)
             st.entries.append(endpoint)
@@ -166,6 +200,7 @@ class WorkerDirectory:
         timeout: float = 30.0,
     ) -> Endpoint:
         """Blocks until an importer endpoint is available, then pops it."""
+        _rpc_fault("query")
         deadline = time.monotonic() + timeout
         with self._lock:
             st = self._state(dataset, query_id)
@@ -331,17 +366,75 @@ class WorkerDirectory:
                         target=_send_stub_eof, args=(ep,), daemon=True
                     ).start()
 
+    # -- leases ------------------------------------------------------------------
+    def renew(self, dataset: str, query_id: str = "0",
+              pid: Optional[int] = None,
+              lease_s: Optional[float] = None) -> int:
+        """Extend the lease on every entry ``pid`` registered under
+        (dataset, query).  Returns the number of entries renewed (0 means
+        the lease already expired and was GC'd — the caller must
+        re-register)."""
+        _rpc_fault("renew")
+        pid = pid or os.getpid()
+        ttl = lease_s if lease_s else self.lease_ttl
+        if not ttl:
+            return 0
+        deadline = time.monotonic() + ttl
+        renewed = 0
+        with self._lock:
+            st = self._queries.get((dataset, query_id))
+            if st is None:
+                return 0
+            for i, ep in enumerate(st.entries):
+                if ep.pid == pid and ep.lease_deadline:
+                    st.entries[i] = _dc_replace(ep, lease_deadline=deadline)
+                    renewed += 1
+            if (st.bc_ep is not None and st.bc_ep.pid == pid
+                    and st.bc_ep.lease_deadline):
+                st.bc_ep = _dc_replace(st.bc_ep, lease_deadline=deadline)
+                renewed += 1
+        return renewed
+
+    def sweep(self, orphan_min_age_s: float = 30.0) -> List[str]:
+        """Lease/death sweep across every query state, then the shm crash
+        sweep: segments whose every registered pid is dead, and doorbell
+        fifos whose segment is gone, are unlinked even when no directory
+        entry ever pointed at them (a worker can die between ring
+        creation and registration).  Returns the swept shm/fifo names."""
+        with self._lock:
+            for st in self._queries.values():
+                self._gc_dead_locked(st)
+        from .shm_ring import sweep_orphans
+
+        return sweep_orphans(min_age_s=orphan_min_age_s)
+
     # -- dead-worker hygiene -----------------------------------------------------
+    @staticmethod
+    def _entry_dead(ep: Endpoint, now: float) -> bool:
+        if ep.lease_deadline and now > ep.lease_deadline:
+            return True
+        return not _registrant_alive(ep)
+
     def _gc_dead_locked(self, st: _QueryState) -> None:
-        """Drop entries registered by processes that no longer exist and
-        release the transport resources (shm segments) they leaked."""
-        dead = [ep for ep in st.entries if not _registrant_alive(ep)]
-        if not dead:
-            return
-        st.entries[:] = [ep for ep in st.entries if _registrant_alive(ep)]
-        st.registered -= len(dead)
-        for ep in dead:
-            _release_endpoint(ep)
+        """Drop entries registered by processes that no longer exist (or
+        whose lease expired) and release the transport resources (shm
+        segments *and* doorbell fifos) they leaked.  The published
+        broadcast endpoint is swept too: a dead creator's ring must not
+        be handed to later joiners, nor leak its segment."""
+        now = time.monotonic()
+        dead = [ep for ep in st.entries if self._entry_dead(ep, now)]
+        if dead:
+            st.entries[:] = [ep for ep in st.entries
+                             if not self._entry_dead(ep, now)]
+            st.registered -= len(dead)
+            for ep in dead:
+                _release_endpoint(ep)
+        if st.bc_ep is not None and self._entry_dead(st.bc_ep, now):
+            bc = st.bc_ep
+            st.bc_ep = None  # waiting joiners now time out loudly
+            if not any(e is bc or (bc.is_shm and e.shm_name == bc.shm_name)
+                       for e in dead):
+                _release_endpoint(bc)
 
     # -- bookkeeping -------------------------------------------------------------
     def reset(self, dataset: Optional[str] = None) -> None:
@@ -360,6 +453,14 @@ class WorkerDirectory:
             for k in [k for k in self._all_popped
                       if dataset is None or k[0] == dataset]:
                 del self._all_popped[k]
+
+
+def _rpc_fault(op: str) -> None:
+    """Fault hook shared by the in-process directory and the RPC client:
+    a "drop" rule makes the operation vanish mid-flight."""
+    if faults._ACTIVE is not None:
+        if faults.fire("directory.rpc", op=op) == "drop":
+            raise ConnectionResetError(f"injected: directory {op} dropped")
 
 
 def _registrant_alive(ep: Endpoint) -> bool:
@@ -417,6 +518,8 @@ def _ep_to_doc(ep: Endpoint) -> dict:
         "shared": ep.shared,
         "broadcast": ep.broadcast,
         "pid": ep.pid,
+        "resume_seq": ep.resume_seq,
+        "resume_epoch": ep.resume_epoch,
         "members": [_ep_to_doc(m) for m in ep.members],
     }
 
@@ -430,15 +533,25 @@ def _ep_from_doc(doc: dict) -> Endpoint:
         shared=bool(doc.get("shared", False)),
         broadcast=int(doc.get("broadcast", 0)),
         pid=int(doc.get("pid", 0)),
+        resume_seq=int(doc.get("resume_seq", 0)),
+        resume_epoch=int(doc.get("resume_epoch", 0)),
         members=tuple(_ep_from_doc(m) for m in doc.get("members", [])),
     )
 
 
 class DirectoryServer:
-    """Tiny JSON-lines TCP server exposing register/query across processes."""
+    """Tiny JSON-lines TCP server exposing register/query across processes.
 
-    def __init__(self, host: str = "127.0.0.1", port: int = 0):
-        self.directory = WorkerDirectory()
+    With ``lease_ttl`` set, registrations are leased and a background
+    reaper runs :meth:`WorkerDirectory.sweep` every ``sweep_every``
+    seconds (default ttl/2): expired/dead entries are GC'd and orphaned
+    shm segments and doorbell fifos crash-swept, so a SIGKILL'd worker's
+    leavings disappear within about one TTL instead of accumulating."""
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 0,
+                 lease_ttl: Optional[float] = None,
+                 sweep_every: Optional[float] = None):
+        self.directory = WorkerDirectory(lease_ttl=lease_ttl)
         self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self._sock.bind((host, port))
@@ -446,10 +559,23 @@ class DirectoryServer:
         self.host, self.port = self._sock.getsockname()
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._serve, daemon=True)
+        self._sweep_every = sweep_every or (lease_ttl / 2 if lease_ttl
+                                            else None)
+        self._reaper: Optional[threading.Thread] = None
 
     def start(self) -> "DirectoryServer":
         self._thread.start()
+        if self._sweep_every:
+            self._reaper = threading.Thread(target=self._reap, daemon=True)
+            self._reaper.start()
         return self
+
+    def _reap(self) -> None:
+        while not self._stop.wait(self._sweep_every):
+            try:
+                self.directory.sweep()
+            except Exception:  # pragma: no cover - sweep must never kill us
+                pass
 
     def stop(self) -> None:
         self._stop.set()
@@ -481,8 +607,17 @@ class DirectoryServer:
                     _ep_from_doc(req),
                     req.get("query_id", "0"),
                     req.get("import_workers"),
+                    lease_s=req.get("lease_s"),
                 )
                 resp = {"ok": True}
+            elif req["op"] == "renew":
+                n = self.directory.renew(
+                    req["dataset"],
+                    req.get("query_id", "0"),
+                    pid=req.get("pid"),
+                    lease_s=req.get("lease_s"),
+                )
+                resp = {"ok": True, "renewed": n}
             elif req["op"] == "query":
                 try:
                     ep = self.directory.query(
@@ -549,6 +684,7 @@ class DirectoryClient:
         self.addr = (host, port)
 
     def _rpc(self, req: dict) -> dict:
+        _rpc_fault(req.get("op", "?"))
         s = socket.create_connection(self.addr, timeout=60.0)
         f = s.makefile("rwb")
         f.write(json.dumps(req).encode() + b"\n")
@@ -563,6 +699,7 @@ class DirectoryClient:
         endpoint: Endpoint,
         query_id: str = "0",
         import_workers: Optional[int] = None,
+        lease_s: Optional[float] = None,
     ) -> None:
         if endpoint.pid == 0:
             endpoint = _dc_replace(endpoint, pid=os.getpid())
@@ -572,9 +709,28 @@ class DirectoryClient:
                 "dataset": dataset,
                 "query_id": query_id,
                 "import_workers": import_workers,
+                "lease_s": lease_s,
                 **_ep_to_doc(endpoint),
             }
         )
+
+    def renew(
+        self,
+        dataset: str,
+        query_id: str = "0",
+        pid: Optional[int] = None,
+        lease_s: Optional[float] = None,
+    ) -> int:
+        resp = self._rpc(
+            {
+                "op": "renew",
+                "dataset": dataset,
+                "query_id": query_id,
+                "pid": pid or os.getpid(),
+                "lease_s": lease_s,
+            }
+        )
+        return int(resp.get("renewed", 0))
 
     def query(
         self,

@@ -1,0 +1,261 @@
+"""Deterministic, seeded fault injection for the pipe fabric.
+
+Files gave PipeGen's predecessors restartability for free; pipes have to
+earn it.  Earning it starts with being able to *cause* every failure the
+recovery machinery claims to handle, on demand and reproducibly — not
+only via SIGKILL races in multiprocess tests.  This module is that
+switchboard: a :class:`FaultPlan` holds seeded rules, the fabric calls
+:func:`fire` at a small set of named hook points, and the plan decides
+per event whether to kill a peer, drop/corrupt/duplicate a frame, break
+a doorbell, fail a ``sendmsg`` with a transient errno, or eat a
+directory RPC.
+
+Hook sites (``site`` strings, with the context keys each supplies):
+
+    transport.send      transport=socket|channel|shm|stripe, kind=b"B"...
+    transport.recv      transport=socket|channel|shm, kind not yet known
+    stream.send         kind (striped fabric, before seq-tagging)
+    shm.doorbell.open   (action "break" -> waiter falls back to polling)
+    shm.doorbell.ring   (action "drop" skips the ring; "delay" sleeps)
+    directory.rpc       op=register|query|renew|... (client side)
+
+The hot path stays cheap: every hook site checks ``faults._ACTIVE is
+None`` inline before calling in.  With no plan active the cost is one
+module-attribute load per frame.
+
+Determinism: rules either fire on the Nth matching event (``at``, a
+per-rule counter) or probabilistically via a ``random.Random(seed)``
+owned by the plan.  Both are reproducible for a fixed seed and a fixed
+per-thread event order; tests that need exact frame arithmetic should
+use ``at`` rules.
+
+Injected exceptions:
+
+    InjectedPeerDeath   subclass of BrokenPipeError — a "kill" rule.  The
+                        pipe layer treats it as the peer's process dying:
+                        the transport is closed (fds die with a process)
+                        and the error surfaces to the plan executor,
+                        whose retry policy may resume the edge.
+    OSError(errno,...)  a "fail_errno" rule (transient sendmsg failure).
+"""
+
+from __future__ import annotations
+
+import random
+import threading
+import time
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+__all__ = [
+    "FaultPlan",
+    "FaultRule",
+    "InjectedPeerDeath",
+    "fire",
+    "active",
+    "use",
+    "suppressed",
+]
+
+
+class InjectedPeerDeath(BrokenPipeError):
+    """A fault-plan "kill": the peer process is gone mid-stream."""
+
+
+# actions a site must cooperate with (returned from fire()); "kill",
+# "errno" and "delay" are handled inside fire() itself
+_SITE_ACTIONS = frozenset({"drop", "dup", "corrupt", "break"})
+
+
+@dataclass
+class FaultRule:
+    """One injection rule.  ``at`` is 1-based over *matching* events;
+    ``at=0`` means every eligible event (gated by ``prob``/``count``)."""
+
+    site: str
+    action: str                 # kill|drop|dup|corrupt|delay|errno|break
+    at: int = 0
+    count: int = 1              # max fires; -1 = unlimited
+    prob: float = 1.0           # used only when at == 0
+    err: int = 0                # errno for action == "errno"
+    delay_s: float = 0.0
+    where: Dict[str, Any] = field(default_factory=dict)
+    seen: int = 0
+    fired: int = 0
+
+    def matches(self, site: str, ctx: Dict[str, Any]) -> bool:
+        if site != self.site and not site.startswith(self.site + "."):
+            return False
+        for k, v in self.where.items():
+            if ctx.get(k) != v:
+                return False
+        return True
+
+
+class FaultPlan:
+    """A seeded set of fault rules plus a log of what actually fired."""
+
+    def __init__(self, seed: int = 0, rules: Iterable[FaultRule] = ()):
+        self.seed = seed
+        self.rules: List[FaultRule] = list(rules)
+        self.events: List[Tuple[str, str, Dict[str, Any]]] = []  # (site, action, ctx)
+        self._rng = random.Random(seed)
+        self._lock = threading.Lock()
+
+    # -- builders (chainable) -------------------------------------------------
+    def add(self, rule: FaultRule) -> "FaultPlan":
+        self.rules.append(rule)
+        return self
+
+    def kill(self, site: str, at: int = 0, count: int = 1,
+             prob: float = 1.0, **where: Any) -> "FaultPlan":
+        return self.add(FaultRule(site, "kill", at=at, count=count,
+                                  prob=prob, where=where))
+
+    def drop(self, site: str, at: int = 0, count: int = 1,
+             prob: float = 1.0, **where: Any) -> "FaultPlan":
+        return self.add(FaultRule(site, "drop", at=at, count=count,
+                                  prob=prob, where=where))
+
+    def duplicate(self, site: str, at: int = 0, count: int = 1,
+                  prob: float = 1.0, **where: Any) -> "FaultPlan":
+        return self.add(FaultRule(site, "dup", at=at, count=count,
+                                  prob=prob, where=where))
+
+    def corrupt(self, site: str, at: int = 0, count: int = 1,
+                prob: float = 1.0, **where: Any) -> "FaultPlan":
+        return self.add(FaultRule(site, "corrupt", at=at, count=count,
+                                  prob=prob, where=where))
+
+    def delay(self, site: str, delay_s: float, at: int = 0, count: int = -1,
+              prob: float = 1.0, **where: Any) -> "FaultPlan":
+        return self.add(FaultRule(site, "delay", at=at, count=count,
+                                  prob=prob, delay_s=delay_s, where=where))
+
+    def fail_errno(self, site: str, err: int, at: int = 0, count: int = 1,
+                   prob: float = 1.0, **where: Any) -> "FaultPlan":
+        return self.add(FaultRule(site, "errno", at=at, count=count,
+                                  prob=prob, err=err, where=where))
+
+    def break_doorbell(self, count: int = -1) -> "FaultPlan":
+        """Make doorbells un-openable: waiters degrade to capped polling."""
+        return self.add(FaultRule("shm.doorbell.open", "break", count=count))
+
+    def drop_rpc(self, op: Optional[str] = None, at: int = 0,
+                 count: int = 1) -> "FaultPlan":
+        where = {"op": op} if op is not None else {}
+        return self.add(FaultRule("directory.rpc", "drop", at=at,
+                                  count=count, where=where))
+
+    # -- introspection --------------------------------------------------------
+    def fired(self, site: Optional[str] = None) -> int:
+        return sum(1 for s, _a, _c in self.events
+                   if site is None or s == site or s.startswith(site + "."))
+
+    # -- the hook entry point -------------------------------------------------
+    def _fire(self, site: str, ctx: Dict[str, Any]) -> Optional[str]:
+        act = None
+        rule = None
+        with self._lock:
+            for r in self.rules:
+                if not r.matches(site, ctx):
+                    continue
+                r.seen += 1
+                if r.count != -1 and r.fired >= r.count:
+                    continue
+                if r.at:
+                    if r.seen != r.at:
+                        continue
+                elif r.prob < 1.0 and self._rng.random() >= r.prob:
+                    continue
+                r.fired += 1
+                act, rule = r.action, r
+                break
+            if act is not None:
+                self.events.append((site, act, dict(ctx)))
+        if act is None:
+            return None
+        if act == "delay":
+            time.sleep(rule.delay_s)
+            return None
+        if act == "kill":
+            raise InjectedPeerDeath(
+                f"injected peer death at {site} (event {rule.seen})")
+        if act == "errno":
+            raise OSError(rule.err, f"injected transient failure at {site}")
+        return act  # site-handled: drop / dup / corrupt / break
+
+    # -- activation -----------------------------------------------------------
+    def __enter__(self) -> "FaultPlan":
+        global _ACTIVE
+        self._prev = _ACTIVE
+        _ACTIVE = self
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        global _ACTIVE
+        _ACTIVE = self._prev
+
+
+_ACTIVE: Optional[FaultPlan] = None
+_local = threading.local()
+
+
+def active() -> Optional[FaultPlan]:
+    return _ACTIVE
+
+
+@contextmanager
+def use(plan: Optional[FaultPlan]):
+    """Activate ``plan`` process-wide for the duration of the block."""
+    global _ACTIVE
+    prev = _ACTIVE
+    _ACTIVE = plan
+    try:
+        yield plan
+    finally:
+        _ACTIVE = prev
+
+
+@contextmanager
+def suppressed():
+    """Mask hooks on this thread (used by sites re-entering the send path
+    to apply a dup/corrupt verdict without re-firing the rules)."""
+    prev = getattr(_local, "off", False)
+    _local.off = True
+    try:
+        yield
+    finally:
+        _local.off = prev
+
+
+def fire(site: str, **ctx: Any) -> Optional[str]:
+    """Consult the active plan at a hook site.  Returns a site-handled
+    action ("drop"/"dup"/"corrupt"/"break") or None; raises for "kill"
+    and "errno"; sleeps inline for "delay"."""
+    plan = _ACTIVE
+    if plan is None or getattr(_local, "off", False):
+        return None
+    return plan._fire(site, ctx)
+
+
+def send_plan(transport: str, kind: bytes, segments: Iterable[Any]):
+    """Shared send-site helper.  Returns ``None`` when the frame should
+    take the normal (zero-copy) path, or a list of replacement payloads
+    (0 = drop, 1 = corrupted, 2 = duplicated) the site must send via its
+    own plain path under :func:`suppressed`.  May raise (kill/errno)."""
+    act = fire("transport.send", transport=transport, kind=kind)
+    if act is None or act not in _SITE_ACTIONS:
+        return None
+    if act == "drop":
+        return []
+    payload = b"".join(bytes(s) for s in segments)
+    if act == "corrupt":
+        buf = bytearray(payload)
+        if buf:
+            buf[len(buf) // 2] ^= 0xFF
+        else:
+            buf = bytearray(b"\xff")
+        return [bytes(buf)]
+    return [payload, payload]  # dup

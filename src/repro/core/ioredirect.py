@@ -224,6 +224,9 @@ def pipegen_open(
                              arena=cfg.decode_arena,
                              streams=cfg.streams,
                              fanin=cfg.fanin,
-                             stream_window=cfg.stream_window)
+                             stream_window=cfg.stream_window,
+                             resume=cfg.resume,
+                             attempt=cfg.attempt,
+                             lease_s=cfg.lease_s)
         return _PipeBytesReader(pipe) if binary else pipe
     return (real_open or builtins.open)(filename, mode, **kw)

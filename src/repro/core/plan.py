@@ -41,6 +41,7 @@ back-compat shims over a one-edge plan.
 
 from __future__ import annotations
 
+import random
 import threading
 import time
 from dataclasses import dataclass, field, fields as dc_fields, replace
@@ -137,7 +138,7 @@ def chain_exceptions(excs: Sequence[BaseException]) -> BaseException:
 #: edge opts out with ``broadcast=False``.
 _EDGE_KEYS = frozenset(
     ("workers", "import_workers", "timeout", "via", "dataset", "config",
-     "broadcast"))
+     "broadcast", "retries", "backoff", "deadline", "failover", "resume"))
 _PIPE_KEYS = frozenset(f.name for f in dc_fields(PipeConfig))
 _VIA = ("pipe", "files")
 
@@ -183,6 +184,17 @@ class EdgePlan:
     broadcast: int = 0               # group size (0 = ordinary edge)
     broadcast_group: Optional[str] = None
     broadcast_leader: bool = False
+    # retry policy (the executor's self-healing loop): up to 1 + retries
+    # attempts with exponential backoff + seeded jitter, a deadline budget
+    # shared across attempts, and — on transport faults — a shm/channel →
+    # socket failover ladder.  ``resume`` gates the per-edge ledger that
+    # lets attempt k+1 replay locally what attempt k already received and
+    # ask the exporter for only the un-acked tail (plain 1:1 edges).
+    retries: int = 0
+    backoff_s: float = 0.05
+    deadline_s: Optional[float] = None
+    failover: bool = True
+    resume: bool = True
     broadcast_allowed: bool = field(repr=False, default=True)
     dataset_explicit: bool = field(repr=False, default=False)
     config: PipeConfig = field(repr=False, default=None)
@@ -210,6 +222,8 @@ class EdgePlan:
                 else ("deferred" if self.bounds_deferred else None)),
             "fanin": self.fanin,
             "negotiated": self.negotiated,
+            "retries": self.retries,
+            "resume": self.resume,
             "depends_on": list(self.depends_on),
             "broadcast": (
                 {"group": self.broadcast_group, "readers": self.broadcast,
@@ -242,6 +256,13 @@ class EdgePlan:
                     f"broadcast={self.broadcast_group}"
                     f"[{'1-export' if self.broadcast_leader else 'shared'}"
                     f",{self.broadcast} readers]")
+            if self.retries:
+                bits.append(
+                    f"retries={self.retries}"
+                    + (f" deadline={self.deadline_s:g}s"
+                       if self.deadline_s else "")
+                    + ("" if self.resume else " resume=off")
+                    + ("" if self.failover else " failover=off"))
         else:
             bits.append(f"workers={self.workers}")
         if self.depends_on:
@@ -418,6 +439,22 @@ class TransferPlan:
                 f"edge e{i}: broadcast takes True/False (opt in/out of "
                 f"fan-out grouping — the planner derives the reader "
                 f"count from the group), got {broadcast_allowed!r}")
+        retries = int(opts.pop("retries", 0))
+        if retries < 0:
+            raise PlanError(f"edge e{i}: retries must be >= 0")
+        backoff = float(opts.pop("backoff", 0.05))
+        if backoff < 0:
+            raise PlanError(f"edge e{i}: backoff must be >= 0")
+        deadline_opt = opts.pop("deadline", None)
+        deadline_s = float(deadline_opt) if deadline_opt is not None else None
+        if deadline_s is not None and deadline_s <= 0:
+            raise PlanError(f"edge e{i}: deadline must be > 0")
+        failover = bool(opts.pop("failover", True))
+        resume = opts.pop("resume", True)
+        if not isinstance(resume, bool):
+            raise PlanError(
+                f"edge e{i}: resume takes True/False (the executor derives "
+                f"the ledger token per run), got {resume!r}")
         workers = int(opts.pop("workers", 1))
         import_workers = opts.pop("import_workers", None)
         timeout = float(opts.pop("timeout", 120.0))
@@ -426,6 +463,11 @@ class TransferPlan:
         dataset = dataset or f"{e.src.name}2{e.dst.name}"
         base = opts.pop("config", None)
         pipe_overrides = {k: v for k, v in opts.items() if k in _PIPE_KEYS}
+        if via == "files" and (retries or deadline_s is not None):
+            # the retry loop wraps the pipe rendezvous; the file baseline
+            # has no peer to resume against
+            raise PlanError(
+                f"edge e{i}: via='files' does not take a retry policy")
         if via == "files" and (pipe_overrides or base is not None
                                or import_workers is not None):
             # a file edge never opens pipes: pipe knobs silently ignored
@@ -484,6 +526,8 @@ class TransferPlan:
             bounds_deferred=bounds_deferred, fanin=cfg.fanin,
             dataset=dataset, timeout=timeout,
             negotiated=negotiated,
+            retries=retries, backoff_s=backoff, deadline_s=deadline_s,
+            failover=failover, resume=resume,
             depends_on=tuple(f"e{j}" for j in sorted(deps)),
             broadcast_allowed=broadcast_allowed,
             dataset_explicit=dataset_explicit,
@@ -697,10 +741,24 @@ def _run_edge(ep: EdgePlan, query_id: str):
         return None, [e]
 
 
-def _run_pipe_edge(ep: EdgePlan, query_id: str):
-    from .session import TransferResult, adapter_for
+def _transport_fault(excs: Sequence[BaseException]) -> bool:
+    """True when any failure looks like the transport (not the data or
+    the engine) let the edge down — the failover ladder's trigger."""
+    return any(isinstance(e, (OSError, TimeoutError)) for e in excs)
 
-    src, dst = ep.src_engine, ep.dst_engine
+
+def _run_pipe_edge(ep: EdgePlan, query_id: str):
+    """The self-healing wrapper: run :func:`_run_pipe_attempt` up to
+    ``1 + ep.retries`` times.  Each retry gets a fresh query id (the
+    directory's per-(dataset, query) rendezvous state is single-use), a
+    bumped ``attempt`` epoch, and — on resumable edges — the shared
+    resume-ledger token, so the new importer replays the staged prefix
+    and the new exporter skips to the acked watermark instead of
+    re-moving the whole relation.  Backoff is exponential with seeded
+    jitter; ``deadline`` bounds the whole loop; on transport faults a
+    shm/channel edge fails over to the socket rendezvous."""
+    from .datapipe import clear_resume
+
     config = ep.config
     if ep.bounds_deferred:
         # the source relation now exists (its producer edge ran): sample
@@ -709,9 +767,69 @@ def _run_pipe_edge(ep: EdgePlan, query_id: str):
         # re-ran too); ep.partition_bounds is updated for observability.
         part = parse_partition(ep.partition)
         bounds = tuple(compute_range_bounds(
-            src.get_block(ep.table), part.key, ep.import_workers))
+            ep.src_engine.get_block(ep.table), part.key, ep.import_workers))
         config = replace(config, partition_bounds=bounds)
         ep.partition_bounds = bounds
+    max_attempts = 1 + max(0, ep.retries)
+    # resume needs a single 1:1 pipe: stripes/shuffles/broadcasts have
+    # per-member frame orders one watermark cannot describe
+    resumable = (ep.resume and max_attempts > 1 and ep.streams == 1
+                 and ep.fanin == 1 and not ep.partition
+                 and not ep.broadcast_group
+                 and ep.workers == 1 and ep.import_workers == 1)
+    token = f"{ep.dataset}:{query_id}:{ep.edge_id}" if resumable else None
+    rng = random.Random(hash((ep.dataset, query_id, ep.edge_id)) & 0x7FFFFFFF)
+    deadline = (time.monotonic() + ep.deadline_s) if ep.deadline_s else None
+    transport = config.transport
+    attempts: List[dict] = []
+    history: List[str] = []
+    result = None
+    excs: List[BaseException] = []
+    try:
+        for k in range(max_attempts):
+            qid = query_id if k == 0 else f"{query_id}a{k}"
+            cfg = replace(config, transport=transport, resume=token,
+                          attempt=k)
+            t0 = time.monotonic()
+            result, excs = _run_pipe_attempt(ep, cfg, qid)
+            rec = {"attempt": k, "query_id": qid, "transport": transport,
+                   "seconds": round(time.monotonic() - t0, 6),
+                   "ok": not excs,
+                   "error": repr(excs[0]) if excs else None}
+            attempts.append(rec)
+            if not excs:
+                break
+            history.append(f"attempt {k} ({transport}): {rec['error']}")
+            if k + 1 >= max_attempts:
+                break
+            if deadline is not None and time.monotonic() >= deadline:
+                history.append(
+                    f"retry budget exhausted after attempt {k} "
+                    f"(deadline {ep.deadline_s:g}s)")
+                break
+            if (ep.failover and transport in ("shm", "channel")
+                    and _transport_fault(excs)):
+                history.append(f"failover: {transport} -> socket")
+                transport = "socket"
+            delay = ep.backoff_s * (2 ** k) * (0.5 + rng.random())
+            if deadline is not None:
+                delay = min(delay, max(0.0, deadline - time.monotonic()))
+            if delay > 0:
+                time.sleep(delay)
+    finally:
+        if token is not None:
+            clear_resume(token)
+    if result is not None:
+        result.attempts = attempts
+        if history:
+            result.errors = history + result.errors
+    return result, excs
+
+
+def _run_pipe_attempt(ep: EdgePlan, config, query_id: str):
+    from .session import TransferResult, adapter_for
+
+    src, dst = ep.src_engine, ep.dst_engine
     gp_src, gp_dst = adapter_for(src), adapter_for(dst)
     name_exp = (f"db://{ep.dataset}?workers={ep.workers}"
                 f"&query={query_id}")

@@ -54,6 +54,10 @@ class TransferResult:
     # path doesn't open data pipes (the file baseline)
     export_stats: Optional[PipeStats] = None
     import_stats: Optional[PipeStats] = None
+    # retry policy history, one dict per attempt ({attempt, query_id,
+    # transport, seconds, ok, error}); a single clean run has one entry
+    # when the edge carries a retry policy, else it stays empty
+    attempts: List[dict] = field(default_factory=list)
 
 
 def adapter_for(engine: Any) -> GeneratedPipe:

@@ -110,12 +110,13 @@ import time
 from multiprocessing import resource_tracker, shared_memory
 from typing import Dict, Iterable, List, Optional, Tuple
 
+from . import faults
 from .iobuf import Buffer, _seg_len
 from .transport import FRAME_EOF, LinkSim, Transport
 
 __all__ = ["ShmRing", "ShmRingTransport", "DEFAULT_RING_CAPACITY",
            "acquire_ring", "acquire_broadcast_ring", "attach_ring",
-           "doorbell_supported"]
+           "doorbell_supported", "sweep_orphans"]
 
 _MAGIC = 0x50475231  # 'PGR1'
 _VERSION = 2
@@ -301,6 +302,9 @@ class _Doorbell:
         self.evfd = _evfd_acquire(path, create=create_event)
 
     def ring(self) -> None:
+        if faults._ACTIVE is not None:
+            if faults.fire("shm.doorbell.ring") == "drop":
+                return  # injected lost wakeup: waiter relies on slice cap
         try:
             os.write(self.fd, _DB_BYTE)
         except OSError:
@@ -604,6 +608,9 @@ class ShmRing:
 
     # -- doorbells ---------------------------------------------------------------
     def _doorbell(self, suffix: str) -> Optional[_Doorbell]:
+        if faults._ACTIVE is not None:
+            if faults.fire("shm.doorbell.open", suffix=suffix) == "break":
+                return None  # un-ringable doorbell: degrade to polling
         if self._u32(_OFF_DOORBELL) != _DB_FDS:
             return None
         db = self._dbs.get(suffix, False)
@@ -1039,45 +1046,72 @@ def acquire_broadcast_ring(capacity: int, readers: int,
                           readers=readers)
 
 
-def _park_broadcast(ring: ShmRing) -> bool:
-    """Park the creator slot's ring after a clean EOF — but only once the
-    writer and every *other* slot are demonstrably done (closed, evicted,
-    or their process gone), so no peer can touch the recycled segment.
-    Peers usually drain the same EOF within a millisecond; a brief
-    bounded poll covers the stragglers, anything slower unlinks as
-    before."""
-    if ring.closed or not ring.owner or not ring.nreaders:
+def _bc_peers_done(ring: ShmRing) -> bool:
+    """True once the writer and every *other* slot are demonstrably done
+    (closed, evicted, or their process gone) — no peer can touch the
+    segment again."""
+    writer_pid = ring._u32(_OFF_WRITER_PID)
+    if not (ring.writer_closed or writer_pid == 0
+            or not _pid_alive(writer_pid)):
         return False
+    for i in range(ring.nreaders):
+        if i == ring.slot:
+            continue
+        off = ring._slot_off(i)
+        state = ring._u32(off + 12)
+        if state in (_SLOT_STATE_CLOSED, _SLOT_STATE_EVICTED):
+            continue
+        if (state == _SLOT_STATE_ATTACHED
+                and not _pid_alive(ring._u32(off + 8))):
+            continue  # dead reader: it will never touch the segment
+        return False
+    return True
 
-    def _peers_done() -> bool:
-        writer_pid = ring._u32(_OFF_WRITER_PID)
-        if not (ring.writer_closed or writer_pid == 0
-                or not _pid_alive(writer_pid)):
-            return False
-        for i in range(ring.nreaders):
-            if i == ring.slot:
-                continue
-            off = ring._slot_off(i)
-            state = ring._u32(off + 12)
-            if state in (_SLOT_STATE_CLOSED, _SLOT_STATE_EVICTED):
-                continue
-            if (state == _SLOT_STATE_ATTACHED
-                    and not _pid_alive(ring._u32(off + 8))):
-                continue  # dead reader: it will never touch the segment
-            return False
-        return True
 
-    deadline = time.monotonic() + 0.02
-    while not _peers_done():
-        if time.monotonic() > deadline:
-            return False
-        time.sleep(5e-4)
+def _bc_pool_insert(ring: ShmRing) -> bool:
     key = (ring.capacity, ring.nreaders, ring._u32(_OFF_DOORBELL) == _DB_FDS)
     with _park_lock:
+        if _draining:
+            return False
         rings = _bc_parked.setdefault(key, [])
         if len(rings) >= _PARK_MAX:
             return False
         rings.append(ring)
+    return True
+
+
+_BC_PARK_WAIT = 2.0  # background parker's patience for straggler readers
+
+
+def _park_broadcast(ring: ShmRing) -> bool:
+    """Park the creator slot's ring after a clean EOF.  Peers usually
+    drain the same EOF within a millisecond, so the common case parks
+    inline; a group whose readers finish far apart is handed to a
+    *background* parker instead of stalling the creator's close for a
+    bounded probe (the old ~20 ms inline poll).  The parker waits up to
+    ``_BC_PARK_WAIT`` for the stragglers, then pools the warm segment —
+    or unlinks it if a peer is still attached/live at the deadline.
+
+    Returns True when ownership was taken (parked now or handed off);
+    False means the caller must close/unlink as before."""
+    if ring.closed or not ring.owner or not ring.nreaders:
+        return False
+    if _bc_peers_done(ring):
+        return _bc_pool_insert(ring)
+
+    def _park_later() -> None:
+        deadline = time.monotonic() + _BC_PARK_WAIT
+        while not _bc_peers_done(ring):
+            if time.monotonic() > deadline or _draining:
+                ring.close()  # straggler still live: unlink as before
+                return
+            time.sleep(1e-3)
+        if not _bc_pool_insert(ring):
+            ring.close()
+
+    t = threading.Thread(target=_park_later, name="pgring-bc-park",
+                         daemon=True)
+    t.start()
     return True
 
 
@@ -1111,8 +1145,13 @@ def _park_writer(ring: ShmRing) -> bool:
     return True
 
 
+_draining = False
+
+
 def _drain_parked() -> None:  # pragma: no cover - exercised at interpreter exit
+    global _draining
     with _park_lock:
+        _draining = True  # background parkers close instead of pooling
         rings = [r for lst in _parked.values() for r in lst]
         rings += [r for lst in _bc_parked.values() for r in lst]
         rings += list(_writer_cache.values())
@@ -1124,6 +1163,89 @@ def _drain_parked() -> None:  # pragma: no cover - exercised at interpreter exit
 
 
 atexit.register(_drain_parked)
+
+
+# -- crash sweep --------------------------------------------------------------------
+
+_SHM_DIR = "/dev/shm"  # where the kernel materializes POSIX shm segments
+
+
+def sweep_orphans(min_age_s: float = 30.0) -> List[str]:
+    """Crash sweep for unclean shutdowns that never reached any close
+    path: unlink ring segments whose every registered pid is dead, and
+    doorbell fifos whose segment is already gone (a process can die
+    between fifo creation and registration, or a foreign cleaner can
+    remove the segment first — either way the fifos would outlive it).
+
+    Segments with no registered pid yet (mid-creation) are only swept
+    once older than ``min_age_s``.  Rings parked warm by *this* process
+    are never touched.  Returns the names removed.  The directory's
+    lease reaper calls this on every expiry sweep."""
+    swept: List[str] = []
+    if not os.path.isdir(_SHM_DIR):  # non-Linux: nothing to scan safely
+        return swept
+    with _park_lock:
+        keep = {r.name for lst in _parked.values() for r in lst}
+        keep |= {r.name for lst in _bc_parked.values() for r in lst}
+        keep |= set(_writer_cache)
+    now = time.time()
+    for path in glob.glob(os.path.join(_SHM_DIR, "pgring-*")):
+        name = os.path.basename(path)
+        if name in keep:
+            continue
+        try:
+            shm = shared_memory.SharedMemory(name=name, create=False)
+        except (OSError, ValueError):
+            continue  # vanished, or raced another sweeper
+        orphan = False
+        try:
+            if name not in _created_here:
+                try:
+                    resource_tracker.unregister(shm._name, "shared_memory")
+                except Exception:  # pragma: no cover - tracker API drift
+                    pass
+            try:
+                magic, version, _cap = _HDR.unpack_from(shm.buf, 0)
+            except struct.error:
+                continue
+            if magic != _MAGIC or version != _VERSION:
+                continue  # not ours to judge
+            pids = []
+            wpid = _U32.unpack_from(shm.buf, _OFF_WRITER_PID)[0]
+            if wpid:
+                pids.append(wpid)
+            nreaders = _U32.unpack_from(shm.buf, _OFF_NREADERS)[0]
+            if nreaders:
+                for i in range(nreaders):
+                    off = HEADER_SIZE + _SLOT.size * i
+                    state = _U32.unpack_from(shm.buf, off + 12)[0]
+                    pid = _U32.unpack_from(shm.buf, off + 8)[0]
+                    if state == _SLOT_STATE_ATTACHED and pid:
+                        pids.append(pid)
+            else:
+                rpid = _U32.unpack_from(shm.buf, _OFF_READER_PID)[0]
+                if rpid:
+                    pids.append(rpid)
+            if pids:
+                orphan = all(not _pid_alive(p) for p in pids)
+            else:
+                try:
+                    orphan = now - os.stat(path).st_mtime >= min_age_s
+                except OSError:
+                    orphan = False
+        finally:
+            shm.close()
+        if orphan and ShmRing.cleanup(name):
+            swept.append(name)
+    for p in glob.glob(os.path.join(tempfile.gettempdir(), "*.pgdb-*")):
+        seg = os.path.basename(p).split(".pgdb-")[0]
+        if not os.path.exists(os.path.join(_SHM_DIR, seg)):
+            try:
+                os.unlink(p)
+                swept.append(os.path.basename(p))
+            except OSError:  # pragma: no cover - raced another cleaner
+                pass
+    return swept
 
 
 class ShmRingTransport(Transport):
@@ -1175,6 +1297,13 @@ class ShmRingTransport(Transport):
         return self.ring.wakeups["poll"]
 
     def send_frames(self, kind: bytes, segments: Iterable[Buffer]) -> None:
+        if faults._ACTIVE is not None:
+            fp = faults.send_plan("shm", kind, segments)
+            if fp is not None:
+                with faults.suppressed():
+                    for p in fp:
+                        self.send_frame(kind, p)
+                return
         views = []
         payload_len = 0
         for seg in segments:
@@ -1205,6 +1334,10 @@ class ShmRingTransport(Transport):
         self.shm_spans += 1
 
     def recv_frame(self) -> Tuple[bytes, bytes]:
+        if faults._ACTIVE is not None:
+            if faults.fire("transport.recv", transport="shm") == "drop":
+                with faults.suppressed():
+                    self.recv_frame()  # swallow one frame
         item = self.ring.recv()
         if item is None:
             return FRAME_EOF, b""

@@ -53,6 +53,7 @@ import struct
 import threading
 from typing import Dict, List, Optional, Tuple
 
+from . import faults
 from .transport import (
     FRAME_BLOCK,
     FRAME_EOF,
@@ -152,6 +153,18 @@ class StripedSender(Transport):
             raise self.error
         segs = [bytes(s) for s in segments]
         payload = segs[0] if len(segs) == 1 else b"".join(segs)
+        if faults._ACTIVE is not None:
+            # pre-striping hook: a dropped frame here means a hole in the
+            # seq space, which the receiver's reorder window must surface
+            # as a loud stall/timeout rather than silent reordering
+            act = faults.fire("stream.send", kind=kind)
+            if act == "drop":
+                self._seq += 1  # the seq is consumed but never sent
+                return
+            if act == "corrupt" and payload:
+                buf = bytearray(payload)
+                buf[len(buf) // 2] ^= 0xFF
+                payload = bytes(buf)
         seq = self._seq
         self._seq += 1
         self._queues[seq % len(self.members)].put(

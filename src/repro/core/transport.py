@@ -11,6 +11,9 @@ Frame layout on the wire: 1-byte kind + uint32 little-endian payload length
     E  end of stream
     M  stripe hello (first frame on a striped member connection; see
        repro.core.stream for the striped envelope layered on top)
+    R  resume hello (follows the schema frame when the edge is resumable;
+       json ``{"epoch": k, "from": n}`` — the exporter announces it will
+       send data frames n, n+1, ... so the importer can dedupe overlap)
 
 Scatter-gather send path: :meth:`Transport.send_frames` takes the payload
 as a sequence of buffer views (a :class:`~repro.core.iobuf.SegmentList`)
@@ -36,6 +39,7 @@ import time
 from dataclasses import dataclass
 from typing import Iterable, Optional, Tuple
 
+from . import faults
 from .iobuf import Buffer, _seg_len
 
 __all__ = [
@@ -46,6 +50,7 @@ __all__ = [
     "FRAME_VERIFY",
     "FRAME_EOF",
     "FRAME_STRIPE",
+    "FRAME_RESUME",
     "LinkSim",
     "Transport",
     "SocketTransport",
@@ -61,6 +66,7 @@ FRAME_BLOCK = b"B"
 FRAME_VERIFY = b"V"
 FRAME_EOF = b"E"
 FRAME_STRIPE = b"M"
+FRAME_RESUME = b"R"
 
 _HEADER = struct.Struct("<cI")
 
@@ -134,6 +140,13 @@ class SocketTransport(Transport):
         self._rfile = sock.makefile("rb", buffering=1 << 20)
 
     def send_frames(self, kind: bytes, segments: Iterable[Buffer]) -> None:
+        if faults._ACTIVE is not None:
+            fp = faults.send_plan("socket", kind, segments)
+            if fp is not None:
+                with faults.suppressed():
+                    for p in fp:
+                        self.send_frame(kind, p)
+                return
         # flatten to byte-addressable views once; header is its own iovec,
         # so no header+payload concatenation happens anywhere
         iov = []
@@ -170,6 +183,10 @@ class SocketTransport(Transport):
             raise IOError(f"short vectored send: {sent_total}/{total}")
 
     def recv_frame(self) -> Tuple[bytes, bytes]:
+        if faults._ACTIVE is not None:
+            if faults.fire("transport.recv", transport="socket") == "drop":
+                with faults.suppressed():
+                    self.recv_frame()  # swallow one frame (receiver-side loss)
         hdr = self._rfile.read(_HEADER.size)
         if not hdr or len(hdr) < _HEADER.size:
             return FRAME_EOF, b""
@@ -214,6 +231,13 @@ class ChannelTransport(Transport):
         self.frames_sent = 0
 
     def send_frames(self, kind: bytes, segments: Iterable[Buffer]) -> None:
+        if faults._ACTIVE is not None:
+            fp = faults.send_plan("channel", kind, segments)
+            if fp is not None:
+                with faults.suppressed():
+                    for p in fp:
+                        self.send_frame(kind, p)
+                return
         # the queue hands the payload to another thread that may consume it
         # after our pooled buffers are recycled, so materialize exactly once
         segs = list(segments)
@@ -223,11 +247,26 @@ class ChannelTransport(Transport):
             payload = b"".join(bytes(s) for s in segs)
         # charge the framed size (header included), matching SocketTransport
         self._charge_link(len(payload) + _HEADER.size)
-        self.channel.q.put((kind, payload))
+        # a dead importer closes the channel; blocking forever on a full
+        # queue nobody drains would wedge the exporter (the socket analog
+        # gets EPIPE from the kernel -- give the channel the same contract).
+        # Frames still enqueue while there is room, matching the kernel
+        # socket buffer absorbing writes after the peer's close.
+        while True:
+            try:
+                self.channel.q.put((kind, payload), timeout=0.05)
+                break
+            except queue.Full:
+                if self.channel.closed.is_set():
+                    raise BrokenPipeError("channel peer closed") from None
         self.bytes_sent += len(payload) + _HEADER.size
         self.frames_sent += 1
 
     def recv_frame(self) -> Tuple[bytes, bytes]:
+        if faults._ACTIVE is not None:
+            if faults.fire("transport.recv", transport="channel") == "drop":
+                with faults.suppressed():
+                    self.recv_frame()  # swallow one frame
         # wake up on channel close even if the peer died without an EOF
         # frame (the socket analog gets this for free from the FIN);
         # queued frames are still drained before the synthetic EOF

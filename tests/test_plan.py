@@ -159,6 +159,8 @@ def test_explain_decision_snapshot():
         "negotiated": False,
         "depends_on": [],
         "broadcast": None,
+        "retries": 0,
+        "resume": True,
     }
     text = cp.explain()
     assert "partition=hash:key" in text and "streams=2" in text

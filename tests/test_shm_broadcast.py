@@ -373,3 +373,51 @@ def test_broadcast_writer_death_drains_then_eof():
     _join_or_kill([p])
     r1.close()
     ring.close()
+
+
+def test_broadcast_warm_park_survives_straggler_readers():
+    """The owner closing first must not forfeit warm reuse: a group whose
+    peers finish far apart (well past the old ~20 ms inline probe) hands
+    the segment to the background parker, which pools it once the last
+    straggler drains — instead of unlinking and paying first-touch faults
+    on the next group."""
+    import repro.core.shm_ring as sr
+
+    cap = 24576  # capacity no other test parks
+    ring = sr.acquire_broadcast_ring(cap, readers=2)
+    name = ring.name
+    r1 = ShmRing.attach(name, role="reader", slot=1)
+    tx = ShmRingTransport(ShmRing.attach(name, role="writer"))
+    rx0, rx1 = ShmRingTransport(ring), ShmRingTransport(r1)
+    for i in range(3):
+        tx.send_frames(FRAME_TEXT, [b"warm-%d" % i])
+    tx.send_frames(FRAME_EOF, [b""])
+    tx.close()
+    # the OWNER (slot 0) drains and closes first, straggler still attached
+    while rx0.recv_frame()[0] != FRAME_EOF:
+        pass
+    rx0.close()  # must hand off to the background parker, not unlink
+
+    def parked() -> bool:
+        with sr._park_lock:
+            return any(r.name == name
+                       for lst in sr._bc_parked.values() for r in lst)
+
+    time.sleep(0.1)  # well past the old inline probe window
+    assert not parked()  # straggler still live: segment not pooled yet
+    got = []
+    while True:  # the straggler can still read: segment was not unlinked
+        kind, p = rx1.recv_frame()
+        if kind == FRAME_EOF:
+            break
+        got.append(bytes(p))
+    assert got == [b"warm-0", b"warm-1", b"warm-2"]
+    rx1.close()
+    deadline = time.monotonic() + 3 * sr._BC_PARK_WAIT
+    while not parked() and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert parked()  # background parker pooled it after the stragglers left
+    r2 = sr.acquire_broadcast_ring(cap, readers=2)
+    assert r2.name == name  # warm reuse
+    assert r2._epoch != 0  # fresh lease epoch
+    r2.reader_close()  # drain the pool so later tests see a clean slate
