@@ -307,6 +307,90 @@ def _recovery_probe(n_rows: int) -> dict:
     return out
 
 
+def _broker_probe(n_rows: int) -> dict:
+    """Broker stress rung: 200 concurrent small plans through one
+    resident :class:`~repro.core.broker.PipeBroker` (shared directory,
+    one doorbell-hub thread, admission capped at 16 rings) vs the
+    per-transfer-directory sequential baseline (a fresh
+    ``WorkerDirectory`` per plan — the pre-broker lifecycle).  The
+    per-plan latency is the figure; the note carries the speedup and
+    the peak process fd count, which stays bounded because parked
+    idle rings share the hub instead of each holding a poller."""
+    from repro.core.broker import PipeBroker, process_fd_count
+    from repro.core.plan import plan
+
+    rows = 256
+    cfg = PipeConfig(mode="arrowcol", block_rows=64, transport="shm")
+
+    def one_plan(i: int) -> None:
+        src = make_engine("colstore")
+        dst = make_engine("colstore")
+        src.put_block("t", make_paper_block(rows, seed=i))
+        res = (plan(negotiate=False)
+               .move(src, "t", dst, "t2", config=cfg,
+                     dataset=f"bk{i}", timeout=120)
+               .compile()
+               .execute(raise_on_error=False))
+        assert not res.exceptions, res.exceptions
+        assert len(dst.get_block("t2")) == rows
+
+    # baseline: one directory per transfer, strictly sequential.  One
+    # untimed plan first so the adapter cache is warm on both legs —
+    # otherwise the baseline eats the one-off codegen cost and the
+    # broker leg looks faster than it is.
+    fresh()
+    one_plan(0)
+    n_base = 20
+    t0 = time.perf_counter()
+    for i in range(n_base):
+        fresh()
+        one_plan(i)
+    base_per = (time.perf_counter() - t0) / n_base
+
+    # broker leg: one control plane, 200 plans racing through admission
+    n_plans = 200
+    broker = PipeBroker(max_rings=16, admit_timeout=120.0)
+    broker.install()
+    errors: list = []
+    fd_base = process_fd_count()
+    peak = [fd_base]
+    stop_sampling = threading.Event()
+
+    def sample():
+        while not stop_sampling.wait(0.002):
+            peak[0] = max(peak[0], process_fd_count())
+
+    sampler = threading.Thread(target=sample, daemon=True)
+    sampler.start()
+    try:
+        threads = [threading.Thread(target=lambda i=i: one_plan(i), daemon=True)
+                   for i in range(n_plans)]
+        t0 = time.perf_counter()
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join(timeout=180)
+            if th.is_alive():
+                errors.append(f"{th.name} still running")
+        wall = time.perf_counter() - t0
+        st = broker.stats()
+    finally:
+        stop_sampling.set()
+        sampler.join(timeout=2)
+        broker.stop()
+        fresh()
+    assert not errors, errors
+    broker_per = wall / n_plans
+    emit("fig11.broker_seq_baseline", base_per,
+         f"n={n_base} sequential, fresh directory per plan")
+    emit("fig11.broker_stress", broker_per,
+         f"n={n_plans} concurrent, vs_sequential={base_per / broker_per:.2f}x"
+         f" per-plan, admitted={st['admitted']}, queued={st['queued']},"
+         f" peak_fds={peak[0]} (base={fd_base})")
+    return {"broker_seq_baseline": base_per, "broker_stress": broker_per,
+            "peak_fds": peak[0]}
+
+
 def _shuffle_probe(n_rows: int, streams: int = 1) -> float:
     """N=2→M=3 hash-partitioned repartitioning transfer (colstore both
     sides: the graphstore analog cannot hold arbitrary relations).  With
@@ -361,6 +445,9 @@ def main(n_rows: int = DEFAULT_ROWS, transports=None, streams_sweep=None) -> dic
     # self-healing transfers: resumed retry vs full re-run after a
     # mid-stream importer death on a bandwidth-capped edge
     out["recovery"] = _recovery_probe(n_rows)
+    # broker stress: 200 concurrent plans through one resident broker
+    # vs the per-transfer-directory sequential baseline
+    out["broker"] = _broker_probe(n_rows)
     # stream-fabric rungs: striping sweep + N→M shuffle
     out["streams"] = _streams_sweep(
         n_rows,

@@ -50,6 +50,14 @@ from .directory import (
     get_directory,
     set_directory,
 )
+from .broker import (
+    BrokerBusy,
+    DoorbellHub,
+    PipeBroker,
+    TenantQuota,
+    get_broker,
+    set_broker,
+)
 from .formopt import DelimitedAssembler, JsonAssembler, infer_delimiter
 from .ioredirect import CallSite, CallSiteRegistry, PipeOpenContext, pipegen_open
 from .shm_ring import ShmRing, ShmRingTransport

@@ -1,0 +1,567 @@
+"""Pipe broker: the long-lived control plane (ROADMAP's resident daemon).
+
+Every transfer used to stand up its own directory, renewal threads, and
+fds, and tear them down again — fine for one session, hopeless for the
+paper's "colocated or cross-cluster" deployments where *thousands* of
+concurrent plans from many tenants share one machine.  A
+:class:`PipeBroker` is one resident object (optionally served over TCP)
+that owns the four things a shared control plane must own:
+
+* **Doorbell hub** (:class:`DoorbellHub`): ONE selector thread
+  multiplexing every ring doorbell fifo/eventfd in the process.  Each
+  blocked wait parks on a ``threading.Event`` instead of running its own
+  poll syscall loop, so wait cost scales with wakeups, not with the
+  number of idle rings — and because ``selectors``/``poll`` carry fds by
+  value there is no FD_SETSIZE ceiling (``select.select`` crashed at
+  fd >= 1024).
+* **Admission control + QoS** (:meth:`PipeBroker.admit`): plans declare
+  a tenant and a class (``latency`` | ``bulk``) and a resource vector
+  (rings, segments, bytes).  Over-quota requests *queue* (latency ahead
+  of bulk, FIFO within a class) instead of failing or oversubscribing;
+  quota is enforced globally and per tenant — the CDC generator's
+  db-per-tenant / db-shared split: isolated budgets over one shared
+  fabric.  This is also what keeps process fd count flat under fan-out:
+  admission bounds the number of *live* rings regardless of how many
+  plans are in flight.
+* **Warm-pool ownership**: the shm ring pool, broadcast warm-park, and
+  writer mapping cache (``repro.core.shm_ring``) survive individual plan
+  lifetimes already; the broker raises their depth to serving-fleet
+  scale, drains them on shutdown, and — because parked segments release
+  their doorbell fds — idle pool residency costs mappings, not fds.
+* **Lease GC + crash sweep**: the broker's reaper runs
+  :meth:`WorkerDirectory.sweep` on a period (expired/dead registrations
+  dropped, orphaned shm segments and doorbell fifos unlinked), the duty
+  the per-transfer ``DirectoryServer`` reaper used to carry.
+
+``PipeBroker.install()`` makes the broker the process-global control
+plane: the plan executor then routes rendezvous through the broker's
+directory and wraps every work unit in an admission ticket (edge
+options ``tenant=...`` / ``qos=...``).
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+import os
+import selectors
+import threading
+import time
+from contextlib import contextmanager
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+from .directory import DirectoryServer, WorkerDirectory, set_directory
+from . import shm_ring
+
+__all__ = ["PipeBroker", "DoorbellHub", "TenantQuota", "BrokerBusy",
+           "QOS_CLASSES", "get_broker", "set_broker", "process_fd_count"]
+
+#: admission classes, in scheduling priority order: a queued ``latency``
+#: ticket is always admitted before a queued ``bulk`` ticket that fits
+QOS_CLASSES = ("latency", "bulk")
+
+
+class BrokerBusy(RuntimeError):
+    """Admission was refused: the request can never fit its quota, or it
+    queued past its timeout."""
+
+
+def process_fd_count() -> int:
+    """Open fds of this process (the broker's flatness metric)."""
+    try:
+        return len(os.listdir("/proc/self/fd"))
+    except OSError:  # pragma: no cover - no procfs
+        return -1
+
+
+# -- doorbell hub -------------------------------------------------------------------
+
+
+class DoorbellHub:
+    """One selector thread multiplexing every doorbell fd in the process.
+
+    Waiters (``_Doorbell.wait`` routes here while a hub is installed)
+    park on a per-doorbell ``threading.Event``; the hub's loop drains the
+    readable fd and sets the event.  The event is only cleared by the
+    *waiter after a successful wait*, never at wait entry, so a ring that
+    lands between the waiter's readiness check and its park is a spurious
+    early wakeup (the caller re-checks readiness and parks again), never
+    a lost one.  Registration is lazy (first hub-mediated wait) and
+    undone by ``_Doorbell.close`` via :meth:`discard`."""
+
+    def __init__(self):
+        self._sel = selectors.DefaultSelector()
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._wake_r, self._wake_w = os.pipe()
+        os.set_blocking(self._wake_r, False)
+        self._sel.register(self._wake_r, selectors.EVENT_READ, None)
+        self._thread: Optional[threading.Thread] = None
+        self.waits = 0
+        self.wakeups = 0
+        self.registered = 0  # doorbells currently multiplexed
+
+    def start(self) -> "DoorbellHub":
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="pipegen-doorbell-hub")
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        self._wake()
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+        with self._lock:
+            try:
+                self._sel.close()
+            except OSError:  # pragma: no cover
+                pass
+            for fd in (self._wake_r, self._wake_w):
+                try:
+                    os.close(fd)
+                except OSError:  # pragma: no cover
+                    pass
+
+    def _wake(self) -> None:
+        try:
+            os.write(self._wake_w, b"\x01")
+        except OSError:  # pragma: no cover - mid-shutdown
+            pass
+
+    def wait(self, db, timeout: float) -> bool:
+        """Park until ``db`` rings (or ``timeout``).  Called from
+        ``_Doorbell.wait`` whenever this hub is installed process-wide."""
+        if self._stop.is_set():
+            raise RuntimeError("doorbell hub stopped")
+        ev = db.hub_event
+        if ev is None:
+            ev = self._register(db)
+        self.waits += 1
+        if ev.wait(max(0.0, timeout)):
+            ev.clear()
+            return True
+        return False
+
+    def _register(self, db) -> threading.Event:
+        ev = threading.Event()
+        with self._lock:
+            if db.hub_event is not None:  # raced another wait
+                return db.hub_event
+            for fd, is_evfd in self._db_fds(db):
+                try:  # a dead entry may still hold this recycled fd number
+                    self._sel.unregister(fd)
+                except (KeyError, ValueError):
+                    pass
+                self._sel.register(fd, selectors.EVENT_READ, (ev, is_evfd))
+            db.hub_event = ev
+            self.registered += 1
+        # poll-backend selectors snapshot their fd set per select() call:
+        # force a re-poll so the new doorbell is live now, not after the
+        # current select slice expires
+        self._wake()
+        return ev
+
+    def discard(self, db) -> None:
+        """Drop a doorbell's fds from the selector (its close path)."""
+        with self._lock:
+            if db.hub_event is None:
+                return
+            for fd, _ in self._db_fds(db):
+                try:
+                    self._sel.unregister(fd)
+                except (KeyError, ValueError, OSError):
+                    pass
+            db.hub_event = None
+            self.registered -= 1
+
+    @staticmethod
+    def _db_fds(db) -> List[Tuple[int, bool]]:
+        fds = [(db.fd, False)]
+        if db.evfd is not None:
+            fds.append((db.evfd, True))
+        return fds
+
+    def _run(self) -> None:
+        while not self._stop.is_set():
+            try:
+                events = self._sel.select(timeout=0.5)
+            except (OSError, RuntimeError):  # pragma: no cover - shutdown race
+                if self._stop.is_set():
+                    return
+                continue
+            for key, _ in events:
+                if key.data is None:  # the wake pipe
+                    try:
+                        os.read(self._wake_r, 4096)
+                    except OSError:  # pragma: no cover
+                        pass
+                    continue
+                ev, is_evfd = key.data
+                try:
+                    if is_evfd:
+                        os.eventfd_read(key.fd)
+                    else:
+                        os.read(key.fd, 64)
+                except OSError:
+                    pass  # fd raced a close; the unregister is in flight
+                ev.set()
+                self.wakeups += 1
+
+
+# -- admission control --------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TenantQuota:
+    """Per-tenant ceilings (``None`` = unlimited): concurrent rings,
+    concurrent shm segments, and summed ring bytes."""
+
+    max_rings: Optional[int] = None
+    max_segments: Optional[int] = None
+    max_bytes: Optional[int] = None
+
+
+class _Ticket:
+    __slots__ = ("prio", "seq", "tenant", "qos", "rings", "segments",
+                 "nbytes")
+
+    def __init__(self, prio, seq, tenant, qos, rings, segments, nbytes):
+        self.prio = prio
+        self.seq = seq
+        self.tenant = tenant
+        self.qos = qos
+        self.rings = rings
+        self.segments = segments
+        self.nbytes = nbytes
+
+    def __lt__(self, other):  # heap order: class priority, then FIFO
+        return (self.prio, self.seq) < (other.prio, other.seq)
+
+
+class Admission:
+    """A granted admission ticket; a context manager whose exit releases
+    the resources back to the broker."""
+
+    def __init__(self, broker: "PipeBroker", ticket: _Ticket):
+        self._broker = broker
+        self._ticket = ticket
+        self._released = False
+
+    def release(self) -> None:
+        if not self._released:
+            self._released = True
+            self._broker._release(self._ticket)
+
+    def __enter__(self) -> "Admission":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+
+# -- the broker ---------------------------------------------------------------------
+
+
+class PipeBroker:
+    """The resident control plane: directory + doorbell hub + admission
+    + warm pools + lease/crash sweeping, in one start/stoppable object.
+
+    In-process by default; ``serve=True`` additionally exposes the same
+    ``WorkerDirectory`` over TCP (a :class:`DirectoryServer` with the
+    bounded handler pool) for multi-process deployments."""
+
+    def __init__(self,
+                 lease_ttl: Optional[float] = 30.0,
+                 sweep_every: Optional[float] = None,
+                 orphan_min_age_s: float = 30.0,
+                 serve: bool = False,
+                 host: str = "127.0.0.1",
+                 port: int = 0,
+                 handlers: int = 8,
+                 max_rings: Optional[int] = 64,
+                 max_segments: Optional[int] = None,
+                 max_bytes: Optional[int] = None,
+                 default_quota: Optional[TenantQuota] = None,
+                 tenants: Optional[Dict[str, TenantQuota]] = None,
+                 qos_concurrency: Optional[Dict[str, Optional[int]]] = None,
+                 admit_timeout: float = 30.0,
+                 pool_park_max: Optional[int] = 16,
+                 hub: bool = True):
+        self.directory = WorkerDirectory(lease_ttl=lease_ttl)
+        self.hub: Optional[DoorbellHub] = DoorbellHub() if hub else None
+        self.server: Optional[DirectoryServer] = None
+        self._serve = serve
+        self._host, self._port, self._handlers = host, port, handlers
+        self.max_rings = max_rings
+        self.max_segments = max_segments
+        self.max_bytes = max_bytes
+        self.default_quota = default_quota or TenantQuota()
+        self.tenants = dict(tenants or {})
+        self.qos_concurrency = dict(qos_concurrency or {})
+        for q in self.qos_concurrency:
+            if q not in QOS_CLASSES:
+                raise ValueError(f"unknown QoS class {q!r}; have "
+                                 f"{QOS_CLASSES}")
+        self.admit_timeout = admit_timeout
+        self.pool_park_max = pool_park_max
+        self._sweep_every = sweep_every or (lease_ttl / 2 if lease_ttl
+                                            else 15.0)
+        self.orphan_min_age_s = orphan_min_age_s
+        # admission state
+        self._cv = threading.Condition()
+        self._seq = itertools.count()
+        self._waiting: List[_Ticket] = []  # heap: (class prio, FIFO seq)
+        self._use = [0, 0, 0]  # rings, segments, bytes
+        self._use_by_tenant: Dict[str, List[int]] = {}
+        self._use_by_qos: Dict[str, int] = {q: 0 for q in QOS_CLASSES}
+        self.admitted = 0
+        self.queued = 0
+        self.rejected = 0
+        # lifecycle
+        self._stop = threading.Event()
+        self._reaper: Optional[threading.Thread] = None
+        self._installed = False
+        self._prev_pool_max: Optional[int] = None
+        self._started = False
+
+    # -- lifecycle -------------------------------------------------------------
+    def start(self) -> "PipeBroker":
+        if self._started:
+            return self
+        self._started = True
+        if self.hub is not None:
+            self.hub.start()
+        if self._serve:
+            self.server = DirectoryServer(
+                self._host, self._port, handlers=self._handlers,
+                directory=self.directory).start()
+            self.host, self.port = self.server.host, self.server.port
+        self._reaper = threading.Thread(target=self._reap, daemon=True,
+                                        name="pipegen-broker-reaper")
+        self._reaper.start()
+        return self
+
+    def _reap(self) -> None:
+        while not self._stop.wait(self._sweep_every):
+            try:
+                self.directory.sweep(orphan_min_age_s=self.orphan_min_age_s)
+            except Exception:  # pragma: no cover - sweeping must never die
+                pass
+
+    def install(self) -> "PipeBroker":
+        """Become the process-global control plane: rendezvous go through
+        this broker's directory, doorbell waits through its hub, plan
+        units through its admission gate, and the warm pools get the
+        broker's (deeper) budget."""
+        self.start()
+        self._installed = True
+        set_directory(self.directory)
+        if self.hub is not None:
+            shm_ring.set_doorbell_hub(self.hub)
+        if self.pool_park_max is not None:
+            self._prev_pool_max = shm_ring.set_pool_limits()
+            shm_ring.set_pool_limits(self.pool_park_max)
+        set_broker(self)
+        return self
+
+    def stop(self, drain_pools: bool = True) -> None:
+        if self._installed:
+            self._installed = False
+            if get_broker() is self:
+                set_broker(None)
+            if shm_ring.get_doorbell_hub() is self.hub:
+                shm_ring.set_doorbell_hub(None)
+            if self._prev_pool_max is not None:
+                shm_ring.set_pool_limits(self._prev_pool_max)
+        self._stop.set()
+        self.directory.interrupt()
+        with self._cv:
+            self._cv.notify_all()  # queued admissions fail fast
+        if self.server is not None:
+            self.server.stop()
+        if self._reaper is not None and self._reaper.ident is not None:
+            self._reaper.join(timeout=5.0)
+        if drain_pools:
+            shm_ring.drain_pools()
+        if self.hub is not None:
+            self.hub.stop()
+
+    def __enter__(self) -> "PipeBroker":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- admission -------------------------------------------------------------
+    def _quota_for(self, tenant: str) -> TenantQuota:
+        return self.tenants.get(tenant, self.default_quota)
+
+    def _tenant_use(self, tenant: str) -> List[int]:
+        return self._use_by_tenant.setdefault(tenant, [0, 0, 0])
+
+    def _fits_locked(self, t: _Ticket) -> bool:
+        for cap, used, want in (
+                (self.max_rings, self._use[0], t.rings),
+                (self.max_segments, self._use[1], t.segments),
+                (self.max_bytes, self._use[2], t.nbytes)):
+            if cap is not None and used + want > cap:
+                return False
+        q = self._quota_for(t.tenant)
+        by = self._tenant_use(t.tenant)
+        for cap, used, want in (
+                (q.max_rings, by[0], t.rings),
+                (q.max_segments, by[1], t.segments),
+                (q.max_bytes, by[2], t.nbytes)):
+            if cap is not None and used + want > cap:
+                return False
+        qcap = self.qos_concurrency.get(t.qos)
+        if qcap is not None and self._use_by_qos[t.qos] + 1 > qcap:
+            return False
+        return True
+
+    def _can_ever_fit(self, t: _Ticket) -> bool:
+        q = self._quota_for(t.tenant)
+        for cap, want in ((self.max_rings, t.rings),
+                          (self.max_segments, t.segments),
+                          (self.max_bytes, t.nbytes),
+                          (q.max_rings, t.rings),
+                          (q.max_segments, t.segments),
+                          (q.max_bytes, t.nbytes)):
+            if cap is not None and want > cap:
+                return False
+        qcap = self.qos_concurrency.get(t.qos)
+        return qcap is None or qcap >= 1
+
+    def _head_eligible_locked(self, t: _Ticket) -> bool:
+        """May ``t`` go now?  Only the highest-priority *fitting* waiter
+        admits — a queued latency ticket that fits always beats a queued
+        bulk one, but a big ticket that does NOT fit never blocks a
+        smaller one behind it (no head-of-line starvation of the fleet
+        by one oversized plan)."""
+        for other in sorted(self._waiting):
+            if other is t:
+                return self._fits_locked(t)
+            if self._fits_locked(other):
+                return False  # someone ahead of us fits: their turn
+        return False  # pragma: no cover - t always in the heap
+
+    def admit(self, tenant: str = "default", qos: str = "bulk",
+              rings: int = 1, segments: Optional[int] = None,
+              nbytes: int = 0,
+              timeout: Optional[float] = None) -> Admission:
+        """Block until the (rings, segments, bytes) vector fits the
+        global, per-tenant, and per-class budgets, then return the
+        :class:`Admission` holding it.  Raises :class:`BrokerBusy` when
+        it can never fit or the queue wait exceeds ``timeout``."""
+        if qos not in QOS_CLASSES:
+            raise ValueError(f"unknown QoS class {qos!r}; have "
+                             f"{QOS_CLASSES}")
+        t = _Ticket(QOS_CLASSES.index(qos), next(self._seq), tenant, qos,
+                    max(0, int(rings)),
+                    max(0, int(rings if segments is None else segments)),
+                    max(0, int(nbytes)))
+        timeout = self.admit_timeout if timeout is None else timeout
+        with self._cv:
+            if not self._can_ever_fit(t):
+                self.rejected += 1
+                raise BrokerBusy(
+                    f"admission for tenant={tenant!r} qos={qos!r} "
+                    f"(rings={t.rings}, segments={t.segments}, "
+                    f"bytes={t.nbytes}) exceeds its quota outright")
+            heapq.heappush(self._waiting, t)
+            deadline = (None if timeout is None
+                        else time.monotonic() + timeout)
+            first = True
+            try:
+                while not self._head_eligible_locked(t):
+                    if first:
+                        first = False
+                        self.queued += 1
+                    if self._stop.is_set():
+                        raise BrokerBusy("broker is shutting down")
+                    remaining = (1.0 if deadline is None
+                                 else deadline - time.monotonic())
+                    if remaining <= 0:
+                        self.rejected += 1
+                        raise BrokerBusy(
+                            f"admission for tenant={tenant!r} qos={qos!r} "
+                            f"queued past {timeout}s (over quota)")
+                    self._cv.wait(min(remaining, 1.0))
+            finally:
+                self._waiting.remove(t)
+                heapq.heapify(self._waiting)
+            self._use[0] += t.rings
+            self._use[1] += t.segments
+            self._use[2] += t.nbytes
+            by = self._tenant_use(t.tenant)
+            by[0] += t.rings
+            by[1] += t.segments
+            by[2] += t.nbytes
+            self._use_by_qos[t.qos] += 1
+            self.admitted += 1
+            self._cv.notify_all()  # another small ticket may also fit
+        return Admission(self, t)
+
+    def _release(self, t: _Ticket) -> None:
+        with self._cv:
+            self._use[0] -= t.rings
+            self._use[1] -= t.segments
+            self._use[2] -= t.nbytes
+            by = self._tenant_use(t.tenant)
+            by[0] -= t.rings
+            by[1] -= t.segments
+            by[2] -= t.nbytes
+            self._use_by_qos[t.qos] -= 1
+            self._cv.notify_all()
+
+    # -- observability ----------------------------------------------------------
+    def stats(self) -> Dict[str, object]:
+        with self._cv:
+            use = list(self._use)
+            waiting = len(self._waiting)
+            by_qos = dict(self._use_by_qos)
+        out: Dict[str, object] = {
+            "admitted": self.admitted,
+            "queued": self.queued,
+            "rejected": self.rejected,
+            "waiting": waiting,
+            "active_rings": use[0],
+            "active_segments": use[1],
+            "active_bytes": use[2],
+            "active_by_qos": by_qos,
+            "pool": shm_ring.pool_info(),
+            "fds": process_fd_count(),
+        }
+        if self.hub is not None:
+            out["hub_waits"] = self.hub.waits
+            out["hub_wakeups"] = self.hub.wakeups
+            out["hub_registered"] = self.hub.registered
+        return out
+
+
+# -- process-global broker ----------------------------------------------------------
+
+_GLOBAL: Optional[PipeBroker] = None
+
+
+def get_broker() -> Optional[PipeBroker]:
+    """The installed process-global broker, if any (the plan executor's
+    admission + rendezvous hook)."""
+    return _GLOBAL
+
+
+def set_broker(broker: Optional[PipeBroker]) -> None:
+    global _GLOBAL
+    _GLOBAL = broker
+
+
+@contextmanager
+def broker_installed(broker: PipeBroker):
+    """Scoped install (tests): install, yield, stop + uninstall."""
+    broker.install()
+    try:
+        yield broker
+    finally:
+        broker.stop()

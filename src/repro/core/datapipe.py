@@ -952,17 +952,37 @@ class DataPipeInput:
         # this importer is alive; if it dies (thread or process), renewals
         # stop and the lease expires into the directory's dead-peer GC
         self._renew_stop: Optional[threading.Event] = None
+        self._lease_lost = threading.Event()
+        self._lease_msg = (
+            f"directory lease lost for {rn.dataset!r} (query "
+            f"{rn.query_id!r}): the registration expired and was GC'd "
+            f"before the exporter arrived — re-register (retried attempts "
+            f"do this automatically)")
         renew = getattr(directory, "renew", None)
         if lease_s and renew is not None:
             self._renew_stop = threading.Event()
             period = max(0.05, lease_s / 3.0)
 
-            def _renew_loop(stop=self._renew_stop, fn=renew, rn=rn, p=period):
+            def _renew_loop(stop=self._renew_stop, fn=renew, rn=rn,
+                            p=period, ls=lease_s):
                 while not stop.wait(p):
                     try:
-                        fn(rn.dataset, rn.query_id)
+                        n = fn(rn.dataset, rn.query_id, lease_s=ls)
                     except Exception:
                         return  # directory gone: let the lease lapse
+                    if n == 0:
+                        # renew's documented 0: the lease expired and the
+                        # registration was GC'd.  Heartbeating a
+                        # nonexistent entry forever (while the exporter
+                        # can never find us) helps nobody — mark the
+                        # pipe lease-lost, kick any wait parked in the
+                        # ring, and let the executor's retry path
+                        # re-register under a fresh attempt.
+                        self._lease_lost.set()
+                        ring = getattr(self._transport, "ring", None)
+                        if ring is not None:
+                            ring.abort(self._lease_msg)
+                        return
 
             threading.Thread(target=_renew_loop, name="pipegen-lease-renew",
                              daemon=True).start()
@@ -1147,9 +1167,14 @@ class DataPipeInput:
         return FaninTransport(slot_tr, expected_sources=fanin)
 
     # -- negotiation -------------------------------------------------------------
+    def _check_lease(self) -> None:
+        if self._lease_lost.is_set():
+            raise BrokenPipeError(self._lease_msg)
+
     def _start(self) -> None:
         if self._started:
             return
+        self._check_lease()
         kind, payload = self._transport.recv_frame()
         if kind == FRAME_EOF:
             self._eof = True  # stub socket: orphaned importer (section 4.2)
@@ -1186,6 +1211,7 @@ class DataPipeInput:
             self.stats.resume_replayed += 1
             return kind, data
         while not self._eof:
+            self._check_lease()
             kind, payload = self._transport.recv_frame()
             if kind == FRAME_EOF:
                 self._eof = True

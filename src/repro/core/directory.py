@@ -47,6 +47,7 @@ from __future__ import annotations
 
 import json
 import os
+import queue
 import socket
 import threading
 import time
@@ -157,6 +158,20 @@ class WorkerDirectory:
         self.multiplex = multiplex
         self.lease_ttl = lease_ttl
         self._all_popped: Dict[Tuple[str, str], List[Endpoint]] = {}
+        self._closing = False
+
+    def interrupt(self) -> None:
+        """Permanently wake every blocked rendezvous wait so it raises
+        ``TimeoutError`` now instead of running out its full timeout —
+        a DirectoryServer/broker shutting down must be able to join its
+        bounded handler pool without waiting out 30 s query waits."""
+        with self._lock:
+            self._closing = True
+            self._lock.notify_all()
+
+    def _check_closing_locked(self) -> None:
+        if self._closing:
+            raise TimeoutError("worker directory is shutting down")
 
     def _state(self, dataset: str, query_id: str) -> _QueryState:
         return self._queries.setdefault((dataset, query_id), _QueryState())
@@ -208,6 +223,7 @@ class WorkerDirectory:
                 st.export_workers = export_workers
             self._gc_dead_locked(st)
             while not st.entries:
+                self._check_closing_locked()
                 if (
                     self.multiplex
                     and st.export_workers is not None
@@ -250,6 +266,7 @@ class WorkerDirectory:
         with self._lock:
             st = self._state(dataset, query_id)
             while True:
+                self._check_closing_locked()
                 self._gc_dead_locked(st)
                 want = st.import_workers
                 if want is not None and len(st.entries) >= want:
@@ -302,6 +319,7 @@ class WorkerDirectory:
             if slot == 0:
                 return 0, None
             while st.bc_ep is None:
+                self._check_closing_locked()
                 remaining = deadline - time.monotonic()
                 if remaining <= 0:
                     # give the slot back for a retry — but only if it is
@@ -371,9 +389,12 @@ class WorkerDirectory:
               pid: Optional[int] = None,
               lease_s: Optional[float] = None) -> int:
         """Extend the lease on every entry ``pid`` registered under
-        (dataset, query).  Returns the number of entries renewed (0 means
-        the lease already expired and was GC'd — the caller must
-        re-register)."""
+        (dataset, query).  Returns the number of registrations touched.
+        0 strictly means *the lease already expired and was GC'd — the
+        caller must re-register*: an endpoint that was popped by its
+        exporter (rendezvous already happened, nothing left to keep
+        alive) counts as touched, so heartbeaters can treat 0 as fatal
+        without racing the pop."""
         _rpc_fault("renew")
         pid = pid or os.getpid()
         ttl = lease_s if lease_s else self.lease_ttl
@@ -393,6 +414,10 @@ class WorkerDirectory:
                     and st.bc_ep.lease_deadline):
                 st.bc_ep = _dc_replace(st.bc_ep, lease_deadline=deadline)
                 renewed += 1
+            if renewed == 0:
+                for ep in self._all_popped.get((dataset, query_id), ()):
+                    if ep.pid == pid:
+                        return 1  # popped: the transfer is past rendezvous
         return renewed
 
     def sweep(self, orphan_min_age_s: float = 30.0) -> List[str]:
@@ -546,12 +571,28 @@ class DirectoryServer:
     reaper runs :meth:`WorkerDirectory.sweep` every ``sweep_every``
     seconds (default ttl/2): expired/dead entries are GC'd and orphaned
     shm segments and doorbell fifos crash-swept, so a SIGKILL'd worker's
-    leavings disappear within about one TTL instead of accumulating."""
+    leavings disappear within about one TTL instead of accumulating.
+
+    **Handler threads are bounded.**  The accept loop reads each request
+    inline (requests are one short JSON line from local peers) and
+    answers non-blocking ops — register/renew/publish/next_sender —
+    right there; only ops that can legitimately *wait* on the directory
+    (query/query_all/join_broadcast) are handed to a fixed pool of
+    ``handlers`` worker threads.  The split is what makes a small pool
+    deadlock-free: the ops a blocked query is waiting FOR never queue
+    behind blocked queries.  An RPC burst therefore costs zero thread
+    spawns (the seed spawned one untracked daemon thread per
+    connection), and :meth:`stop` can actually join every handle —
+    :meth:`WorkerDirectory.interrupt` wakes parked waits first."""
+
+    _BLOCKING_OPS = frozenset({"query", "query_all", "join_broadcast"})
 
     def __init__(self, host: str = "127.0.0.1", port: int = 0,
                  lease_ttl: Optional[float] = None,
-                 sweep_every: Optional[float] = None):
-        self.directory = WorkerDirectory(lease_ttl=lease_ttl)
+                 sweep_every: Optional[float] = None,
+                 handlers: int = 8,
+                 directory: Optional[WorkerDirectory] = None):
+        self.directory = directory or WorkerDirectory(lease_ttl=lease_ttl)
         self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self._sock.bind((host, port))
@@ -562,8 +603,16 @@ class DirectoryServer:
         self._sweep_every = sweep_every or (lease_ttl / 2 if lease_ttl
                                             else None)
         self._reaper: Optional[threading.Thread] = None
+        self.handlers = max(1, int(handlers))
+        self._work: "queue.Queue" = queue.Queue()
+        self._pool: List[threading.Thread] = []
 
     def start(self) -> "DirectoryServer":
+        for i in range(self.handlers):
+            t = threading.Thread(target=self._worker, daemon=True,
+                                 name=f"pgdir-handler-{i}")
+            t.start()
+            self._pool.append(t)
         self._thread.start()
         if self._sweep_every:
             self._reaper = threading.Thread(target=self._reap, daemon=True)
@@ -579,10 +628,26 @@ class DirectoryServer:
 
     def stop(self) -> None:
         self._stop.set()
+        self.directory.interrupt()  # unblock parked query waits
         try:
             self._sock.close()
         except OSError:
             pass
+        for _ in self._pool:
+            self._work.put(None)
+        threads = [self._thread] + self._pool
+        if self._reaper is not None:
+            threads.append(self._reaper)
+        for t in threads:
+            if t.ident is not None:  # never started: nothing to join
+                t.join(timeout=5.0)
+        while True:  # orphan any conns still queued behind the sentinels
+            try:
+                item = self._work.get_nowait()
+            except queue.Empty:
+                break
+            if item is not None:
+                _close_quietly(item[0])
 
     def _serve(self) -> None:
         while not self._stop.is_set():
@@ -590,17 +655,33 @@ class DirectoryServer:
                 conn, _ = self._sock.accept()
             except OSError:
                 return
-            threading.Thread(
-                target=self._handle, args=(conn,), daemon=True
-            ).start()
+            # read inline: one short line from a local peer.  The timeout
+            # keeps a wedged client from stalling the accept loop.
+            try:
+                conn.settimeout(5.0)
+                f = conn.makefile("rwb")
+                line = f.readline()
+                req = json.loads(line) if line else None
+            except (OSError, json.JSONDecodeError):
+                req = None
+            if req is None or "op" not in req:
+                _close_quietly(conn)
+                continue
+            conn.settimeout(None)
+            if req["op"] in self._BLOCKING_OPS:
+                self._work.put((conn, f, req))
+            else:
+                self._dispatch(conn, f, req)
 
-    def _handle(self, conn: socket.socket) -> None:
-        f = conn.makefile("rwb")
-        try:
-            line = f.readline()
-            if not line:
+    def _worker(self) -> None:
+        while True:
+            item = self._work.get()
+            if item is None:
                 return
-            req = json.loads(line)
+            self._dispatch(*item)
+
+    def _dispatch(self, conn: socket.socket, f, req: dict) -> None:
+        try:
             if req["op"] == "register":
                 self.directory.register(
                     req["dataset"],
@@ -666,15 +747,25 @@ class DirectoryServer:
                             req["dataset"], req.get("query_id", "0"))}
             else:
                 resp = {"ok": False, "error": f"bad op {req['op']!r}"}
+        except OSError:
+            _close_quietly(conn)
+            return
+        except Exception as e:  # a bad request must not kill a pooled worker
+            resp = {"ok": False, "error": f"{type(e).__name__}: {e}"}
+        try:
             f.write(json.dumps(resp).encode() + b"\n")
             f.flush()
-        except (OSError, json.JSONDecodeError):
+        except OSError:
             pass
         finally:
-            try:
-                conn.close()
-            except OSError:
-                pass
+            _close_quietly(conn)
+
+
+def _close_quietly(conn: socket.socket) -> None:
+    try:
+        conn.close()
+    except OSError:  # pragma: no cover
+        pass
 
 
 class DirectoryClient:

@@ -47,6 +47,7 @@ import time
 from dataclasses import dataclass, field, fields as dc_fields, replace
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
+from .broker import QOS_CLASSES, get_broker
 from .codegen import PipeEnabledEngine
 from .datapipe import PipeConfig, collect_stats
 from .directory import DirectoryLike, set_directory
@@ -138,7 +139,8 @@ def chain_exceptions(excs: Sequence[BaseException]) -> BaseException:
 #: edge opts out with ``broadcast=False``.
 _EDGE_KEYS = frozenset(
     ("workers", "import_workers", "timeout", "via", "dataset", "config",
-     "broadcast", "retries", "backoff", "deadline", "failover", "resume"))
+     "broadcast", "retries", "backoff", "deadline", "failover", "resume",
+     "tenant", "qos"))
 _PIPE_KEYS = frozenset(f.name for f in dc_fields(PipeConfig))
 _VIA = ("pipe", "files")
 
@@ -195,6 +197,11 @@ class EdgePlan:
     deadline_s: Optional[float] = None
     failover: bool = True
     resume: bool = True
+    # broker admission (no-ops unless a PipeBroker is installed): which
+    # tenant budget this edge draws from and its scheduling class —
+    # queued "latency" tickets are admitted before queued "bulk" ones
+    tenant: str = "default"
+    qos: str = "bulk"
     broadcast_allowed: bool = field(repr=False, default=True)
     dataset_explicit: bool = field(repr=False, default=False)
     config: PipeConfig = field(repr=False, default=None)
@@ -449,6 +456,11 @@ class TransferPlan:
         deadline_s = float(deadline_opt) if deadline_opt is not None else None
         if deadline_s is not None and deadline_s <= 0:
             raise PlanError(f"edge e{i}: deadline must be > 0")
+        tenant = str(opts.pop("tenant", "default"))
+        qos = opts.pop("qos", "bulk")
+        if qos not in QOS_CLASSES:
+            raise PlanError(
+                f"edge e{i}: qos={qos!r} not in {QOS_CLASSES}")
         failover = bool(opts.pop("failover", True))
         resume = opts.pop("resume", True)
         if not isinstance(resume, bool):
@@ -527,7 +539,7 @@ class TransferPlan:
             dataset=dataset, timeout=timeout,
             negotiated=negotiated,
             retries=retries, backoff_s=backoff, deadline_s=deadline_s,
-            failover=failover, resume=resume,
+            failover=failover, resume=resume, tenant=tenant, qos=qos,
             depends_on=tuple(f"e{j}" for j in sorted(deps)),
             broadcast_allowed=broadcast_allowed,
             dataset_explicit=dataset_explicit,
@@ -681,17 +693,34 @@ class CompiledPlan:
             from .session import _query_counter
 
             qids = {id(unit): f"q{next(_query_counter)}" for unit in units}
+            broker = get_broker()
 
             def run(unit: List[EdgePlan]) -> None:
-                if len(unit) == 1 and not unit[0].broadcast_group:
-                    outs[unit[0].edge_id] = _run_edge(unit[0],
-                                                      qids[id(unit)])
-                    return
+                ticket = None
+                if broker is not None:
+                    # hold an admission ticket for the unit's whole
+                    # lifetime: over-quota units queue here (in their own
+                    # thread) while admitted ones move data
+                    try:
+                        ticket = broker.admit(**_admission_vector(unit))
+                    except BaseException as e:  # noqa: BLE001 - aggregated
+                        for ep in unit:
+                            outs[ep.edge_id] = (None, [e])
+                        return
                 try:
-                    outs.update(_run_broadcast_group(unit, qids[id(unit)]))
-                except BaseException as e:  # noqa: BLE001 - aggregated
-                    for ep in unit:
-                        outs[ep.edge_id] = (None, [e])
+                    if len(unit) == 1 and not unit[0].broadcast_group:
+                        outs[unit[0].edge_id] = _run_edge(unit[0],
+                                                          qids[id(unit)])
+                        return
+                    try:
+                        outs.update(_run_broadcast_group(unit,
+                                                         qids[id(unit)]))
+                    except BaseException as e:  # noqa: BLE001 - aggregated
+                        for ep in unit:
+                            outs[ep.edge_id] = (None, [e])
+                finally:
+                    if ticket is not None:
+                        ticket.release()
 
             if len(units) == 1:
                 run(units[0])
@@ -727,6 +756,32 @@ class CompiledPlan:
 
 
 # -- the edge runners ----------------------------------------------------------
+
+
+def _admission_vector(unit: List[EdgePlan]) -> Dict[str, Any]:
+    """The broker resource vector for one work unit.  shm edges cost
+    rings (streams × shuffle fan-in, 2 doorbell fds each while live) and
+    their summed ring bytes; a broadcast group costs ONE segment however
+    many readers it fans out to; channel/socket/file edges cost only a
+    concurrency slot.  Tenant/QoS come from the first edge — a broadcast
+    group shares one export, so its edges share one ticket."""
+    lead = unit[0]
+    rings = segments = nbytes = 0
+    for ep in unit:
+        if ep.via != "pipe" or ep.transport != "shm":
+            continue
+        if ep.broadcast_group:
+            if segments == 0:
+                segments = 1
+                rings += 1
+                nbytes += ep.config.shm_capacity
+            continue
+        n = max(1, ep.streams) * max(1, ep.fanin)
+        rings += n
+        segments += n
+        nbytes += n * ep.config.shm_capacity
+    return {"tenant": lead.tenant, "qos": lead.qos, "rings": rings,
+            "segments": segments, "nbytes": nbytes}
 
 
 def _run_edge(ep: EdgePlan, query_id: str):
@@ -788,8 +843,14 @@ def _run_pipe_edge(ep: EdgePlan, query_id: str):
     try:
         for k in range(max_attempts):
             qid = query_id if k == 0 else f"{query_id}a{k}"
+            # a rendezvous must not outlive its attempt: a side blocked in
+            # the directory past ep.timeout is already abandoned (the
+            # attempt's join gave up on it), and an orphaned exporter
+            # thread still holds its open-splice registration
             cfg = replace(config, transport=transport, resume=token,
-                          attempt=k)
+                          attempt=k,
+                          connect_timeout=min(config.connect_timeout,
+                                              ep.timeout))
             t0 = time.monotonic()
             result, excs = _run_pipe_attempt(ep, cfg, qid)
             rec = {"attempt": k, "query_id": qid, "transport": transport,

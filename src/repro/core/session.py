@@ -130,6 +130,8 @@ def transfer(
     transport: Optional[str] = None,
     streams: Optional[int] = None,
     partition: Optional[str] = None,
+    tenant: str = "default",
+    qos: str = "bulk",
 ) -> TransferResult:
     """Move ``src:table`` into ``dst:dst_table`` over a generated data pipe.
 
@@ -154,6 +156,12 @@ def transfer(
     across ``streams`` connections (the importer registers one private
     slot group per exporter).
 
+    ``tenant`` / ``qos`` tag the transfer for admission when a
+    :class:`repro.core.broker.PipeBroker` is installed (no-ops otherwise):
+    the broker draws the transfer's rings/segments/bytes from that
+    tenant's budget, and ``qos="latency"`` jumps the admission queue
+    ahead of ``"bulk"`` work.
+
     On failure the first exception is raised with every other peer failure
     chained as ``__context__`` (nothing is swallowed).
     """
@@ -169,7 +177,7 @@ def transfer(
     p = _plan(directory=directory, negotiate=False).move(
         src, table, dst, dst_table,
         config=config, workers=workers, import_workers=import_workers,
-        dataset=dataset, timeout=timeout,
+        dataset=dataset, timeout=timeout, tenant=tenant, qos=qos,
     )
     res = p.compile().execute(raise_on_error=False)
     if res.exceptions:

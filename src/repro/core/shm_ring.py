@@ -116,7 +116,9 @@ from .transport import FRAME_EOF, LinkSim, Transport
 
 __all__ = ["ShmRing", "ShmRingTransport", "DEFAULT_RING_CAPACITY",
            "acquire_ring", "acquire_broadcast_ring", "attach_ring",
-           "doorbell_supported", "sweep_orphans"]
+           "doorbell_supported", "sweep_orphans", "set_doorbell_hub",
+           "get_doorbell_hub", "set_pool_limits", "pool_info",
+           "drain_pools"]
 
 _MAGIC = 0x50475231  # 'PGR1'
 _VERSION = 2
@@ -199,9 +201,12 @@ _DB_SLICE = 0.05                  # slice cap (liveness-probe cadence, and
                                   # cross-process lost-wakeup window)
 
 #: platform gate for the doorbell machinery; tests monkeypatch this to
-#: exercise the poll fallback on doorbell-capable hosts
+#: exercise the poll fallback on doorbell-capable hosts.  The wait path
+#: uses ``select.poll`` — ``select.select`` is FD_SETSIZE-bound and
+#: raises ValueError for any fd >= 1024, which broker-scale fan-out
+#: (hundreds of rings x 2+ fds each) reaches routinely.
 _DOORBELL_OK = (hasattr(os, "eventfd") and hasattr(os, "mkfifo")
-                and hasattr(select, "select"))
+                and hasattr(select, "poll"))
 
 _DB_NONE = 0
 _DB_FDS = 1
@@ -255,6 +260,23 @@ _DB_BYTE = b"\x01"
 _ev_lock = threading.Lock()
 _ev_reg: Dict[str, List[int]] = {}  # fifo path -> [eventfd, refcount]
 
+#: process-wide doorbell hub (installed by ``repro.core.broker``): when
+#: set, every doorbell wait parks on a ``threading.Event`` and ONE
+#: selector thread multiplexes all doorbell fds, instead of each waiter
+#: running its own poll syscall loop.  Duck-typed: anything with
+#: ``wait(doorbell, timeout) -> bool`` and ``discard(doorbell)`` works.
+_HUB = None
+
+
+def set_doorbell_hub(hub) -> None:
+    """Install (or, with ``None``, remove) the process-wide doorbell hub."""
+    global _HUB
+    _HUB = hub
+
+
+def get_doorbell_hub():
+    return _HUB
+
 
 def _db_path(name: str, suffix: str) -> str:
     return os.path.join(tempfile.gettempdir(), f"{name}.pgdb-{suffix}")
@@ -294,12 +316,13 @@ def _evfd_release(path: str) -> None:
 class _Doorbell:
     """One wakeup channel: a named-pipe fd plus (same-process) an eventfd."""
 
-    __slots__ = ("path", "fd", "evfd")
+    __slots__ = ("path", "fd", "evfd", "hub_event")
 
     def __init__(self, path: str, create_event: bool):
         self.path = path
         self.fd = os.open(path, os.O_RDWR | os.O_NONBLOCK)
         self.evfd = _evfd_acquire(path, create=create_event)
+        self.hub_event = None  # set by the hub on first hub-mediated wait
 
     def ring(self) -> None:
         if faults._ACTIVE is not None:
@@ -315,23 +338,45 @@ class _Doorbell:
             except OSError:  # pragma: no cover - counter saturated
                 pass
 
-    def wait(self, timeout: float) -> bool:
-        fds = [self.fd] if self.evfd is None else [self.fd, self.evfd]
+    def drain(self, fd: int) -> None:
         try:
-            ready, _, _ = select.select(fds, [], [], max(0.0, timeout))
-        except OSError:  # pragma: no cover - fd raced a close
-            return False
-        for fd in ready:
+            if fd == self.evfd:
+                os.eventfd_read(fd)
+            else:
+                os.read(fd, 64)
+        except OSError:
+            pass
+
+    def wait(self, timeout: float) -> bool:
+        hub = _HUB
+        if hub is not None:
             try:
-                if fd == self.evfd:
-                    os.eventfd_read(fd)
-                else:
-                    os.read(fd, 64)
-            except OSError:
-                pass
+                return hub.wait(self, timeout)
+            except Exception:
+                pass  # hub mid-shutdown: fall through to the local poll
+        # select.poll, NOT select.select: select() encodes fds in a
+        # fixed FD_SETSIZE bitmap and raises ValueError for fd >= 1024,
+        # so any process holding >~1000 fds (broker fan-out) crashed in
+        # the old wait.  poll() takes the fd list by value, no ceiling.
+        poller = select.poll()
+        try:
+            poller.register(self.fd, select.POLLIN)
+            if self.evfd is not None:
+                poller.register(self.evfd, select.POLLIN)
+            ready = poller.poll(max(0.0, timeout) * 1000.0)
+        except (OSError, ValueError):  # pragma: no cover - fd raced a close
+            return False
+        for fd, _ in ready:
+            self.drain(fd)
         return bool(ready)
 
     def close(self) -> None:
+        hub = _HUB
+        if hub is not None:
+            try:
+                hub.discard(self)  # unregister while the fds are open
+            except Exception:  # pragma: no cover - hub mid-shutdown
+                pass
         try:
             os.close(self.fd)
         except OSError:  # pragma: no cover
@@ -399,6 +444,7 @@ class ShmRing:
         # instance, so these split cleanly into reader/writer stats)
         self.wakeups = {"spin": 0, "doorbell": 0, "poll": 0}
         self.readers_evicted = 0
+        self.aborted: Optional[str] = None  # set by abort(); waits raise it
         self._dbs: Dict[str, Optional[_Doorbell]] = {}
         self._epoch = self._u32(_OFF_EPOCH)  # refreshed by claim()/reset()
 
@@ -476,6 +522,7 @@ class ShmRing:
         # counters into the next one's PipeStats)
         self.wakeups = {"spin": 0, "doorbell": 0, "poll": 0}
         self.readers_evicted = 0
+        self.aborted = None
         if role == "reader":
             if self.nreaders:
                 off = self._slot_off(self.slot)
@@ -651,6 +698,31 @@ class ShmRing:
             if db is not None:
                 db.ring()
 
+    def abort(self, reason: str) -> None:
+        """Fail this instance's blocked waits from another thread: every
+        parked or polling ``_wait`` raises ``BrokenPipeError(reason)``.
+        Used by the lease renewer when the directory registration was
+        GC'd — the transfer can never rendezvous, so an importer parked
+        in ``recv(timeout=None)`` must not wait forever."""
+        self.aborted = reason
+        if self.closed:
+            return  # nothing is parked on a closed ring
+        try:
+            self._ring_readers()
+            self._ring_writer()
+        except (OSError, ValueError):  # doorbells/mapping raced a close
+            pass
+
+    def release_doorbells(self) -> None:
+        """Close this instance's doorbell fds without closing the ring.
+        Parked/cached warm segments must not hold fds (idle fd usage has
+        to stay flat in pool size); the next lease reopens them lazily
+        via :meth:`_doorbell` — the fifo paths outlive the fds."""
+        dbs, self._dbs = self._dbs, {}
+        for db in dbs.values():
+            if db is not None:
+                db.close()
+
     # -- waiting -----------------------------------------------------------------
     def _wait(self, ready, peer_ok, timeout: Optional[float], what: str,
               side: str):
@@ -691,6 +763,8 @@ class ShmRing:
                     if r:
                         self.wakeups["doorbell"] += 1
                         return r
+                    if self.aborted:
+                        raise BrokenPipeError(self.aborted)
                     if not peer_ok():
                         raise BrokenPipeError(
                             f"shm ring peer died while {what}")
@@ -710,6 +784,8 @@ class ShmRing:
             r = ready()
             if r:
                 return r
+            if self.aborted:
+                raise BrokenPipeError(self.aborted)
             if sleeps % _LIVENESS_EVERY == 0 and not peer_ok():
                 raise BrokenPipeError(f"shm ring peer died while {what}")
             if deadline is not None and time.monotonic() > deadline:
@@ -874,6 +950,8 @@ class ShmRing:
             pos = self._wait(_readable, _writer_ok, timeout,
                              "waiting for a frame", side="reader") - 1
         except BrokenPipeError:
+            if self.aborted:
+                raise  # an abort() is a loud failure, never a quiet EOF
             return None  # unclean writer death == end of stream (fail-fast)
         tail = self._tail_get()
         commit, kind, ln = _FRAME.unpack_from(self._data, pos)
@@ -1020,7 +1098,10 @@ def _park_ring(ring: ShmRing) -> bool:
             return False  # writer still live and attached: do not recycle
         time.sleep(1e-4)
     key = (ring.capacity, ring._u32(_OFF_DOORBELL) == _DB_FDS)
+    ring.release_doorbells()  # idle fd usage stays flat in pool size
     with _park_lock:
+        if _draining:
+            return False
         rings = _parked.setdefault(key, [])
         if len(rings) >= _PARK_MAX:
             return False
@@ -1070,6 +1151,7 @@ def _bc_peers_done(ring: ShmRing) -> bool:
 
 def _bc_pool_insert(ring: ShmRing) -> bool:
     key = (ring.capacity, ring.nreaders, ring._u32(_OFF_DOORBELL) == _DB_FDS)
+    ring.release_doorbells()
     with _park_lock:
         if _draining:
             return False
@@ -1131,6 +1213,7 @@ def attach_ring(name: str) -> ShmRing:
 def _park_writer(ring: ShmRing) -> bool:
     if ring.closed or ring.owner or ring.nreaders:
         return False
+    ring.release_doorbells()
     with _park_lock:
         # a re-leased segment can briefly have two attachments in this
         # process (the next lease attached fresh before we parked); close
@@ -1148,7 +1231,32 @@ def _park_writer(ring: ShmRing) -> bool:
 _draining = False
 
 
-def _drain_parked() -> None:  # pragma: no cover - exercised at interpreter exit
+def set_pool_limits(park_max: Optional[int] = None) -> int:
+    """Set (and return) the per-size-class warm-pool depth.  The broker
+    raises this when it takes ownership of the pools — a resident
+    control plane amortizes segments across many more plans than a
+    single session does."""
+    global _PARK_MAX
+    if park_max is not None:
+        _PARK_MAX = max(0, int(park_max))
+    return _PARK_MAX
+
+
+def pool_info() -> Dict[str, int]:
+    """Warm-pool occupancy (broker observability / tests)."""
+    with _park_lock:
+        return {
+            "spsc_parked": sum(len(v) for v in _parked.values()),
+            "broadcast_parked": sum(len(v) for v in _bc_parked.values()),
+            "writer_cached": len(_writer_cache),
+            "park_max": _PARK_MAX,
+        }
+
+
+def drain_pools() -> int:
+    """Close every parked/cached warm segment now (broker shutdown and
+    tests); unlike the atexit drain, parking works again afterwards.
+    Returns the number of mappings closed."""
     global _draining
     with _park_lock:
         _draining = True  # background parkers close instead of pooling
@@ -1160,6 +1268,15 @@ def _drain_parked() -> None:  # pragma: no cover - exercised at interpreter exit
         _writer_cache.clear()
     for r in rings:
         r.close()
+    with _park_lock:
+        _draining = False
+    return len(rings)
+
+
+def _drain_parked() -> None:  # pragma: no cover - exercised at interpreter exit
+    global _draining
+    drain_pools()
+    _draining = True  # interpreter exiting: stay drained for good
 
 
 atexit.register(_drain_parked)
