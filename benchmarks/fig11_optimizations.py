@@ -391,6 +391,48 @@ def _broker_probe(n_rows: int) -> dict:
             "peak_fds": peak[0]}
 
 
+def _telemetry_probe(n_rows: int, baseline: float = 0.0) -> dict:
+    """Observability tax rung: the arrowcol shm transfer (polled wait
+    path, same shape as the ``pipegen_shm`` rung) with telemetry left
+    OFF vs fully ON (span tracer enabled, ``trace=True`` pipes).  The
+    disabled path is the contract — ``span()`` must collapse to one
+    module-attribute load and a null context manager — so the figure is
+    the disabled run's wall-clock delta against the plain ``pipegen_shm``
+    rung (``baseline``, <2% is the acceptance bar), with the traced
+    delta in the note.  Interleaved best-of-N, like the other
+    throughput rungs."""
+    from repro.core import disable_tracing, enable_tracing
+    from repro.core.telemetry import tracer
+
+    cfg = PipeConfig(mode="arrowcol", transport="shm", shm_doorbell=False)
+    tcfg = PipeConfig(mode="arrowcol", transport="shm", shm_doorbell=False,
+                      trace=True)
+
+    pipe_transfer("colstore", "graphstore", n_rows, cfg)  # warm
+    out = {"telemetry_off": float("inf"), "telemetry_on": float("inf")}
+    n_spans = 0
+    for _ in range(max(3, REPEATS)):
+        disable_tracing()
+        out["telemetry_off"] = min(
+            out["telemetry_off"],
+            pipe_transfer("colstore", "graphstore", n_rows, cfg))
+        enable_tracing()
+        try:
+            out["telemetry_on"] = min(
+                out["telemetry_on"],
+                pipe_transfer("colstore", "graphstore", n_rows, tcfg))
+            n_spans = max(n_spans, len(tracer().spans()))
+        finally:
+            disable_tracing()
+    off_delta = (out["telemetry_off"] / baseline - 1.0) if baseline else 0.0
+    on_delta = out["telemetry_on"] / out["telemetry_off"] - 1.0
+    emit("fig11.telemetry_overhead", out["telemetry_off"],
+         f"disabled_delta_vs_plain={off_delta * 100:+.1f}% "
+         f"traced={out['telemetry_on']:.4f}s "
+         f"traced_delta={on_delta * 100:+.1f}% spans={n_spans}")
+    return out
+
+
 def _shuffle_probe(n_rows: int, streams: int = 1) -> float:
     """N=2→M=3 hash-partitioned repartitioning transfer (colstore both
     sides: the graphstore analog cannot hold arbitrary relations).  With
@@ -448,6 +490,8 @@ def main(n_rows: int = DEFAULT_ROWS, transports=None, streams_sweep=None) -> dic
     # broker stress: 200 concurrent plans through one resident broker
     # vs the per-transfer-directory sequential baseline
     out["broker"] = _broker_probe(n_rows)
+    # observability tax: tracing disabled (the near-free contract) vs on
+    out["telemetry"] = _telemetry_probe(n_rows, baseline=out["pipegen_shm"])
     # stream-fabric rungs: striping sweep + N→M shuffle
     out["streams"] = _streams_sweep(
         n_rows,

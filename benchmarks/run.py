@@ -51,6 +51,50 @@ MODULES = {
 }
 
 
+def provenance(argv, quick: bool) -> dict:
+    """Everything needed to interpret a sweep after the fact: what code
+    ran, where, on which toolchain, with which transports available.
+    Every probe is individually best-effort — a missing git binary or a
+    CPU-only jax must not fail the run."""
+    import platform
+    import socket as socketmod
+    import subprocess
+
+    prov = {
+        "argv": list(argv) if argv is not None else sys.argv[1:],
+        "quick": quick,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+        "hostname": socketmod.gethostname(),
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+    }
+    try:
+        prov["git_sha"] = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10).stdout.strip() or None
+        dirty = subprocess.run(
+            ["git", "status", "--porcelain"], capture_output=True,
+            text=True, timeout=10).stdout.strip()
+        prov["git_dirty"] = bool(dirty)
+    except Exception:  # noqa: BLE001 - no git / not a checkout
+        prov["git_sha"] = None
+    for modname in ("numpy", "jax"):
+        try:
+            prov[modname] = __import__(modname).__version__
+        except Exception:  # noqa: BLE001 - optional dep absent
+            prov[modname] = None
+    try:
+        from repro.core.shm_ring import doorbell_supported
+
+        prov["transports"] = {
+            "socket": True, "channel": True, "shm": True,
+            "shm_doorbell": bool(doorbell_supported()),
+        }
+    except Exception:  # noqa: BLE001
+        prov["transports"] = None
+    return prov
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -116,8 +160,10 @@ def main(argv=None) -> int:
                                              "derived": ""}
         sys.stdout.flush()
     if args.json:
+        doc = {"provenance": provenance(argv, args.quick),
+               "results": common.RESULTS}
         with open(args.json, "w") as f:
-            json.dump(common.RESULTS, f, indent=2, sort_keys=True)
+            json.dump(doc, f, indent=2, sort_keys=True)
             f.write("\n")
     return 1 if failures else 0
 

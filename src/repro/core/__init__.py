@@ -18,10 +18,28 @@ from .datapipe import (
     PipeStats,
     ReservedName,
     collect_stats,
+    collect_stats_by_attempt,
     is_reserved,
     open_pipe_reader,
     open_pipe_writer,
     parse_reserved,
+)
+from .telemetry import (
+    FlightRecorder,
+    MetricsRegistry,
+    Tracer,
+    attach_flight,
+    chrome_trace,
+    counter,
+    disable_tracing,
+    dump_chrome_trace,
+    enable_tracing,
+    gauge,
+    histogram,
+    registry,
+    span,
+    trace_context,
+    tracing_enabled,
 )
 from .fabric import (
     HashPartitioner,

@@ -53,6 +53,8 @@ from typing import Dict, List, Optional, Tuple
 
 from .directory import DirectoryServer, WorkerDirectory, set_directory
 from . import shm_ring
+from . import telemetry
+from .iobuf import default_pool
 
 __all__ = ["PipeBroker", "DoorbellHub", "TenantQuota", "BrokerBusy",
            "QOS_CLASSES", "get_broker", "set_broker", "process_fd_count"]
@@ -319,6 +321,11 @@ class PipeBroker:
         self.admitted = 0
         self.queued = 0
         self.rejected = 0
+        # per-tenant/per-class attribution (telemetry mirrors of the
+        # counters above; served verbatim by the stats RPC)
+        self._grants_by: Dict[str, int] = {}     # "tenant/qos" -> grants
+        self._rejects_by: Dict[str, int] = {}    # "tenant/qos" -> rejects
+        self._grant_wait = telemetry.histogram("broker.grant_wait_s")
         # lifecycle
         self._stop = threading.Event()
         self._reaper: Optional[threading.Thread] = None
@@ -336,7 +343,9 @@ class PipeBroker:
         if self._serve:
             self.server = DirectoryServer(
                 self._host, self._port, handlers=self._handlers,
-                directory=self.directory).start()
+                directory=self.directory)
+            self.server.stats_provider = self.stats  # "stats" RPC / pipetop
+            self.server.start()
             self.host, self.port = self.server.host, self.server.port
         self._reaper = threading.Thread(target=self._reap, daemon=True,
                                         name="pipegen-broker-reaper")
@@ -463,9 +472,13 @@ class PipeBroker:
                     max(0, int(rings if segments is None else segments)),
                     max(0, int(nbytes)))
         timeout = self.admit_timeout if timeout is None else timeout
+        t_enter = time.monotonic()
         with self._cv:
             if not self._can_ever_fit(t):
                 self.rejected += 1
+                self._count_by(self._rejects_by, tenant, qos)
+                telemetry.counter("broker.rejects",
+                                  tenant=tenant, qos=qos).inc()
                 raise BrokerBusy(
                     f"admission for tenant={tenant!r} qos={qos!r} "
                     f"(rings={t.rings}, segments={t.segments}, "
@@ -485,6 +498,9 @@ class PipeBroker:
                                  else deadline - time.monotonic())
                     if remaining <= 0:
                         self.rejected += 1
+                        self._count_by(self._rejects_by, tenant, qos)
+                        telemetry.counter("broker.rejects",
+                                          tenant=tenant, qos=qos).inc()
                         raise BrokerBusy(
                             f"admission for tenant={tenant!r} qos={qos!r} "
                             f"queued past {timeout}s (over quota)")
@@ -492,6 +508,8 @@ class PipeBroker:
             finally:
                 self._waiting.remove(t)
                 heapq.heapify(self._waiting)
+                telemetry.gauge("broker.queue_depth").set(
+                    len(self._waiting))
             self._use[0] += t.rings
             self._use[1] += t.segments
             self._use[2] += t.nbytes
@@ -501,8 +519,16 @@ class PipeBroker:
             by[2] += t.nbytes
             self._use_by_qos[t.qos] += 1
             self.admitted += 1
+            self._count_by(self._grants_by, tenant, qos)
             self._cv.notify_all()  # another small ticket may also fit
+        self._grant_wait.observe(time.monotonic() - t_enter)
+        telemetry.counter("broker.grants", tenant=tenant, qos=qos).inc()
         return Admission(self, t)
+
+    @staticmethod
+    def _count_by(table: Dict[str, int], tenant: str, qos: str) -> None:
+        key = f"{tenant}/{qos}"
+        table[key] = table.get(key, 0) + 1
 
     def _release(self, t: _Ticket) -> None:
         with self._cv:
@@ -518,10 +544,19 @@ class PipeBroker:
 
     # -- observability ----------------------------------------------------------
     def stats(self) -> Dict[str, object]:
+        """JSON-serializable broker snapshot: admission counters, live
+        resource use (global / per-tenant / per-class), grant-wait
+        latency, pool occupancy, and the process metrics registry.
+        Served verbatim by the directory's ``stats`` RPC and rendered by
+        ``python -m repro.tools.pipetop``."""
         with self._cv:
             use = list(self._use)
             waiting = len(self._waiting)
             by_qos = dict(self._use_by_qos)
+            by_tenant = {k: list(v) for k, v in self._use_by_tenant.items()}
+            grants_by = dict(self._grants_by)
+            rejects_by = dict(self._rejects_by)
+        gw = self._grant_wait
         out: Dict[str, object] = {
             "admitted": self.admitted,
             "queued": self.queued,
@@ -531,13 +566,25 @@ class PipeBroker:
             "active_segments": use[1],
             "active_bytes": use[2],
             "active_by_qos": by_qos,
+            "active_by_tenant": by_tenant,  # tenant -> [rings, segs, bytes]
+            "grants_by": grants_by,         # "tenant/qos" -> grants
+            "rejects_by": rejects_by,       # "tenant/qos" -> BrokerBusy count
+            "grant_wait": {"total": gw.total, "sum_s": gw.sum,
+                           "p50_s": gw.quantile(0.5),
+                           "p95_s": gw.quantile(0.95),
+                           "p99_s": gw.quantile(0.99)},
             "pool": shm_ring.pool_info(),
+            "buffer_pool": default_pool().stats.snapshot(),
             "fds": process_fd_count(),
+            "metrics": telemetry.registry().snapshot(),
         }
         if self.hub is not None:
             out["hub_waits"] = self.hub.waits
             out["hub_wakeups"] = self.hub.wakeups
             out["hub_registered"] = self.hub.registered
+            telemetry.gauge("hub.registered").set(self.hub.registered)
+            telemetry.gauge("hub.wakeups").set(self.hub.wakeups)
+            telemetry.gauge("hub.waits").set(self.hub.waits)
         return out
 
 

@@ -37,9 +37,11 @@ from dataclasses import dataclass, field, replace
 from typing import Any, Iterator, List, Optional, Sequence, Tuple
 from urllib.parse import parse_qs, urlparse
 
+from . import telemetry
 from .astring import AString
 from .compression import Codec, get_codec
 from .directory import DirectoryLike, Endpoint, get_directory
+from .telemetry import FlightRecorder, attach_flight
 from .iobuf import BufferPool, DecodeArena, SegmentList, default_pool
 from .shm_ring import (
     DEFAULT_RING_CAPACITY,
@@ -91,6 +93,7 @@ __all__ = [
     "open_pipe_reader",
     "PipeStats",
     "collect_stats",
+    "collect_stats_by_attempt",
     "clear_resume",
 ]
 
@@ -219,6 +222,17 @@ class PipeConfig:
     resume: Optional[str] = None  # resume-ledger token (edge-stable)
     attempt: int = 0  # retry epoch (0 = first try)
     lease_s: float = 0.0  # directory lease TTL (0 = unleased)
+    # telemetry knobs (repro.core.telemetry).  ``trace`` opts this pipe
+    # into span recording (enabling the process tracer if needed);
+    # ``trace_ctx`` is the propagated "trace_id:span_id" parent context,
+    # stamped by the plan executor so both ends of an edge join one
+    # trace; ``flight_depth`` bounds the per-pipe flight-recorder ring;
+    # ``recorder`` shares the executor's per-edge FlightRecorder so pipe
+    # events land in the same timeline as admission/retry events.
+    trace: bool = False  # record lifecycle spans for this pipe
+    trace_ctx: str = ""  # propagated parent trace context
+    flight_depth: int = 64  # flight-recorder ring depth (events)
+    recorder: Optional["FlightRecorder"] = None  # shared edge recorder
 
     def meta(self) -> dict:
         return {
@@ -277,29 +291,71 @@ class PipeStats:
 # -- per-transfer stats sink ---------------------------------------------------
 # Pipes are opened deep inside engine code, so the session layer cannot reach
 # them directly; closing pipes fold their PipeStats in here under the
-# (dataset, query_id) of their reserved name, and
+# (dataset, query_id) of their reserved name — keyed *per attempt* inside
+# the entry, so a failed attempt's counters and its successful retry's
+# counters stay distinguishable — and
 # :func:`repro.core.session.transfer` collects the merged views into the
 # TransferResult.  Bounded so an uncollected benchmark loop cannot grow it.
 
 _SINK_MAX = 256
+#: per-pipe cap on buffered phase spans (a traced pipe must stay O(1)
+#: in memory however long the stream runs; the whole-pipe span and the
+#: lifecycle spans always fit)
+_TSPAN_MAX = 4096
 _sink_lock = threading.Lock()
+# (dataset, query_id) -> {role: {attempt: PipeStats}}
 _stats_sink: "dict[Tuple[str, str], dict]" = {}
 
 
-def _record_stats(rn: ReservedName, role: str, stats: "PipeStats") -> None:
+def _record_stats(rn: ReservedName, role: str, stats: "PipeStats",
+                  attempt: int = 0) -> None:
     with _sink_lock:
-        if len(_stats_sink) >= _SINK_MAX:
+        key = (rn.dataset, rn.query_id)
+        if key not in _stats_sink and len(_stats_sink) >= _SINK_MAX:
             _stats_sink.pop(next(iter(_stats_sink)))
-        roles = _stats_sink.setdefault((rn.dataset, rn.query_id), {})
-        agg = roles.setdefault(role, PipeStats())
+        roles = _stats_sink.setdefault(key, {})
+        attempts = roles.setdefault(role, {})
+        agg = attempts.setdefault(attempt, PipeStats())
         agg.merge(stats)
+    reg = telemetry.registry()
+    reg.counter("pipe.closes", role=role).inc()
+    reg.counter("pipe.bytes", role=role).inc(stats.bytes_sent)
+    reg.counter("pipe.frames", role=role).inc(stats.frames_sent)
+    reg.counter("pipe.rows", role=role).inc(stats.rows)
+    if stats.resume_skipped:
+        reg.counter("pipe.resume_skipped").inc(stats.resume_skipped)
+    if stats.resume_replayed:
+        reg.counter("pipe.resume_replayed").inc(stats.resume_replayed)
+    if stats.poll_sleeps:
+        reg.counter("shm.poll_sleeps").inc(stats.poll_sleeps)
+    if stats.doorbell_waits:
+        reg.counter("shm.doorbell_waits").inc(stats.doorbell_waits)
 
 
 def collect_stats(dataset: str, query_id: str = "0") -> "dict[str, PipeStats]":
     """Pop the merged per-role (``export``/``import``) stats for one
-    transfer — aggregated across workers, shuffle members, and streams."""
+    transfer — aggregated across workers, shuffle members, streams, *and*
+    attempts (the folded view; :func:`collect_stats_by_attempt` peeks the
+    per-attempt breakdown before this folds it)."""
     with _sink_lock:
-        return _stats_sink.pop((dataset, query_id), {})
+        roles = _stats_sink.pop((dataset, query_id), {})
+    out: "dict[str, PipeStats]" = {}
+    for role, attempts in roles.items():
+        agg = PipeStats()
+        for k in sorted(attempts):
+            agg.merge(attempts[k])
+        out[role] = agg
+    return out
+
+
+def collect_stats_by_attempt(
+        dataset: str, query_id: str = "0") -> "dict[str, dict]":
+    """Non-destructive per-attempt view: ``{role: {attempt: PipeStats}}``.
+    Unlike :func:`collect_stats` this does not pop the entry, so both
+    views of one transfer are available."""
+    with _sink_lock:
+        roles = _stats_sink.get((dataset, query_id), {})
+        return {role: dict(attempts) for role, attempts in roles.items()}
 
 
 # -- resume ledgers ------------------------------------------------------------
@@ -473,6 +529,23 @@ class DataPipeOutput:
         self.stats = PipeStats()
         self.closed = False
         self._verify_rows: List[tuple] = []
+        # telemetry: spans are timed locally and recorded at close under
+        # the finally-resolved trace context (explicit config ctx beats
+        # the importer's registration ctx beats a fresh root), so both
+        # ends of the edge land in one trace no matter which side
+        # originated it.  The flight recorder notes lifecycle events for
+        # postmortem attachment (shared with the executor's edge recorder
+        # when the plan passes one in).
+        if self.config.trace and not telemetry.tracing_enabled():
+            telemetry.enable_tracing()
+        self._trace_on = self.config.trace or telemetry.tracing_enabled()
+        self._trace_ctx = self.config.trace_ctx or telemetry.current_ctx()
+        self._tspans: List[tuple] = []
+        self._t_open = time.monotonic()
+        self._recorder = self.config.recorder or FlightRecorder(
+            self.config.flight_depth, name=f"export {rn.dataset}")
+        self._recorder.note("export.open", dataset=rn.dataset,
+                            query=rn.query_id, attempt=self.config.attempt)
         # validate codec/format before any rendezvous so a bad config fails
         # fast instead of leaving a half-registered peer behind
         self._codec: Codec = get_codec(self.config.codec)
@@ -482,6 +555,7 @@ class DataPipeOutput:
             else None
         )
         directory = directory or get_directory()
+        _t_rdv = time.monotonic()
         if endpoint is None:
             endpoint = directory.query(
                 rn.dataset,
@@ -489,6 +563,9 @@ class DataPipeOutput:
                 export_workers=rn.workers,
                 timeout=self.config.connect_timeout,
             )
+        if not self._trace_ctx:
+            # adopt the importer's registration context, if it traced
+            self._trace_ctx = getattr(endpoint, "trace", "") or ""
         if endpoint.is_group:
             # the importer striped its pipe: connect every member (in
             # registration order -- the importer accepts in the same order)
@@ -497,6 +574,18 @@ class DataPipeOutput:
             self._transport: Transport = StripedSender(members)
         else:
             self._transport = _connect(endpoint, self.config.link)
+        if self._trace_on:
+            self._tspans.append(("export.rendezvous", _t_rdv,
+                                 time.monotonic(), None))
+            if not self._trace_ctx:
+                self._trace_ctx = telemetry.new_trace_ctx()
+            # the span id the whole-pipe span will be recorded under at
+            # close; carried in the schema hello so importer spans parent
+            # to this exporter when the trace originates here
+            self._pipe_sid = telemetry.new_span_id()
+        else:
+            self._pipe_sid = ""
+        self._recorder.note("export.connected")
         # resumable edge: the importer's registration carries the acked
         # watermark from the previous attempt; this export skips its first
         # ``resume_seq`` data frames at the _send funnel (mode-agnostic —
@@ -617,9 +706,38 @@ class DataPipeOutput:
             per_stream = getattr(self._transport, "per_stream", None)
             if per_stream is not None:
                 self.stats.per_stream = per_stream()
-            _record_stats(self.reserved, "export", self.stats)
+            _record_stats(self.reserved, "export", self.stats,
+                          attempt=self.config.attempt)
+            self._recorder.note(
+                "export.close", bytes=self.stats.bytes_sent,
+                frames=self.stats.frames_sent,
+                error=type(sender_err).__name__ if sender_err else None)
+            self._emit_spans()
         if sender_err is not None:
-            raise sender_err
+            raise attach_flight(sender_err, self._recorder)
+
+    def _emit_spans(self) -> None:
+        """Record the pipe's lifecycle spans under the resolved trace
+        context (buffered locally so late-arriving context — the
+        importer's registration — still wins over a fresh root)."""
+        tr = telemetry.tracer()
+        if not self._trace_on or tr is None:
+            return
+        trace_id, parent = telemetry.split_ctx(
+            self._trace_ctx or telemetry.new_trace_ctx())
+        rn = self.reserved
+        pipe_sid = tr.record(
+            "export.pipe", self._t_open, time.monotonic(),
+            trace_id=trace_id, parent_id=parent,
+            span_id=self._pipe_sid or None,
+            attrs={"dataset": rn.dataset, "query": rn.query_id,
+                   "attempt": self.config.attempt, "mode": self.config.mode,
+                   "bytes": self.stats.bytes_sent,
+                   "frames": self.stats.frames_sent,
+                   "rows": self.stats.rows})
+        for name, t0, t1, attrs in self._tspans:
+            tr.record(name, t0, t1, trace_id=trace_id,
+                      parent_id=pipe_sid, attrs=attrs)
 
     def __enter__(self) -> "DataPipeOutput":
         return self
@@ -629,6 +747,19 @@ class DataPipeOutput:
 
     # -- frame egress (all rungs funnel through here) ------------------------------
     def _send(self, kind: bytes, segs: SegmentList, compress: bool = True) -> None:
+        if self._trace_on:
+            t0 = time.monotonic()
+            try:
+                return self._send_impl(kind, segs, compress)
+            finally:
+                if len(self._tspans) < _TSPAN_MAX:
+                    self._tspans.append((
+                        "export.send", t0, time.monotonic(),
+                        {"kind": kind.decode("ascii", "replace")}))
+        return self._send_impl(kind, segs, compress)
+
+    def _send_impl(self, kind: bytes, segs: SegmentList,
+                   compress: bool = True) -> None:
         """Route one frame out: codec at the segment level (data frames
         only -- schema/verify/EOF travel uncompressed), then either the
         double-buffered sender thread (pipelined) or an inline vectored
@@ -813,6 +944,11 @@ class DataPipeOutput:
         self, schema: Schema, header_names: Optional[Sequence[str]] = None
     ) -> None:
         meta = self.config.meta()
+        if self._trace_on and self._trace_ctx:
+            # cross-process propagation: the importer adopts this trace
+            # and parents its spans under the exporter's pipe span
+            tid, _ = telemetry.split_ctx(self._trace_ctx)
+            meta["trace"] = f"{tid}:{self._pipe_sid}"
         if isinstance(self._asm, DelimitedAssembler) and self._asm.delimiter:
             meta["delimiter"] = self._asm.delimiter
         if header_names:
@@ -825,7 +961,11 @@ class DataPipeOutput:
             hello = json.dumps({"epoch": self.config.attempt,
                                 "from": self._resume_from}).encode("utf-8")
             self._send(FRAME_RESUME, SegmentList([hello]), compress=False)
+            self._recorder.note("export.resume_hello",
+                                epoch=self.config.attempt,
+                                skip=self._resume_from)
         self._schema_sent = True
+        self._recorder.note("export.schema")
 
     def _send_verify(self, rb: RowBlock) -> None:
         """Probabilistic runtime check: ship the original text rendering of
@@ -875,11 +1015,32 @@ class DataPipeInput:
         resume: Optional[str] = None,
         attempt: int = 0,
         lease_s: float = 0.0,
+        trace: bool = False,
+        trace_ctx: str = "",
+        flight_depth: int = 64,
+        recorder: Optional[FlightRecorder] = None,
     ):
         rn = parse_reserved(filename)
         if rn is None:
             raise ValueError(f"{filename!r} is not a reserved pipe name")
         self.reserved = rn
+        self._attempt = attempt
+        if trace and not telemetry.tracing_enabled():
+            telemetry.enable_tracing()
+        self._trace_on = trace or telemetry.tracing_enabled()
+        self._trace_ctx = trace_ctx or telemetry.current_ctx()
+        self._tspans: List[tuple] = []
+        self._t_open = time.monotonic()
+        self._recorder = recorder or FlightRecorder(
+            flight_depth, name=f"import {rn.dataset}")
+        self._recorder.note("import.open", dataset=rn.dataset,
+                            query=rn.query_id, transport=transport,
+                            attempt=attempt)
+        # registration context: what we publish in the directory so an
+        # exporter with no context of its own joins *our* trace
+        self._reg_ctx = ""
+        if self._trace_on:
+            self._reg_ctx = self._trace_ctx or telemetry.new_trace_ctx()
         directory = directory or get_directory()
         if transport is None:
             transport = "channel" if channel is not None else "socket"
@@ -907,6 +1068,9 @@ class DataPipeInput:
         _res_kw: dict = (
             {"resume_seq": self._resume_base, "resume_epoch": attempt}
             if self._ledger is not None else {})
+        if self._reg_ctx:
+            _res_kw["trace"] = self._reg_ctx
+        _t_rdv = time.monotonic()
         if fanin > 1:
             self._transport: Transport = self._rendezvous_fanin(
                 rn, directory, transport, fanin, host, link, workers,
@@ -948,6 +1112,10 @@ class DataPipeInput:
             conn, _ = lsock.accept()
             lsock.close()
             self._transport = SocketTransport(conn, link)
+        if self._trace_on:
+            self._tspans.append(("import.rendezvous", _t_rdv,
+                                 time.monotonic(), None))
+        self._recorder.note("import.connected")
         # leased registration: keep re-stamping the directory entry while
         # this importer is alive; if it dies (thread or process), renewals
         # stop and the lease expires into the directory's dead-peer GC
@@ -978,6 +1146,9 @@ class DataPipeInput:
                         # pipe lease-lost, kick any wait parked in the
                         # ring, and let the executor's retry path
                         # re-register under a fresh attempt.
+                        self._recorder.note("import.lease_lost",
+                                            dataset=rn.dataset,
+                                            query=rn.query_id)
                         self._lease_lost.set()
                         ring = getattr(self._transport, "ring", None)
                         if ring is not None:
@@ -1169,20 +1340,31 @@ class DataPipeInput:
     # -- negotiation -------------------------------------------------------------
     def _check_lease(self) -> None:
         if self._lease_lost.is_set():
-            raise BrokenPipeError(self._lease_msg)
+            raise attach_flight(BrokenPipeError(self._lease_msg),
+                                self._recorder)
 
     def _start(self) -> None:
         if self._started:
             return
         self._check_lease()
+        t0 = time.monotonic()
         kind, payload = self._transport.recv_frame()
+        if self._trace_on:
+            self._tspans.append(("import.wait_schema", t0,
+                                 time.monotonic(), None))
         if kind == FRAME_EOF:
             self._eof = True  # stub socket: orphaned importer (section 4.2)
             self._started = True
+            self._recorder.note("import.orphaned_eof")
             return
         if kind != FRAME_SCHEMA:
             raise IOError(f"pipe stream must begin with schema frame, got {kind!r}")
         self.schema, self.meta = decode_schema(payload)
+        self._recorder.note("import.schema", mode=self.meta.get("mode"))
+        if not self._trace_ctx and self.meta.get("trace"):
+            # adopt the exporter's trace from the hello: our spans parent
+            # under its pipe span, landing both ends in one trace
+            self._trace_ctx = str(self.meta["trace"])
         self._codec = get_codec(self.meta.get("codec", "none"))
         mode = self.meta.get("mode", "arrowcol")
         self._wire = (
@@ -1212,7 +1394,15 @@ class DataPipeInput:
             return kind, data
         while not self._eof:
             self._check_lease()
-            kind, payload = self._transport.recv_frame()
+            if self._trace_on:
+                t0 = time.monotonic()
+                kind, payload = self._transport.recv_frame()
+                if len(self._tspans) < _TSPAN_MAX:
+                    self._tspans.append((
+                        "import.wait", t0, time.monotonic(),
+                        {"kind": bytes(kind).decode("ascii", "replace")}))
+            else:
+                kind, payload = self._transport.recv_frame()
             if kind == FRAME_EOF:
                 self._eof = True
                 return None
@@ -1222,6 +1412,9 @@ class DataPipeInput:
                 doc = json.loads(bytes(payload).decode("utf-8"))
                 self._resume_skip = max(
                     0, self._resume_base - int(doc.get("from", 0)))
+                self._recorder.note("import.resume_hello",
+                                    epoch=doc.get("epoch"),
+                                    dup_skip=self._resume_skip)
                 continue
             if kind == FRAME_VERIFY:
                 if self._resume_base:
@@ -1247,16 +1440,23 @@ class DataPipeInput:
         if frame is None:
             return None
         kind, data = frame
-        if kind == FRAME_BLOCK:
-            block = self._wire.decode_block(data, self.schema,
-                                            arena=self._arena)
-            self._check_verify(block)
-            return block
-        if kind == FRAME_PARTS:
-            return self._parts_to_block(data)
-        if kind == FRAME_TEXT:
-            return self._text_to_block(data.decode("utf-8", "surrogatepass"))
-        raise IOError(f"unexpected frame kind {kind!r}")  # pragma: no cover
+        t0 = time.monotonic() if self._trace_on else 0.0
+        try:
+            if kind == FRAME_BLOCK:
+                block = self._wire.decode_block(data, self.schema,
+                                                arena=self._arena)
+                self._check_verify(block)
+                return block
+            if kind == FRAME_PARTS:
+                return self._parts_to_block(data)
+            if kind == FRAME_TEXT:
+                return self._text_to_block(
+                    data.decode("utf-8", "surrogatepass"))
+            raise IOError(f"unexpected frame kind {kind!r}")  # pragma: no cover
+        finally:
+            if self._trace_on and len(self._tspans) < _TSPAN_MAX:
+                self._tspans.append(("import.decode", t0,
+                                     time.monotonic(), None))
 
     # -- typed fast path -----------------------------------------------------------
     def blocks(self) -> Iterator[ColumnBlock]:
@@ -1526,8 +1726,34 @@ class DataPipeInput:
         per_stream = getattr(self._transport, "per_stream", None)
         if per_stream is not None:
             self.stats.per_stream = per_stream()
-        _record_stats(self.reserved, "import", self.stats)
+        _record_stats(self.reserved, "import", self.stats,
+                      attempt=self._attempt)
+        self._recorder.note("import.close",
+                            replayed=self.stats.resume_replayed,
+                            rows=self.stats.rows)
+        self._emit_spans()
         self._transport.close()
+
+    def _emit_spans(self) -> None:
+        """Record the import-side lifecycle spans under the resolved
+        trace context (hello > registration > fresh root)."""
+        tr = telemetry.tracer()
+        if not self._trace_on or tr is None:
+            return
+        ctx = self._trace_ctx or self._reg_ctx or telemetry.new_trace_ctx()
+        trace_id, parent = telemetry.split_ctx(ctx)
+        rn = self.reserved
+        pipe_sid = tr.record(
+            "import.pipe", self._t_open, time.monotonic(),
+            trace_id=trace_id, parent_id=parent,
+            attrs={"dataset": rn.dataset, "query": rn.query_id,
+                   "attempt": self._attempt,
+                   "mode": self.meta.get("mode"),
+                   "rows": self.stats.rows,
+                   "replayed": self.stats.resume_replayed})
+        for name, t0, t1, attrs in self._tspans:
+            tr.record(name, t0, t1, trace_id=trace_id,
+                      parent_id=pipe_sid, attrs=attrs)
 
     def __enter__(self) -> "DataPipeInput":
         return self

@@ -52,7 +52,7 @@ import socket
 import threading
 import time
 from dataclasses import dataclass, field, replace as _dc_replace
-from typing import Dict, List, Optional, Tuple, Union
+from typing import Any, Dict, List, Optional, Tuple, Union
 
 from . import faults
 from .transport import (
@@ -108,6 +108,7 @@ class Endpoint:
     resume_seq: int = 0                # acked data frames (resumed edges)
     resume_epoch: int = 0              # attempt number of this registration
     lease_deadline: float = 0.0        # directory-stamped TTL (0 = no lease)
+    trace: str = ""                    # importer's "trace_id:span_id" ctx
 
     @property
     def is_channel(self) -> bool:
@@ -545,6 +546,7 @@ def _ep_to_doc(ep: Endpoint) -> dict:
         "pid": ep.pid,
         "resume_seq": ep.resume_seq,
         "resume_epoch": ep.resume_epoch,
+        "trace": ep.trace,
         "members": [_ep_to_doc(m) for m in ep.members],
     }
 
@@ -560,6 +562,7 @@ def _ep_from_doc(doc: dict) -> Endpoint:
         pid=int(doc.get("pid", 0)),
         resume_seq=int(doc.get("resume_seq", 0)),
         resume_epoch=int(doc.get("resume_epoch", 0)),
+        trace=str(doc.get("trace", "")),
         members=tuple(_ep_from_doc(m) for m in doc.get("members", [])),
     )
 
@@ -606,6 +609,10 @@ class DirectoryServer:
         self.handlers = max(1, int(handlers))
         self._work: "queue.Queue" = queue.Queue()
         self._pool: List[threading.Thread] = []
+        # introspection: a zero-arg callable returning a JSON-serializable
+        # dict, answered by the "stats" op (the broker installs its own
+        # stats() here; repro.tools.pipetop polls it)
+        self.stats_provider: Optional[Any] = None
 
     def start(self) -> "DirectoryServer":
         for i in range(self.handlers):
@@ -745,6 +752,10 @@ class DirectoryServer:
                 resp = {"ok": True,
                         "sender": self.directory.next_sender(
                             req["dataset"], req.get("query_id", "0"))}
+            elif req["op"] == "stats":
+                provider = self.stats_provider
+                resp = {"ok": True,
+                        "stats": provider() if provider is not None else {}}
             else:
                 resp = {"ok": False, "error": f"bad op {req['op']!r}"}
         except OSError:
@@ -900,6 +911,14 @@ class DirectoryClient:
                 "endpoint": _ep_to_doc(endpoint),
             }
         )
+
+    def stats(self) -> dict:
+        """Snapshot the server's stats provider (the broker's ``stats()``
+        when one is installed; ``{}`` on a plain directory server)."""
+        resp = self._rpc({"op": "stats"})
+        if not resp.get("ok"):
+            raise IOError(resp.get("error", "directory stats failed"))
+        return resp.get("stats", {})
 
     def next_sender(self, dataset: str, query_id: str = "0") -> int:
         resp = self._rpc(

@@ -48,6 +48,8 @@ from contextlib import contextmanager
 from dataclasses import dataclass, field
 from typing import Any, Dict, Iterable, List, Optional, Tuple
 
+from . import telemetry
+
 __all__ = [
     "FaultPlan",
     "FaultRule",
@@ -176,6 +178,11 @@ class FaultPlan:
                 self.events.append((site, act, dict(ctx)))
         if act is None:
             return None
+        # injected faults always land in the process flight recorder, so
+        # a failure's attached timeline shows the fault that caused it
+        telemetry.fault_recorder.note(
+            "fault.injected", site=site, action=act, nth=rule.seen, **ctx)
+        telemetry.counter("faults.fired", site=site, action=act).inc()
         if act == "delay":
             time.sleep(rule.delay_s)
             return None

@@ -227,6 +227,10 @@ def pipegen_open(
                              stream_window=cfg.stream_window,
                              resume=cfg.resume,
                              attempt=cfg.attempt,
-                             lease_s=cfg.lease_s)
+                             lease_s=cfg.lease_s,
+                             trace=cfg.trace,
+                             trace_ctx=cfg.trace_ctx,
+                             flight_depth=cfg.flight_depth,
+                             recorder=cfg.recorder)
         return _PipeBytesReader(pipe) if binary else pipe
     return (real_open or builtins.open)(filename, mode, **kw)

@@ -47,12 +47,14 @@ import time
 from dataclasses import dataclass, field, fields as dc_fields, replace
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
+from . import telemetry
 from .broker import QOS_CLASSES, get_broker
 from .codegen import PipeEnabledEngine
-from .datapipe import PipeConfig, collect_stats
+from .datapipe import PipeConfig, collect_stats, collect_stats_by_attempt
 from .directory import DirectoryLike, set_directory
 from .fabric import compute_range_bounds, parse_partition
 from .ioredirect import PipeOpenContext
+from .telemetry import FlightRecorder, attach_flight
 
 __all__ = [
     "plan",
@@ -322,6 +324,11 @@ class TransferPlan:
         — before any data moves."""
         if not self._edges:
             raise PlanError("empty plan: add edges with move()")
+        with telemetry.span("plan.compile", edges=len(self._edges)):
+            return self._compile(directory)
+
+    def _compile(self, directory: Optional[DirectoryLike] = None
+                 ) -> "CompiledPlan":
         n = len(self._edges)
         # duplicate targets: two edges writing the same (engine, table)
         produced: Dict[Tuple[int, str], int] = {}
@@ -694,33 +701,21 @@ class CompiledPlan:
 
             qids = {id(unit): f"q{next(_query_counter)}" for unit in units}
             broker = get_broker()
+            # captured before the worker threads spawn: thread-locals do
+            # not cross threads, so each unit re-adopts the plan's trace
+            # context explicitly
+            plan_ctx = telemetry.current_ctx()
 
             def run(unit: List[EdgePlan]) -> None:
-                ticket = None
-                if broker is not None:
-                    # hold an admission ticket for the unit's whole
-                    # lifetime: over-quota units queue here (in their own
-                    # thread) while admitted ones move data
-                    try:
-                        ticket = broker.admit(**_admission_vector(unit))
-                    except BaseException as e:  # noqa: BLE001 - aggregated
-                        for ep in unit:
-                            outs[ep.edge_id] = (None, [e])
-                        return
-                try:
-                    if len(unit) == 1 and not unit[0].broadcast_group:
-                        outs[unit[0].edge_id] = _run_edge(unit[0],
-                                                          qids[id(unit)])
-                        return
-                    try:
-                        outs.update(_run_broadcast_group(unit,
-                                                         qids[id(unit)]))
-                    except BaseException as e:  # noqa: BLE001 - aggregated
-                        for ep in unit:
-                            outs[ep.edge_id] = (None, [e])
-                finally:
-                    if ticket is not None:
-                        ticket.release()
+                recorder = FlightRecorder(
+                    name=f"edge {unit[0].edge_id} "
+                         f"({unit[0].dataset}:{qids[id(unit)]})")
+                with telemetry.trace_context(plan_ctx), \
+                        telemetry.span("plan.unit",
+                                       edge=unit[0].edge_id,
+                                       dataset=unit[0].dataset):
+                    self._run_unit(unit, qids[id(unit)], broker, outs,
+                                   recorder)
 
             if len(units) == 1:
                 run(units[0])
@@ -754,6 +749,46 @@ class CompiledPlan:
             ) from chain_exceptions(exceptions)
         return pr
 
+    @staticmethod
+    def _run_unit(unit: List[EdgePlan], qid: str, broker, outs: Dict,
+                  recorder: FlightRecorder) -> None:
+        """One work unit end to end: admission ticket (queue under the
+        broker's QoS gate), then the edge / broadcast-group runner.  The
+        unit's FlightRecorder accumulates admission, attempt, and pipe
+        events; any terminal failure leaves with that timeline attached."""
+        ticket = None
+        if broker is not None:
+            # hold an admission ticket for the unit's whole lifetime:
+            # over-quota units queue here (in their own thread) while
+            # admitted ones move data
+            vec = _admission_vector(unit)
+            recorder.note("admission.request", **vec)
+            t0 = time.monotonic()
+            try:
+                with telemetry.span("plan.admit", edge=unit[0].edge_id,
+                                    tenant=vec["tenant"], qos=vec["qos"]):
+                    ticket = broker.admit(**vec)
+            except BaseException as e:  # noqa: BLE001 - aggregated
+                recorder.note("admission.rejected", error=repr(e))
+                attach_flight(e, recorder)
+                for ep in unit:
+                    outs[ep.edge_id] = (None, [e])
+                return
+            recorder.note("admission.granted",
+                          wait_s=round(time.monotonic() - t0, 6))
+        try:
+            if len(unit) == 1 and not unit[0].broadcast_group:
+                outs[unit[0].edge_id] = _run_edge(unit[0], qid, recorder)
+                return
+            try:
+                outs.update(_run_broadcast_group(unit, qid, recorder))
+            except BaseException as e:  # noqa: BLE001 - aggregated
+                for ep in unit:
+                    outs[ep.edge_id] = (None, [e])
+        finally:
+            if ticket is not None:
+                ticket.release()
+
 
 # -- the edge runners ----------------------------------------------------------
 
@@ -784,14 +819,15 @@ def _admission_vector(unit: List[EdgePlan]) -> Dict[str, Any]:
             "segments": segments, "nbytes": nbytes}
 
 
-def _run_edge(ep: EdgePlan, query_id: str):
+def _run_edge(ep: EdgePlan, query_id: str,
+              recorder: Optional[FlightRecorder] = None):
     """Execute one edge under the executor's per-run ``query_id``;
     returns ``(TransferResult | None, exceptions)``.  Never raises: all
     failures (both sides, timeout) are collected."""
     try:
         if ep.via == "files":
             return _run_file_edge(ep)
-        return _run_pipe_edge(ep, query_id)
+        return _run_pipe_edge(ep, query_id, recorder)
     except BaseException as e:  # noqa: BLE001 - the executor aggregates
         return None, [e]
 
@@ -802,7 +838,8 @@ def _transport_fault(excs: Sequence[BaseException]) -> bool:
     return any(isinstance(e, (OSError, TimeoutError)) for e in excs)
 
 
-def _run_pipe_edge(ep: EdgePlan, query_id: str):
+def _run_pipe_edge(ep: EdgePlan, query_id: str,
+                   recorder: Optional[FlightRecorder] = None):
     """The self-healing wrapper: run :func:`_run_pipe_attempt` up to
     ``1 + ep.retries`` times.  Each retry gets a fresh query id (the
     directory's per-(dataset, query) rendezvous state is single-use), a
@@ -836,6 +873,8 @@ def _run_pipe_edge(ep: EdgePlan, query_id: str):
     rng = random.Random(hash((ep.dataset, query_id, ep.edge_id)) & 0x7FFFFFFF)
     deadline = (time.monotonic() + ep.deadline_s) if ep.deadline_s else None
     transport = config.transport
+    recorder = recorder if recorder is not None else FlightRecorder(
+        name=f"edge {ep.edge_id} ({ep.dataset}:{query_id})")
     attempts: List[dict] = []
     history: List[str] = []
     result = None
@@ -848,18 +887,32 @@ def _run_pipe_edge(ep: EdgePlan, query_id: str):
             # attempt's join gave up on it), and an orphaned exporter
             # thread still holds its open-splice registration
             cfg = replace(config, transport=transport, resume=token,
-                          attempt=k,
+                          attempt=k, recorder=recorder,
+                          trace_ctx=(config.trace_ctx
+                                     or telemetry.current_ctx()),
                           connect_timeout=min(config.connect_timeout,
                                               ep.timeout))
+            recorder.note("edge.attempt", attempt=k, query_id=qid,
+                          transport=transport,
+                          resumed=bool(token and k > 0))
             t0 = time.monotonic()
-            result, excs = _run_pipe_attempt(ep, cfg, qid)
+            with telemetry.span("edge.attempt", edge=ep.edge_id,
+                                attempt=k, transport=transport):
+                result, excs = _run_pipe_attempt(ep, cfg, qid)
             rec = {"attempt": k, "query_id": qid, "transport": transport,
                    "seconds": round(time.monotonic() - t0, 6),
                    "ok": not excs,
                    "error": repr(excs[0]) if excs else None}
+            if result is not None:
+                # per-attempt attribution: this attempt's own stats, not
+                # the fold across earlier failed attempts
+                rec["export_stats"] = result.export_stats
+                rec["import_stats"] = result.import_stats
             attempts.append(rec)
             if not excs:
                 break
+            recorder.note("edge.attempt_failed", attempt=k,
+                          error=rec["error"])
             history.append(f"attempt {k} ({transport}): {rec['error']}")
             if k + 1 >= max_attempts:
                 break
@@ -871,6 +924,7 @@ def _run_pipe_edge(ep: EdgePlan, query_id: str):
             if (ep.failover and transport in ("shm", "channel")
                     and _transport_fault(excs)):
                 history.append(f"failover: {transport} -> socket")
+                recorder.note("edge.failover", frm=transport, to="socket")
                 transport = "socket"
             delay = ep.backoff_s * (2 ** k) * (0.5 + rng.random())
             if deadline is not None:
@@ -884,6 +938,10 @@ def _run_pipe_edge(ep: EdgePlan, query_id: str):
         result.attempts = attempts
         if history:
             result.errors = history + result.errors
+    if excs:
+        # terminal failure: every raised error carries the edge timeline
+        for e in excs:
+            attach_flight(e, recorder)
     return result, excs
 
 
@@ -965,7 +1023,8 @@ def _run_pipe_attempt(ep: EdgePlan, config, query_id: str):
     return result, excs
 
 
-def _run_broadcast_group(eps: List[EdgePlan], query_id: str
+def _run_broadcast_group(eps: List[EdgePlan], query_id: str,
+                         recorder: Optional[FlightRecorder] = None,
                          ) -> Dict[str, Tuple[Any, List[BaseException]]]:
     """Run one compiled fan-out group: a SINGLE export of the shared
     source relation into a broadcast shm ring, consumed concurrently by
@@ -981,6 +1040,10 @@ def _run_broadcast_group(eps: List[EdgePlan], query_id: str
     leader = next((ep for ep in eps if ep.broadcast_leader), eps[0])
     src = leader.src_engine
     dataset = leader.dataset
+    recorder = recorder if recorder is not None else FlightRecorder(
+        name=f"broadcast {dataset}:{query_id}")
+    recorder.note("broadcast.start", dataset=dataset, readers=n_readers)
+    bcast_ctx = telemetry.current_ctx()
     name = f"db://{dataset}?workers=1&query={query_id}"
     timeout = max(ep.timeout for ep in eps)
     errs: List[Tuple[str, BaseException]] = []  # (edge_id | "export", exc)
@@ -989,7 +1052,9 @@ def _run_broadcast_group(eps: List[EdgePlan], query_id: str
     def run_import(ep: EdgePlan) -> None:
         t0 = time.perf_counter()
         cfg = replace(ep.config, transport="shm", broadcast=n_readers,
-                      partition=None, fanin=1, streams=1)
+                      partition=None, fanin=1, streams=1,
+                      recorder=recorder,
+                      trace_ctx=ep.config.trace_ctx or bcast_ctx)
         try:
             with PipeEnabledEngine(adapter_for(ep.dst_engine)), \
                     PipeOpenContext(cfg):
@@ -1001,7 +1066,9 @@ def _run_broadcast_group(eps: List[EdgePlan], query_id: str
 
     def run_export() -> None:
         t0 = time.perf_counter()
-        cfg = replace(leader.config, partition=None, fanin=1)
+        cfg = replace(leader.config, partition=None, fanin=1,
+                      recorder=recorder,
+                      trace_ctx=leader.config.trace_ctx or bcast_ctx)
         try:
             with PipeEnabledEngine(adapter_for(src)), PipeOpenContext(cfg):
                 src.export_csv_parallel(
@@ -1046,6 +1113,8 @@ def _run_broadcast_group(eps: List[EdgePlan], query_id: str
                 f"broadcast transfer {dataset} did not complete within "
                 f"{timeout}s ({'/'.join(stuck)} still running)")]
             messages = [f"timeout: {excs[0]}"]
+        for e in excs:  # attach_flight is idempotent on shared excs
+            attach_flight(e, recorder)
         try:
             rows = len(ep.dst_engine.get_block(ep.dst_table))
         except KeyError:

@@ -55,9 +55,36 @@ class TransferResult:
     export_stats: Optional[PipeStats] = None
     import_stats: Optional[PipeStats] = None
     # retry policy history, one dict per attempt ({attempt, query_id,
-    # transport, seconds, ok, error}); a single clean run has one entry
-    # when the edge carries a retry policy, else it stays empty
+    # transport, seconds, ok, error, export_stats, import_stats}); a
+    # single clean run has one entry when the edge carries a retry
+    # policy, else it stays empty
     attempts: List[dict] = field(default_factory=list)
+
+    def stats_for_attempt(self, attempt: int, role: str = "export"
+                          ) -> Optional[PipeStats]:
+        """That attempt's own pipe stats (``role`` is "export" or
+        "import"), or None when the attempt is unknown or carried none."""
+        for rec in self.attempts:
+            if rec.get("attempt") == attempt:
+                return rec.get(f"{role}_stats")
+        return None
+
+    def folded_stats(self, role: str = "export") -> Optional[PipeStats]:
+        """Pipe stats merged across every recorded attempt — the
+        whole-edge cost including retries; falls back to the top-level
+        (final-attempt) stats when no per-attempt history exists."""
+        merged: Optional[PipeStats] = None
+        for rec in self.attempts:
+            st = rec.get(f"{role}_stats")
+            if st is None:
+                continue
+            if merged is None:
+                merged = PipeStats()
+            merged.merge(st)
+        if merged is not None:
+            return merged
+        return (self.export_stats if role == "export"
+                else self.import_stats)
 
 
 def adapter_for(engine: Any) -> GeneratedPipe:

@@ -111,6 +111,7 @@ from multiprocessing import resource_tracker, shared_memory
 from typing import Dict, Iterable, List, Optional, Tuple
 
 from . import faults
+from . import telemetry
 from .iobuf import Buffer, _seg_len
 from .transport import FRAME_EOF, LinkSim, Transport
 
@@ -705,6 +706,9 @@ class ShmRing:
         GC'd — the transfer can never rendezvous, so an importer parked
         in ``recv(timeout=None)`` must not wait forever."""
         self.aborted = reason
+        telemetry.counter("shm.ring_aborts").inc()
+        telemetry.fault_recorder.note("shm.ring_abort", name=self.name,
+                                      reason=reason)
         if self.closed:
             return  # nothing is parked on a closed ring
         try:

@@ -54,6 +54,7 @@ import threading
 from typing import Dict, List, Optional, Tuple
 
 from . import faults
+from . import telemetry
 from .transport import (
     FRAME_BLOCK,
     FRAME_EOF,
@@ -229,6 +230,9 @@ class StripedReceiver(Transport):
         self._error: Optional[BaseException] = None
         self._frames = [0] * n
         self._bytes = [0] * n
+        # head-of-line waits: the next in-order frame was absent while
+        # later frames sat buffered (skew between member streams)
+        self.reorder_stalls = 0
         self._threads = [
             threading.Thread(target=self._reader, args=(i,),
                              name=f"pipegen-reasm-{i}", daemon=True)
@@ -325,6 +329,9 @@ class StripedReceiver(Transport):
                             f"striped stream ended with frame {missing} "
                             f"missing (buffered seqs {have[:8]}...)")
                     return FRAME_EOF, b""
+                if self._buf:
+                    self.reorder_stalls += 1
+                    telemetry.counter("stream.reorder_stalls").inc()
                 self._lock.wait(0.5)
 
     def close(self) -> None:

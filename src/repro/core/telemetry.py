@@ -1,0 +1,611 @@
+"""Telemetry: span tracer, metrics registry, and flight recorder.
+
+Three small, dependency-free facilities shared by the whole fabric:
+
+* **Span tracer** — ``with span("export.encode"):`` contexts on the
+  monotonic clock.  Disabled by default and *near-free* when disabled
+  (one global ``is None`` test, the same idiom as ``faults.fire``).
+  Trace context is a ``"<trace_id>:<span_id>"`` string that travels
+  across processes through the pipe schema hello and the directory
+  registration, so the exporter and importer of one edge land in a
+  single trace.  Finished spans export as Chrome-trace / Perfetto JSON
+  (``chrome://tracing`` or https://ui.perfetto.dev).
+
+* **Metrics registry** — labeled counters, gauges, and fixed-bucket
+  histograms.  Always on (a counter bump is a dict lookup + add); the
+  broker, transports, pools, and the stats sink publish here and the
+  broker ``stats`` RPC snapshots it for ``repro.tools.pipetop``.
+
+* **Flight recorder** — a bounded per-pipe ring of recent events
+  (frames, retries, lease renewals, faults).  When a transport/lease/
+  admission error is raised, :func:`attach_flight` staples the recent
+  timeline onto the exception so seeded-fault failures arrive with a
+  causal history instead of a bare traceback.
+
+This module must not import anything else from ``repro.core`` — every
+other core module imports *it*.
+"""
+from __future__ import annotations
+
+import bisect
+import json
+import os
+import threading
+import time
+from collections import deque
+from contextlib import contextmanager
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+__all__ = [
+    "Span", "Tracer", "enable_tracing", "disable_tracing",
+    "tracing_enabled", "tracer", "span", "current_ctx", "trace_context",
+    "new_trace_ctx", "new_span_id", "split_ctx", "chrome_trace",
+    "dump_chrome_trace",
+    "merge_trace_dir",
+    "MetricsRegistry", "registry", "counter", "gauge", "histogram",
+    "FlightRecorder", "attach_flight", "fault_recorder",
+]
+
+_now = time.monotonic  # CLOCK_MONOTONIC: system-wide on Linux, so
+                       # cross-process span timestamps share one axis.
+
+
+def _new_id() -> str:
+    return os.urandom(8).hex()
+
+
+def new_span_id() -> str:
+    """A fresh 16-hex span id (for callers that pre-allocate ids so a
+    propagated context can name a span recorded later)."""
+    return _new_id()
+
+
+# ---------------------------------------------------------------------------
+# span tracer
+# ---------------------------------------------------------------------------
+
+class Span:
+    """One finished span.  Immutable-by-convention; ``__slots__`` keeps
+    the per-span cost to one small object."""
+
+    __slots__ = ("name", "trace_id", "span_id", "parent_id",
+                 "t0", "t1", "pid", "tid", "attrs")
+
+    def __init__(self, name: str, trace_id: str, span_id: str,
+                 parent_id: str, t0: float, t1: float,
+                 pid: int, tid: int, attrs: Optional[Dict[str, Any]]):
+        self.name = name
+        self.trace_id = trace_id
+        self.span_id = span_id
+        self.parent_id = parent_id
+        self.t0 = t0
+        self.t1 = t1
+        self.pid = pid
+        self.tid = tid
+        self.attrs = attrs
+
+    @property
+    def duration(self) -> float:
+        return self.t1 - self.t0
+
+    def to_event(self) -> Dict[str, Any]:
+        """Chrome-trace complete ('X') event, microsecond clock."""
+        args: Dict[str, Any] = {"trace_id": self.trace_id,
+                                "span_id": self.span_id}
+        if self.parent_id:
+            args["parent_id"] = self.parent_id
+        if self.attrs:
+            args.update(self.attrs)
+        return {"name": self.name, "ph": "X", "cat": "pipegen",
+                "ts": self.t0 * 1e6, "dur": (self.t1 - self.t0) * 1e6,
+                "pid": self.pid, "tid": self.tid, "args": args}
+
+
+class Tracer:
+    """Collects finished spans into a bounded ring."""
+
+    def __init__(self, capacity: int = 8192):
+        self.capacity = capacity
+        self._spans: deque = deque(maxlen=capacity)
+        self._lock = threading.Lock()
+        self.dropped = 0
+
+    def record(self, name: str, t0: float, t1: float, *,
+               trace_id: str, span_id: Optional[str] = None,
+               parent_id: str = "", pid: Optional[int] = None,
+               tid: Optional[int] = None,
+               attrs: Optional[Dict[str, Any]] = None) -> str:
+        """Record an already-timed span with explicit ids.  Used by the
+        pipes, which time phases themselves across worker threads and
+        stitch parentage from propagated context strings."""
+        sid = span_id or _new_id()
+        sp = Span(name, trace_id, sid, parent_id, t0, t1,
+                  pid if pid is not None else os.getpid(),
+                  tid if tid is not None else threading.get_ident(),
+                  attrs)
+        with self._lock:
+            if len(self._spans) == self._spans.maxlen:
+                self.dropped += 1
+            self._spans.append(sp)
+        _spill(sp)
+        return sid
+
+    def spans(self) -> List[Span]:
+        with self._lock:
+            return list(self._spans)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._spans.clear()
+            self.dropped = 0
+
+
+class _NullSpan:
+    """The disabled-path singleton: entering/exiting is two no-op
+    method calls on a preallocated object — no allocation, no clock."""
+
+    __slots__ = ()
+
+    def __enter__(self) -> "_NullSpan":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        return None
+
+    def set(self, **attrs: Any) -> None:
+        return None
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class _LiveSpan:
+    __slots__ = ("name", "attrs", "trace_id", "parent_id",
+                 "span_id", "t0")
+
+    def __init__(self, name: str, attrs: Dict[str, Any]):
+        self.name = name
+        self.attrs = attrs or None
+        self.span_id = _new_id()
+        self.t0 = 0.0
+        self.trace_id = ""
+        self.parent_id = ""
+
+    def set(self, **attrs: Any) -> None:
+        if self.attrs is None:
+            self.attrs = {}
+        self.attrs.update(attrs)
+
+    def __enter__(self) -> "_LiveSpan":
+        stack = _ctx_stack()
+        if stack:
+            self.trace_id, self.parent_id = stack[-1]
+        else:
+            self.trace_id, self.parent_id = _new_id(), ""
+        stack.append((self.trace_id, self.span_id))
+        self.t0 = _now()
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        t1 = _now()
+        stack = _ctx_stack()
+        if stack and stack[-1][1] == self.span_id:
+            stack.pop()
+        tr = _TRACER
+        if tr is not None:
+            tr.record(self.name, self.t0, t1, trace_id=self.trace_id,
+                      span_id=self.span_id, parent_id=self.parent_id,
+                      attrs=self.attrs)
+
+
+_TRACER: Optional[Tracer] = None
+_local = threading.local()
+
+
+def _ctx_stack() -> List[Tuple[str, str]]:
+    st = getattr(_local, "stack", None)
+    if st is None:
+        st = _local.stack = []
+    return st
+
+
+def enable_tracing(capacity: int = 8192) -> Tracer:
+    """Turn the tracer on process-wide; returns the (new) Tracer."""
+    global _TRACER
+    _TRACER = Tracer(capacity)
+    return _TRACER
+
+
+def disable_tracing() -> None:
+    global _TRACER
+    _TRACER = None
+
+
+def tracing_enabled() -> bool:
+    return _TRACER is not None
+
+
+def tracer() -> Optional[Tracer]:
+    return _TRACER
+
+
+def span(name: str, **attrs: Any):
+    """Open a span.  When tracing is disabled this returns a shared
+    no-op singleton — the fast path is one global load + ``is None``."""
+    if _TRACER is None:
+        return _NULL_SPAN
+    return _LiveSpan(name, attrs)
+
+
+def current_ctx() -> str:
+    """The propagatable ``"trace_id:span_id"`` for this thread, or ``""``."""
+    if _TRACER is None:
+        return ""
+    st = getattr(_local, "stack", None)
+    if not st:
+        return ""
+    tid, sid = st[-1]
+    return f"{tid}:{sid}"
+
+
+def new_trace_ctx() -> str:
+    """A fresh root context (new trace id, synthetic root span id)."""
+    return f"{_new_id()}:{_new_id()}"
+
+
+def split_ctx(ctx: str) -> Tuple[str, str]:
+    """``"trace:span"`` -> ``(trace_id, parent_span_id)``; tolerant of
+    junk (returns fresh ids so a corrupt hello never breaks a pipe)."""
+    if ctx and ":" in ctx:
+        tid, _, sid = ctx.partition(":")
+        if tid and sid:
+            return tid, sid
+    return _new_id(), ""
+
+
+@contextmanager
+def trace_context(ctx: str):
+    """Adopt a foreign ``"trace:span"`` context on this thread, so spans
+    opened inside parent under it (used by plan worker threads, which do
+    not inherit the spawning thread's stack)."""
+    if _TRACER is None or not ctx:
+        yield
+        return
+    stack = _ctx_stack()
+    stack.append(split_ctx(ctx))
+    try:
+        yield
+    finally:
+        stack.pop()
+
+
+# -- Chrome-trace export -----------------------------------------------------
+
+def chrome_trace(spans: Optional[Iterable[Span]] = None) -> Dict[str, Any]:
+    if spans is None:
+        spans = _TRACER.spans() if _TRACER is not None else []
+    return {"traceEvents": [s.to_event() for s in spans],
+            "displayTimeUnit": "ms"}
+
+
+def dump_chrome_trace(path: str,
+                      spans: Optional[Iterable[Span]] = None) -> str:
+    with open(path, "w") as f:
+        json.dump(chrome_trace(spans), f)
+    return path
+
+
+# -- cross-process spill -----------------------------------------------------
+#
+# PIPEGEN_TRACE=1 auto-enables the tracer at import; PIPEGEN_TRACE_DIR
+# makes every process append finished spans to <dir>/spans-<pid>.jsonl,
+# so a parent can merge child traces without any wiring.
+
+_SPILL_DIR = os.environ.get("PIPEGEN_TRACE_DIR") or None
+_spill_lock = threading.Lock()
+_spill_fh = None
+
+
+def _spill(sp: Span) -> None:
+    global _spill_fh
+    if _SPILL_DIR is None:
+        return
+    line = json.dumps({
+        "name": sp.name, "trace_id": sp.trace_id, "span_id": sp.span_id,
+        "parent_id": sp.parent_id, "t0": sp.t0, "t1": sp.t1,
+        "pid": sp.pid, "tid": sp.tid, "attrs": sp.attrs})
+    with _spill_lock:
+        if _spill_fh is None:
+            try:
+                os.makedirs(_SPILL_DIR, exist_ok=True)
+                _spill_fh = open(
+                    os.path.join(_SPILL_DIR, f"spans-{os.getpid()}.jsonl"),
+                    "a")
+            except OSError:
+                return
+        _spill_fh.write(line + "\n")
+        _spill_fh.flush()
+
+
+def merge_trace_dir(path: str) -> List[Span]:
+    """Load every ``spans-*.jsonl`` under ``path`` into Span objects."""
+    out: List[Span] = []
+    try:
+        names = sorted(os.listdir(path))
+    except OSError:
+        return out
+    for fn in names:
+        if not (fn.startswith("spans-") and fn.endswith(".jsonl")):
+            continue
+        with open(os.path.join(path, fn)) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    d = json.loads(line)
+                except ValueError:
+                    continue
+                out.append(Span(d["name"], d["trace_id"], d["span_id"],
+                                d.get("parent_id", ""), d["t0"], d["t1"],
+                                d.get("pid", 0), d.get("tid", 0),
+                                d.get("attrs")))
+    out.sort(key=lambda s: s.t0)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+def _label_key(labels: Dict[str, str]) -> Tuple[Tuple[str, str], ...]:
+    return tuple(sorted(labels.items()))
+
+
+class Counter:
+    __slots__ = ("name", "labels", "value", "_lock")
+
+    def __init__(self, name: str, labels: Dict[str, str]):
+        self.name = name
+        self.labels = labels
+        self.value = 0
+        self._lock = threading.Lock()
+
+    def inc(self, n: int = 1) -> None:
+        with self._lock:
+            self.value += n
+
+
+class Gauge:
+    __slots__ = ("name", "labels", "value", "_lock")
+
+    def __init__(self, name: str, labels: Dict[str, str]):
+        self.name = name
+        self.labels = labels
+        self.value = 0.0
+        self._lock = threading.Lock()
+
+    def set(self, v: float) -> None:
+        self.value = v
+
+    def add(self, v: float) -> None:
+        with self._lock:
+            self.value += v
+
+
+#: default latency buckets (seconds): 100us .. ~100s, x4 steps
+DEFAULT_BUCKETS = (1e-4, 4e-4, 1.6e-3, 6.4e-3, 2.56e-2,
+                   0.1024, 0.4096, 1.6384, 6.5536, 26.2144, 104.8576)
+
+
+class Histogram:
+    """Fixed-bucket histogram: counts per upper-bound plus +Inf."""
+
+    __slots__ = ("name", "labels", "bounds", "counts",
+                 "total", "sum", "_lock")
+
+    def __init__(self, name: str, labels: Dict[str, str],
+                 bounds: Tuple[float, ...] = DEFAULT_BUCKETS):
+        self.name = name
+        self.labels = labels
+        self.bounds = tuple(bounds)
+        self.counts = [0] * (len(self.bounds) + 1)  # last = +Inf
+        self.total = 0
+        self.sum = 0.0
+        self._lock = threading.Lock()
+
+    def observe(self, v: float) -> None:
+        i = bisect.bisect_left(self.bounds, v)
+        with self._lock:
+            self.counts[i] += 1
+            self.total += 1
+            self.sum += v
+
+    def quantile(self, q: float) -> float:
+        """Approximate quantile (upper bucket bound)."""
+        with self._lock:
+            if self.total == 0:
+                return 0.0
+            target = q * self.total
+            seen = 0
+            for i, c in enumerate(self.counts):
+                seen += c
+                if seen >= target:
+                    return (self.bounds[i] if i < len(self.bounds)
+                            else float("inf"))
+        return float("inf")
+
+
+class MetricsRegistry:
+    """Get-or-create registry of labeled instruments."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._instruments: Dict[Tuple[str, str, Tuple], Any] = {}
+
+    def _get(self, cls: Any, kind: str, name: str,
+             labels: Dict[str, str], **kw: Any) -> Any:
+        key = (kind, name, _label_key(labels))
+        inst = self._instruments.get(key)
+        if inst is not None:
+            return inst
+        with self._lock:
+            inst = self._instruments.get(key)
+            if inst is None:
+                inst = cls(name, dict(labels), **kw)
+                self._instruments[key] = inst
+        return inst
+
+    def counter(self, name: str, **labels: str) -> Counter:
+        return self._get(Counter, "c", name, labels)
+
+    def gauge(self, name: str, **labels: str) -> Gauge:
+        return self._get(Gauge, "g", name, labels)
+
+    def histogram(self, name: str,
+                  buckets: Tuple[float, ...] = DEFAULT_BUCKETS,
+                  **labels: str) -> Histogram:
+        return self._get(Histogram, "h", name, labels, bounds=buckets)
+
+    def snapshot(self) -> Dict[str, Any]:
+        """JSON-serializable dump: {counters, gauges, histograms}."""
+        out: Dict[str, Any] = {"counters": {}, "gauges": {},
+                               "histograms": {}}
+        with self._lock:
+            items = list(self._instruments.items())
+        for (kind, name, lkey), inst in items:
+            label = name if not lkey else (
+                name + "{" + ",".join(f"{k}={v}" for k, v in lkey) + "}")
+            if kind == "c":
+                out["counters"][label] = inst.value
+            elif kind == "g":
+                out["gauges"][label] = inst.value
+            else:
+                out["histograms"][label] = {
+                    "total": inst.total, "sum": inst.sum,
+                    "p50": inst.quantile(0.5), "p95": inst.quantile(0.95),
+                    "p99": inst.quantile(0.99),
+                    "buckets": dict(zip(
+                        [str(b) for b in inst.bounds] + ["+Inf"],
+                        inst.counts))}
+        return out
+
+    def reset(self) -> None:
+        with self._lock:
+            self._instruments.clear()
+
+
+_REGISTRY = MetricsRegistry()
+
+
+def registry() -> MetricsRegistry:
+    return _REGISTRY
+
+
+def counter(name: str, **labels: str) -> Counter:
+    return _REGISTRY.counter(name, **labels)
+
+
+def gauge(name: str, **labels: str) -> Gauge:
+    return _REGISTRY.gauge(name, **labels)
+
+
+def histogram(name: str, buckets: Tuple[float, ...] = DEFAULT_BUCKETS,
+              **labels: str) -> Histogram:
+    return _REGISTRY.histogram(name, buckets, **labels)
+
+
+# ---------------------------------------------------------------------------
+# flight recorder
+# ---------------------------------------------------------------------------
+
+class FlightRecorder:
+    """Bounded ring of recent events for one pipe/edge.  Cheap enough to
+    leave always on: a note is one tuple append under a lock."""
+
+    def __init__(self, depth: int = 64, name: str = ""):
+        self.name = name
+        self._ring: deque = deque(maxlen=max(4, depth))
+        self._lock = threading.Lock()
+
+    def note(self, event: str, **kv: Any) -> None:
+        with self._lock:
+            self._ring.append((_now(), event, kv or None))
+
+    def events(self) -> List[Tuple[float, str, Optional[Dict[str, Any]]]]:
+        with self._lock:
+            return list(self._ring)
+
+    def __len__(self) -> int:
+        return len(self._ring)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._ring.clear()
+
+    def render(self) -> str:
+        evs = self.events()
+        if not evs:
+            return "(flight recorder empty)"
+        t_end = evs[-1][0]
+        lines = []
+        if self.name:
+            lines.append(f"flight recorder [{self.name}]:")
+        else:
+            lines.append("flight recorder:")
+        for t, event, kv in evs:
+            extra = ""
+            if kv:
+                extra = " " + " ".join(f"{k}={v!r}" for k, v in kv.items())
+            lines.append(f"  t-{t_end - t:8.3f}s  {event}{extra}")
+        return "\n".join(lines)
+
+
+#: process-wide recorder the fault harness notes matched rules into,
+#: so injected faults always appear in attached timelines.
+fault_recorder = FlightRecorder(depth=128, name="faults")
+
+
+def attach_flight(exc: BaseException,
+                  *recorders: Optional[FlightRecorder]) -> BaseException:
+    """Staple recent flight-recorder timelines onto ``exc``:
+
+    * sets ``exc.flight_timeline`` (rendered text) — idempotent;
+    * appends the timeline to the exception message so it shows up in
+      a bare traceback (Python 3.10-safe: no ``add_note``);
+    * if ``PIPEGEN_FLIGHT_DUMP`` names a file, appends the timeline
+      there so CI can assert a dump was produced.
+    """
+    if getattr(exc, "flight_timeline", None) is not None:
+        return exc
+    parts = [r.render() for r in recorders
+             if r is not None and len(r) > 0]
+    if len(fault_recorder) > 0 and fault_recorder not in recorders:
+        parts.append(fault_recorder.render())
+    if not parts:
+        return exc
+    text = "\n".join(parts)
+    try:
+        exc.flight_timeline = text  # type: ignore[attr-defined]
+    except Exception:
+        return exc
+    try:
+        if exc.args and isinstance(exc.args[0], str):
+            exc.args = (exc.args[0] + "\n" + text,) + exc.args[1:]
+        elif not exc.args:
+            exc.args = (text,)
+    except Exception:
+        pass
+    dump = os.environ.get("PIPEGEN_FLIGHT_DUMP")
+    if dump:
+        try:
+            with open(dump, "a") as f:
+                f.write(f"=== {type(exc).__name__}: "
+                        f"{exc.args[0] if exc.args else ''}\n{text}\n\n")
+        except OSError:
+            pass
+    return exc
+
+
+if os.environ.get("PIPEGEN_TRACE", "") not in ("", "0"):
+    enable_tracing()

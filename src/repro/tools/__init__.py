@@ -1,0 +1,6 @@
+"""Operational command-line tools for the pipe fabric.
+
+``python -m repro.tools.pipetop`` — live broker/fabric introspection
+against a running :class:`~repro.core.broker.PipeBroker` (its directory
+server answers the ``stats`` RPC).
+"""

@@ -250,6 +250,34 @@ def test_broken_doorbell_degrades_to_polling_and_completes():
     assert total_polls > 0  # degraded to the capped-poll path, not a hang
 
 
+# -- flight recorder: terminal failures arrive with a timeline ----------------------
+
+
+def test_terminal_failure_carries_flight_timeline(tmp_path, monkeypatch):
+    """An unrecoverable seeded fault must surface with the edge's flight
+    recorder stapled on: the raised error names the injected fault and
+    the attempts, and the chaos CI leg's PIPEGEN_FLIGHT_DUMP file gets a
+    copy it can assert on."""
+    from repro.core import telemetry
+
+    dump = tmp_path / "flight.txt"
+    monkeypatch.setenv("PIPEGEN_FLIGHT_DUMP", str(dump))
+    src, dst, _ = _engines(seed=21)
+    fp = FaultPlan(SEED).kill("transport.recv", count=-1)  # every recv dies
+    with faults.use(fp):
+        res = _one_edge(src, dst, "socket", retries=1, backoff=0.01,
+                        failover=False)
+    assert res.exceptions
+    e = res.exceptions[0]
+    timeline = getattr(e, "flight_timeline", None)
+    assert timeline is not None  # the error carries its causal history
+    assert "edge.attempt" in timeline
+    assert "fault.injected" in timeline  # the seeded kill shows up
+    assert "edge.attempt" in str(e)  # visible in a bare traceback too
+    assert dump.exists() and "fault.injected" in dump.read_text()
+    assert len(telemetry.fault_recorder) > 0
+
+
 # -- leased registrations -----------------------------------------------------------
 
 
