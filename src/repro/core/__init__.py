@@ -64,8 +64,10 @@ from .directory import (
     DirectoryClient,
     DirectoryServer,
     Endpoint,
+    LeaseRenewer,
     WorkerDirectory,
     get_directory,
+    live_renewers,
     set_directory,
 )
 from .broker import (
@@ -90,7 +92,18 @@ from .plan import (
     PlanError,
     PlanExecutionError,
     PlanResult,
+    SubscriptionSet,
     TransferPlan,
     negotiated_config,
     plan,
+)
+from .subscribe import (
+    EpochDelta,
+    Publication,
+    PublicationEnded,
+    ReplayLog,
+    Subscription,
+    publications_snapshot,
+    publish,
+    subscribe,
 )

@@ -585,6 +585,14 @@ class PipeBroker:
             telemetry.gauge("hub.registered").set(self.hub.registered)
             telemetry.gauge("hub.wakeups").set(self.hub.wakeups)
             telemetry.gauge("hub.waits").set(self.hub.waits)
+        # live publications in this process (continuous pipes): lazy
+        # import — subscribe pulls in the full pipe stack and most broker
+        # users never publish
+        try:
+            from .subscribe import publications_snapshot
+            out["subscriptions"] = publications_snapshot()
+        except Exception:
+            out["subscriptions"] = []
         return out
 
 

@@ -40,7 +40,8 @@ from urllib.parse import parse_qs, urlparse
 from . import telemetry
 from .astring import AString
 from .compression import Codec, get_codec
-from .directory import DirectoryLike, Endpoint, get_directory
+from .directory import (DirectoryLike, Endpoint, LeaseRenewer,
+                        get_directory)
 from .telemetry import FlightRecorder, attach_flight
 from .iobuf import BufferPool, DecodeArena, SegmentList, default_pool
 from .shm_ring import (
@@ -1118,8 +1119,11 @@ class DataPipeInput:
         self._recorder.note("import.connected")
         # leased registration: keep re-stamping the directory entry while
         # this importer is alive; if it dies (thread or process), renewals
-        # stop and the lease expires into the directory's dead-peer GC
-        self._renew_stop: Optional[threading.Event] = None
+        # stop and the lease expires into the directory's dead-peer GC.
+        # The heartbeat is an owned LeaseRenewer joined in close() — its
+        # lifetime is the *handle's*, not any single transfer's, so the
+        # same machinery serves long-lived subscription rings.
+        self._renewer: Optional[LeaseRenewer] = None
         self._lease_lost = threading.Event()
         self._lease_msg = (
             f"directory lease lost for {rn.dataset!r} (query "
@@ -1128,35 +1132,25 @@ class DataPipeInput:
             f"do this automatically)")
         renew = getattr(directory, "renew", None)
         if lease_s and renew is not None:
-            self._renew_stop = threading.Event()
-            period = max(0.05, lease_s / 3.0)
 
-            def _renew_loop(stop=self._renew_stop, fn=renew, rn=rn,
-                            p=period, ls=lease_s):
-                while not stop.wait(p):
-                    try:
-                        n = fn(rn.dataset, rn.query_id, lease_s=ls)
-                    except Exception:
-                        return  # directory gone: let the lease lapse
-                    if n == 0:
-                        # renew's documented 0: the lease expired and the
-                        # registration was GC'd.  Heartbeating a
-                        # nonexistent entry forever (while the exporter
-                        # can never find us) helps nobody — mark the
-                        # pipe lease-lost, kick any wait parked in the
-                        # ring, and let the executor's retry path
-                        # re-register under a fresh attempt.
-                        self._recorder.note("import.lease_lost",
-                                            dataset=rn.dataset,
-                                            query=rn.query_id)
-                        self._lease_lost.set()
-                        ring = getattr(self._transport, "ring", None)
-                        if ring is not None:
-                            ring.abort(self._lease_msg)
-                        return
+            def _on_lost(rn=rn):
+                # renew's documented 0: the lease expired and the
+                # registration was GC'd.  Heartbeating a nonexistent
+                # entry forever (while the exporter can never find us)
+                # helps nobody — mark the pipe lease-lost, kick any wait
+                # parked in the ring, and let the executor's retry path
+                # re-register under a fresh attempt.
+                self._recorder.note("import.lease_lost",
+                                    dataset=rn.dataset, query=rn.query_id)
+                self._lease_lost.set()
+                ring = getattr(self._transport, "ring", None)
+                if ring is not None:
+                    ring.abort(self._lease_msg)
 
-            threading.Thread(target=_renew_loop, name="pipegen-lease-renew",
-                             daemon=True).start()
+            self._renewer = LeaseRenewer(
+                lambda ls, fn=renew, rn=rn: fn(rn.dataset, rn.query_id,
+                                               lease_s=ls),
+                lease_s, on_lost=_on_lost).start()
         self._arena = arena or DecodeArena()
         self.stats = PipeStats()
         self.schema: Optional[Schema] = None
@@ -1714,8 +1708,11 @@ class DataPipeInput:
             yield line
 
     def close(self) -> None:
-        if self._renew_stop is not None:
-            self._renew_stop.set()
+        if self._renewer is not None:
+            # join, don't fire-and-forget: a renewer outliving its pipe
+            # would keep heartbeating a dead registration (the leak the
+            # live_renewers() assertion in the tests guards against)
+            self._renewer.stop(join=True)
         self.stats.decode_pool_hits = self._arena.hits
         self.stats.decode_pool_misses = self._arena.misses
         self.stats.shm_spans = getattr(self._transport, "shm_spans", 0)

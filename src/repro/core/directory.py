@@ -67,6 +67,8 @@ __all__ = [
     "WorkerDirectory",
     "DirectoryServer",
     "DirectoryClient",
+    "LeaseRenewer",
+    "live_renewers",
     "get_directory",
     "set_directory",
 ]
@@ -159,6 +161,7 @@ class WorkerDirectory:
         self.multiplex = multiplex
         self.lease_ttl = lease_ttl
         self._all_popped: Dict[Tuple[str, str], List[Endpoint]] = {}
+        self._names: Dict[str, Dict[str, Any]] = {}  # named publications
         self._closing = False
 
     def interrupt(self) -> None:
@@ -368,6 +371,96 @@ class WorkerDirectory:
             st.senders += 1
             return idx
 
+    # -- named publications (continuous pipes, repro.core.subscribe) --------------
+    def _name_dead_locked(self, rec: Dict[str, Any], now: float) -> bool:
+        if rec["lease_deadline"] and now > rec["lease_deadline"]:
+            return True
+        pid = rec["pid"]
+        if pid <= 0 or pid == os.getpid():
+            return False
+        from .shm_ring import _pid_alive
+
+        return not _pid_alive(pid)
+
+    def publish_name(self, name: str, doc: Dict[str, Any],
+                     lease_s: Optional[float] = None) -> None:
+        """Register (or re-register, healing a crash) the publication
+        ``name``.  ``doc`` is the publisher's JSON-serializable rendezvous
+        record — subscribers :meth:`lookup_name` it to learn which
+        (dataset, query) to register their endpoints under.  Like every
+        registration it is pid-stamped and, with a lease, GC'd when the
+        publisher stops renewing."""
+        _rpc_fault("publish_name")
+        ttl = lease_s if lease_s else self.lease_ttl
+        rec = {"doc": dict(doc),
+               "pid": int(doc.get("pid") or os.getpid()),
+               "lease_deadline": (time.monotonic() + ttl) if ttl else 0.0}
+        with self._lock:
+            self._names[name] = rec
+            self._lock.notify_all()
+
+    def lookup_name(self, name: str, timeout: float = 30.0) -> Dict[str, Any]:
+        """Block until the publication ``name`` exists (with a live,
+        unexpired publisher), then return its doc."""
+        _rpc_fault("lookup_name")
+        deadline = time.monotonic() + timeout
+        with self._lock:
+            while True:
+                self._check_closing_locked()
+                rec = self._names.get(name)
+                if (rec is not None
+                        and self._name_dead_locked(rec, time.monotonic())):
+                    del self._names[name]
+                    rec = None
+                if rec is not None:
+                    return dict(rec["doc"])
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise TimeoutError(
+                        f"no publication named {name!r} within timeout")
+                self._lock.wait(remaining)
+
+    def unpublish_name(self, name: str, pid: Optional[int] = None) -> bool:
+        """Withdraw ``name`` (publisher-owned: a different pid's entry is
+        left alone, so a restarted publisher's re-publication is never
+        torn down by its dead predecessor's close path)."""
+        pid = pid or os.getpid()
+        with self._lock:
+            rec = self._names.get(name)
+            if rec is not None and rec["pid"] == pid:
+                del self._names[name]
+                return True
+            return False
+
+    def renew_name(self, name: str, pid: Optional[int] = None,
+                   lease_s: Optional[float] = None) -> int:
+        """Lease heartbeat for a named publication; same contract as
+        :meth:`renew` — 0 strictly means the entry is gone (expired, GC'd,
+        or replaced by another publisher) and the caller must re-publish."""
+        _rpc_fault("renew_name")
+        pid = pid or os.getpid()
+        ttl = lease_s if lease_s else self.lease_ttl
+        if not ttl:
+            return 0
+        with self._lock:
+            rec = self._names.get(name)
+            if rec is None or rec["pid"] != pid:
+                return 0
+            if self._name_dead_locked(rec, time.monotonic()):
+                del self._names[name]
+                return 0
+            rec["lease_deadline"] = time.monotonic() + ttl
+            return 1
+
+    def list_names(self) -> Dict[str, Dict[str, Any]]:
+        """Live publications (dead/expired publishers GC'd on the way)."""
+        with self._lock:
+            now = time.monotonic()
+            for n in [n for n, rec in self._names.items()
+                      if self._name_dead_locked(rec, now)]:
+                del self._names[n]
+            return {n: dict(rec["doc"]) for n, rec in self._names.items()}
+
     # -- stub handling (importers > exporters) ----------------------------------
     def _maybe_stub_locked(self, dataset: str, query_id: str) -> None:
         st = self._state(dataset, query_id)
@@ -430,6 +523,10 @@ class WorkerDirectory:
         with self._lock:
             for st in self._queries.values():
                 self._gc_dead_locked(st)
+            now = time.monotonic()
+            for n in [n for n, rec in self._names.items()
+                      if self._name_dead_locked(rec, now)]:
+                del self._names[n]
         from .shm_ring import sweep_orphans
 
         return sweep_orphans(min_age_s=orphan_min_age_s)
@@ -531,6 +628,85 @@ def _send_stub_eof(ep: Endpoint) -> None:
         pass
 
 
+# -- lease renewal, owned by long-lived handles ----------------------------------
+
+_RENEWERS_LOCK = threading.Lock()
+_RENEWERS: set = set()
+
+
+class LeaseRenewer:
+    """One lease-heartbeat thread, owned by the handle that holds the
+    registration.
+
+    The renewal loop used to be an inline daemon inside
+    ``DataPipeInput.__init__`` — scoped (by accident of ownership) to a
+    single transfer.  Long-lived subscription rings need renewal until
+    explicit unsubscribe, so the renewer is a first-class object: the
+    owning handle (``DataPipeInput``, ``Subscription``, ``Publication``)
+    creates it, and its ``close()`` calls :meth:`stop`, which *joins* the
+    thread.  :func:`live_renewers` counts running loops so tests can
+    assert no renewal leak after close.
+
+    ``renew`` is a callable ``(lease_s) -> int`` with the directory's
+    renew contract: 0 strictly means the lease expired and the entry was
+    GC'd — the loop then sets :attr:`lost`, fires ``on_lost`` once, and
+    exits (heartbeating a nonexistent entry forever helps nobody)."""
+
+    def __init__(self, renew: Any, lease_s: float,
+                 on_lost: Optional[Any] = None,
+                 name: str = "pipegen-lease-renew"):
+        self._renew = renew
+        self.lease_s = float(lease_s)
+        self._on_lost = on_lost
+        self._stop = threading.Event()
+        self.lost = threading.Event()
+        self._thread = threading.Thread(target=self._loop, name=name,
+                                        daemon=True)
+
+    def start(self) -> "LeaseRenewer":
+        with _RENEWERS_LOCK:
+            _RENEWERS.add(self)
+        self._thread.start()
+        return self
+
+    @property
+    def alive(self) -> bool:
+        return self._thread.is_alive()
+
+    def _loop(self) -> None:
+        period = max(0.05, self.lease_s / 3.0)
+        try:
+            while not self._stop.wait(period):
+                try:
+                    n = self._renew(self.lease_s)
+                except Exception:
+                    return  # directory gone: let the lease lapse
+                if n == 0:
+                    self.lost.set()
+                    cb = self._on_lost
+                    if cb is not None:
+                        try:
+                            cb()
+                        except Exception:  # pragma: no cover - callback bug
+                            pass
+                    return
+        finally:
+            with _RENEWERS_LOCK:
+                _RENEWERS.discard(self)
+
+    def stop(self, join: bool = True, timeout: float = 5.0) -> None:
+        self._stop.set()
+        if (join and self._thread.ident is not None
+                and self._thread is not threading.current_thread()):
+            self._thread.join(timeout)
+
+
+def live_renewers() -> int:
+    """Running lease-renewal loops in this process (leak assertions)."""
+    with _RENEWERS_LOCK:
+        return len(_RENEWERS)
+
+
 # -- cross-process directory ----------------------------------------------------
 
 
@@ -588,7 +764,8 @@ class DirectoryServer:
     connection), and :meth:`stop` can actually join every handle —
     :meth:`WorkerDirectory.interrupt` wakes parked waits first."""
 
-    _BLOCKING_OPS = frozenset({"query", "query_all", "join_broadcast"})
+    _BLOCKING_OPS = frozenset({"query", "query_all", "join_broadcast",
+                               "lookup_name"})
 
     def __init__(self, host: str = "127.0.0.1", port: int = 0,
                  lease_ttl: Optional[float] = None,
@@ -714,9 +891,18 @@ class DirectoryServer:
                         req.get("export_workers"),
                         timeout=float(req.get("timeout", 30.0)),
                     )
-                    resp = {"ok": True, **_ep_to_doc(ep)}
                 except TimeoutError as e:
                     resp = {"ok": False, "error": str(e)}
+                else:
+                    # Popping an endpoint over RPC is a handoff, and the
+                    # requester can die between asking and hearing the
+                    # answer (SIGKILL mid-rendezvous leaves its last query
+                    # parked in a handler).  Without an ack the pop would
+                    # consume a registration that no live process ever
+                    # sees — so require a one-line ack and put the
+                    # endpoint back if it never comes.
+                    self._reply_query(conn, f, req, ep)
+                    return
             elif req["op"] == "query_all":
                 try:
                     eps = self.directory.query_all(
@@ -752,6 +938,30 @@ class DirectoryServer:
                 resp = {"ok": True,
                         "sender": self.directory.next_sender(
                             req["dataset"], req.get("query_id", "0"))}
+            elif req["op"] == "publish_name":
+                self.directory.publish_name(
+                    req["name"], req.get("doc") or {},
+                    lease_s=req.get("lease_s"),
+                )
+                resp = {"ok": True}
+            elif req["op"] == "lookup_name":
+                try:
+                    doc = self.directory.lookup_name(
+                        req["name"], timeout=float(req.get("timeout", 30.0)))
+                    resp = {"ok": True, "doc": doc}
+                except TimeoutError as e:
+                    resp = {"ok": False, "error": str(e)}
+            elif req["op"] == "unpublish_name":
+                resp = {"ok": True,
+                        "removed": self.directory.unpublish_name(
+                            req["name"], pid=req.get("pid"))}
+            elif req["op"] == "renew_name":
+                resp = {"ok": True,
+                        "renewed": self.directory.renew_name(
+                            req["name"], pid=req.get("pid"),
+                            lease_s=req.get("lease_s"))}
+            elif req["op"] == "list_names":
+                resp = {"ok": True, "names": self.directory.list_names()}
             elif req["op"] == "stats":
                 provider = self.stats_provider
                 resp = {"ok": True,
@@ -771,6 +981,33 @@ class DirectoryServer:
         finally:
             _close_quietly(conn)
 
+    # how long a popped endpoint may sit un-acked before it is handed back
+    QUERY_ACK_S = 2.0
+
+    def _reply_query(self, conn: socket.socket, f, req: dict,
+                     ep: Endpoint) -> None:
+        """Deliver a popped endpoint with an ack handshake: write the
+        response, wait briefly for the client's ``ack`` line, and if the
+        client vanished (dead socket, EOF, silence) re-register the
+        endpoint so the next live query can still claim it."""
+        acked = False
+        try:
+            f.write(json.dumps(
+                {"ok": True, **_ep_to_doc(ep)}).encode() + b"\n")
+            f.flush()
+            conn.settimeout(self.QUERY_ACK_S)
+            acked = f.readline().strip() == b"ack"
+        except OSError:
+            acked = False
+        finally:
+            _close_quietly(conn)
+        if not acked:
+            try:
+                self.directory.register(
+                    req["dataset"], ep, req.get("query_id", "0"))
+            except Exception:  # directory shutting down: nothing to heal
+                pass
+
 
 def _close_quietly(conn: socket.socket) -> None:
     try:
@@ -785,13 +1022,21 @@ class DirectoryClient:
     def __init__(self, host: str, port: int):
         self.addr = (host, port)
 
-    def _rpc(self, req: dict) -> dict:
+    def _rpc(self, req: dict, ack: bool = False) -> dict:
         _rpc_fault(req.get("op", "?"))
         s = socket.create_connection(self.addr, timeout=60.0)
         f = s.makefile("rwb")
         f.write(json.dumps(req).encode() + b"\n")
         f.flush()
         resp = json.loads(f.readline())
+        if ack and resp.get("ok"):
+            # endpoint-pop handoff: confirm receipt so the server knows
+            # the endpoint reached a live process (no ack -> restitution)
+            try:
+                f.write(b"ack\n")
+                f.flush()
+            except OSError:
+                pass
         s.close()
         return resp
 
@@ -848,7 +1093,8 @@ class DirectoryClient:
                 "query_id": query_id,
                 "export_workers": export_workers,
                 "timeout": timeout,
-            }
+            },
+            ack=True,
         )
         if not resp.get("ok"):
             raise TimeoutError(resp.get("error", "directory query failed"))
@@ -911,6 +1157,37 @@ class DirectoryClient:
                 "endpoint": _ep_to_doc(endpoint),
             }
         )
+
+    def publish_name(self, name: str, doc: Dict[str, Any],
+                     lease_s: Optional[float] = None) -> None:
+        doc = dict(doc)
+        doc.setdefault("pid", os.getpid())
+        self._rpc({"op": "publish_name", "name": name, "doc": doc,
+                   "lease_s": lease_s})
+
+    def lookup_name(self, name: str, timeout: float = 30.0) -> Dict[str, Any]:
+        resp = self._rpc(
+            {"op": "lookup_name", "name": name, "timeout": timeout})
+        if not resp.get("ok"):
+            raise TimeoutError(resp.get("error", "directory lookup failed"))
+        return resp.get("doc") or {}
+
+    def unpublish_name(self, name: str, pid: Optional[int] = None) -> bool:
+        resp = self._rpc({"op": "unpublish_name", "name": name,
+                          "pid": pid or os.getpid()})
+        return bool(resp.get("removed"))
+
+    def renew_name(self, name: str, pid: Optional[int] = None,
+                   lease_s: Optional[float] = None) -> int:
+        resp = self._rpc({"op": "renew_name", "name": name,
+                          "pid": pid or os.getpid(), "lease_s": lease_s})
+        return int(resp.get("renewed", 0))
+
+    def list_names(self) -> Dict[str, Dict[str, Any]]:
+        resp = self._rpc({"op": "list_names"})
+        if not resp.get("ok"):
+            raise IOError(resp.get("error", "directory list_names failed"))
+        return resp.get("names") or {}
 
     def stats(self) -> dict:
         """Snapshot the server's stats provider (the broker's ``stats()``

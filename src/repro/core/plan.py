@@ -64,6 +64,7 @@ __all__ = [
     "PlanResult",
     "PlanError",
     "PlanExecutionError",
+    "SubscriptionSet",
     "negotiated_config",
     "chain_exceptions",
 ]
@@ -155,6 +156,40 @@ class _Edge:
     dst_table: str
     options: Dict[str, Any]
     after_prev: bool = False
+
+
+#: options a subscribe() edge accepts (continuous pipes)
+_SUB_KEYS = frozenset(
+    ("name", "transport", "mode", "codec", "retain_epochs", "retain_bytes",
+     "lease_s", "tenant", "qos", "shm_capacity", "doorbell", "streams",
+     "timeout", "broadcast", "schema", "watermark"))
+
+
+@dataclass
+class _SubEdge:
+    """A long-lived edge: ``dst`` subscribes to ``src:table`` deltas."""
+
+    src: Any
+    table: str
+    dst: Any
+    dst_table: str
+    options: Dict[str, Any]
+
+    @property
+    def name(self) -> str:
+        return self.options.get("name") or f"{self.src.name}.{self.table}"
+
+    def explain_line(self) -> str:
+        o = self.options
+        bits = [f"{self.name}: {self.src.name}:{self.table} ~> "
+                f"{self.dst.name}:{self.dst_table}",
+                f"transport={o.get('transport', 'shm')}"]
+        if int(o.get("streams", 1)) > 1:
+            bits.append(f"streams={o.get('streams')}")
+        if o.get("retain_epochs"):
+            bits.append(f"retain={o.get('retain_epochs')}ep")
+        bits.append("lifecycle=start/poll/close")
+        return "  ".join(bits)
 
 
 @dataclass
@@ -285,6 +320,8 @@ class TransferPlan:
     def __init__(self, directory: Optional[DirectoryLike] = None,
                  negotiate: bool = True):
         self._edges: List[_Edge] = []
+        self._sub_edges: List[_SubEdge] = []
+        self._last_edge: Optional[Any] = None
         self._directory = directory
         self._negotiate = negotiate
 
@@ -295,6 +332,7 @@ class TransferPlan:
         data dependency run concurrently (a second ``move`` out of the
         same table is a fan-out)."""
         self._edges.append(_Edge(src, table, dst, dst_table, dict(options)))
+        self._last_edge = self._edges[-1]
         return self
 
     def then(self, src: Any, table: str, dst: Any, dst_table: str,
@@ -305,15 +343,41 @@ class TransferPlan:
             raise PlanError("then() needs a preceding move()")
         self._edges.append(
             _Edge(src, table, dst, dst_table, dict(options), after_prev=True))
+        self._last_edge = self._edges[-1]
+        return self
+
+    def subscribe(self, src: Any, table: str, dst: Any, dst_table: str,
+                  **options: Any) -> "TransferPlan":
+        """Add a *continuous* edge: ``dst`` subscribes to ``src:table``
+        and keeps receiving delta epochs for as long as the handle stays
+        open (:mod:`repro.core.subscribe`).  Compile as usual, then call
+        :meth:`CompiledPlan.start` — subscribe edges are long-lived, so
+        they get a start/poll/close lifecycle instead of ``execute()``.
+        Several subscribers of the same source relation share one
+        publication, and colocated shm subscribers collapse onto a
+        broadcast ring (one encode + one ring write per epoch)."""
+        bad = set(options) - _SUB_KEYS
+        if bad:
+            raise PlanError(
+                f"unknown subscribe option(s): {sorted(bad)} "
+                f"(allowed: {sorted(_SUB_KEYS)})")
+        self._sub_edges.append(
+            _SubEdge(src, table, dst, dst_table, dict(options)))
+        self._last_edge = self._sub_edges[-1]
         return self
 
     def options(self, **options: Any) -> "TransferPlan":
         """Refine the last-added edge (``mode=``, ``streams=``,
         ``partition=``, ``workers=``, ... — any PipeConfig knob or edge
         option)."""
-        if not self._edges:
+        if self._last_edge is None:
             raise PlanError("options() needs a preceding move()")
-        self._edges[-1].options.update(options)
+        if isinstance(self._last_edge, _SubEdge):
+            bad = set(options) - _SUB_KEYS
+            if bad:
+                raise PlanError(
+                    f"unknown subscribe option(s): {sorted(bad)}")
+        self._last_edge.options.update(options)
         return self
 
     # -- compile ---------------------------------------------------------------
@@ -322,8 +386,13 @@ class TransferPlan:
         """Validate the whole DAG and resolve every edge to an
         :class:`EdgePlan` — negotiation, partition bounds, worker pairing
         — before any data moves."""
+        if not self._edges and not self._sub_edges:
+            raise PlanError(
+                "empty plan: add edges with move() or subscribe()")
         if not self._edges:
-            raise PlanError("empty plan: add edges with move()")
+            # subscription-only plan: no batch stages to resolve
+            return CompiledPlan([], [], directory or self._directory,
+                                sub_edges=list(self._sub_edges))
         with telemetry.span("plan.compile", edges=len(self._edges)):
             return self._compile(directory)
 
@@ -395,7 +464,8 @@ class TransferPlan:
                     and e.table in getattr(e.src, "tables", ()))))
         self._group_broadcasts(plans)
         return CompiledPlan(plans, [[f"e{i}" for i in lvl] for lvl in stages],
-                            directory or self._directory)
+                            directory or self._directory,
+                            sub_edges=list(self._sub_edges))
 
     @staticmethod
     def _group_broadcasts(plans: List[EdgePlan]) -> None:
@@ -623,9 +693,11 @@ class CompiledPlan:
     independent edges.  ``explain()`` before, ``execute()`` when ready."""
 
     def __init__(self, edges: List[EdgePlan], stages: List[List[str]],
-                 directory: Optional[DirectoryLike]):
+                 directory: Optional[DirectoryLike],
+                 sub_edges: Optional[List[_SubEdge]] = None):
         self.edges = edges
         self.stages = stages
+        self.sub_edges = sub_edges or []
         self._directory = directory
         self._by_id = {ep.edge_id: ep for ep in edges}
 
@@ -641,6 +713,11 @@ class CompiledPlan:
             lines.append(f"stage {s}:")
             for eid in stage:
                 lines.append("  " + self._by_id[eid].explain_line())
+        if self.sub_edges:
+            lines.append(f"continuous: {len(self.sub_edges)} "
+                         f"subscription edge(s)")
+            for se in self.sub_edges:
+                lines.append("  " + se.explain_line())
         return "\n".join(lines)
 
     def execute(self, raise_on_error: bool = True) -> PlanResult:
@@ -649,6 +726,10 @@ class CompiledPlan:
         failed edge raises :class:`PlanExecutionError` after the whole
         plan settles, all collected exceptions chained; edges downstream
         of a failure are skipped, independent edges still run."""
+        if self.sub_edges and not self.edges:
+            raise PlanError(
+                "this plan has only subscribe() edges — they are "
+                "long-lived; use start() (then poll()/close() the handle)")
         if self._directory is not None:
             set_directory(self._directory)
         # generate every engine's pipe adapter up front, serially: the
@@ -749,6 +830,102 @@ class CompiledPlan:
             ) from chain_exceptions(exceptions)
         return pr
 
+    # -- continuous edges (subscribe() verb) -----------------------------------
+    def start(self, timeout: float = 30.0) -> "SubscriptionSet":
+        """Bring the plan's subscribe() edges live and return the handle.
+
+        Per distinct (source, table, name) one :class:`~repro.core.
+        subscribe.Publication` is created — seeded with a snapshot of the
+        source table if it has rows — and wired to the source engine's
+        ``on_append`` delta-capture hook, so every ``engine.append()``
+        commits an epoch.  Each subscribe edge becomes a
+        :class:`~repro.core.subscribe.Subscription` applying epochs into
+        its target engine; shm subscribers of one publication share a
+        broadcast ring.  The caller owns the returned handle:
+        ``poll()`` to apply deltas, ``close()`` to tear everything down.
+        """
+        if not self.sub_edges:
+            raise PlanError("no subscribe() edges in this plan — "
+                            "use execute() for batch moves")
+        # `from .subscribe import ...` resolves inside the module itself —
+        # the package attribute `subscribe` is shadowed by the factory
+        # function of the same name once repro.core finishes importing
+        from .subscribe import Publication, Subscription, apply_to_engine
+        from .directory import get_directory
+
+        directory = self._directory if self._directory is not None \
+            else get_directory()
+        groups: Dict[Tuple[int, str, str], List[_SubEdge]] = {}
+        for se in self.sub_edges:
+            groups.setdefault((id(se.src), se.table, se.name),
+                              []).append(se)
+        pubs: Dict[str, Any] = {}
+        unhooks: List[Any] = []
+        subs: List[Tuple[str, Any]] = []
+        try:
+            for (_, table, name), edges in groups.items():
+                se0 = edges[0]
+                src, o = se0.src, se0.options
+                initial = (src.get_block(table)
+                           if table in getattr(src, "tables", ()) else None)
+                schema = (initial.schema if initial is not None
+                          else o.get("schema"))
+                if schema is None:
+                    raise PlanError(
+                        f"subscribe: source table "
+                        f"{src.name}:{table} is empty — pass schema=")
+                pub = Publication(
+                    name, schema, directory=directory,
+                    mode=o.get("mode", "arrowcol"),
+                    codec=o.get("codec", "none"),
+                    retain_epochs=int(o.get("retain_epochs", 64)),
+                    retain_bytes=int(o.get("retain_bytes", 64 << 20)),
+                    lease_s=o.get("lease_s"),
+                    tenant=o.get("tenant", "default"),
+                    qos=o.get("qos", "bulk"))
+                pubs[name] = pub
+                if initial is not None and len(initial):
+                    pub.commit_snapshot(initial)
+                if hasattr(src, "on_append"):
+                    unhooks.append(src.on_append(
+                        table, lambda _t, blk, p=pub: p.append(blk)))
+                # colocated shm subscribers collapse onto one broadcast
+                # ring — one encode + one ring write per epoch
+                shm_edges = [
+                    e for e in edges
+                    if e.options.get("transport", "shm") == "shm"
+                    and int(e.options.get("streams", 1)) == 1
+                    and e.options.get("broadcast", True)]
+                bc = len(shm_edges) if len(shm_edges) > 1 else 0
+                for se in edges:
+                    eo = se.options
+                    kw: Dict[str, Any] = {
+                        "directory": directory,
+                        "transport": eo.get("transport", "shm"),
+                        "streams": int(eo.get("streams", 1)),
+                        "watermark": int(eo.get("watermark", 0)),
+                        "timeout": eo.get("timeout", timeout),
+                        "apply": apply_to_engine(se.dst, se.dst_table),
+                    }
+                    if bc and se in shm_edges:
+                        kw["broadcast"] = bc
+                    for opt in ("shm_capacity", "doorbell", "lease_s"):
+                        if opt in eo:
+                            kw[opt] = eo[opt]
+                    label = f"{name}->{se.dst.name}:{se.dst_table}"
+                    if any(l == label for l, _ in subs):
+                        label = f"{label}#{len(subs)}"
+                    subs.append((label, Subscription(name, **kw)))
+        except BaseException:
+            for _, s in subs:
+                s.close()
+            for u in unhooks:
+                u()
+            for p in pubs.values():
+                p.close()
+            raise
+        return SubscriptionSet(pubs, subs, unhooks)
+
     @staticmethod
     def _run_unit(unit: List[EdgePlan], qid: str, broker, outs: Dict,
                   recorder: FlightRecorder) -> None:
@@ -788,6 +965,72 @@ class CompiledPlan:
         finally:
             if ticket is not None:
                 ticket.release()
+
+
+class SubscriptionSet:
+    """The live handle :meth:`CompiledPlan.start` returns for a plan's
+    continuous edges: per-name publications fed by the source engines'
+    append hooks, plus one subscription per edge applying epochs into its
+    target engine.  ``poll()`` to apply pending deltas, ``close()`` to
+    tear down subscriptions → hooks → publications, in that order."""
+
+    def __init__(self, publications: Dict[str, Any],
+                 subscriptions: List[Tuple[str, Any]],
+                 unhooks: List[Any]):
+        self.publications = publications
+        self.subscriptions = subscriptions
+        self._unhooks = unhooks
+        self._closed = False
+
+    def poll(self, timeout: float = 0.0) -> Dict[str, List[Any]]:
+        """Drain every subscription once (deltas apply into the target
+        engines via their ``apply`` callbacks); label -> epochs."""
+        out: Dict[str, List[Any]] = {}
+        for label, sub in self.subscriptions:
+            try:
+                out[label] = sub.poll(timeout)
+            except BrokenPipeError:
+                out[label] = []
+        return out
+
+    @property
+    def watermarks(self) -> Dict[str, int]:
+        return {label: s.watermark for label, s in self.subscriptions}
+
+    def wait_caught_up(self, timeout: float = 10.0) -> bool:
+        """Poll until every subscription's watermark reaches its
+        publication's head (True) or ``timeout`` elapses (False)."""
+        deadline = time.monotonic() + timeout
+        while True:
+            heads = {n: p.head for n, p in self.publications.items()}
+            behind = [
+                (label, s) for label, s in self.subscriptions
+                if s.watermark < heads.get(label.split("->", 1)[0], 0)]
+            if not behind:
+                return True
+            if time.monotonic() >= deadline:
+                return False
+            self.poll(timeout=0.05)
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        for _, sub in self.subscriptions:
+            sub.close()
+        for unhook in self._unhooks:
+            try:
+                unhook()
+            except Exception:
+                pass
+        for pub in self.publications.values():
+            pub.close()
+
+    def __enter__(self) -> "SubscriptionSet":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.close()
 
 
 # -- the edge runners ----------------------------------------------------------

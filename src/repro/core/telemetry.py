@@ -490,6 +490,12 @@ class MetricsRegistry:
                         inst.counts))}
         return out
 
+    def drop(self, name: str, kind: str = "g", **labels: str) -> None:
+        """Remove one instrument (e.g. a closed subscription's lag gauge)
+        so snapshots stop reporting a stale last value."""
+        with self._lock:
+            self._instruments.pop((kind, name, _label_key(labels)), None)
+
     def reset(self) -> None:
         with self._lock:
             self._instruments.clear()

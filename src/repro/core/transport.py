@@ -14,6 +14,10 @@ Frame layout on the wire: 1-byte kind + uint32 little-endian payload length
     R  resume hello (follows the schema frame when the edge is resumable;
        json ``{"epoch": k, "from": n}`` — the exporter announces it will
        send data frames n, n+1, ... so the importer can dedupe overlap)
+    D  epoch header (continuous pipes, repro.core.subscribe): json
+       ``{"epoch": e, "head": h, "kind": "delta"|"snapshot", "blocks": k,
+       "rows": r, "ts": t}`` announcing that the next k B-frames carry
+       one committed epoch of a published relation
 
 Scatter-gather send path: :meth:`Transport.send_frames` takes the payload
 as a sequence of buffer views (a :class:`~repro.core.iobuf.SegmentList`)
@@ -51,6 +55,7 @@ __all__ = [
     "FRAME_EOF",
     "FRAME_STRIPE",
     "FRAME_RESUME",
+    "FRAME_EPOCH",
     "LinkSim",
     "Transport",
     "SocketTransport",
@@ -67,6 +72,7 @@ FRAME_VERIFY = b"V"
 FRAME_EOF = b"E"
 FRAME_STRIPE = b"M"
 FRAME_RESUME = b"R"
+FRAME_EPOCH = b"D"
 
 _HEADER = struct.Struct("<cI")
 
@@ -197,13 +203,17 @@ class SocketTransport(Transport):
         return kind, payload
 
     def close(self) -> None:
-        try:
-            self._rfile.close()
-        except Exception:
-            pass
+        # shutdown BEFORE closing the buffered reader: a receiver thread
+        # blocked in _rfile.read() holds the BufferedReader lock, and
+        # _rfile.close() would wait on that lock forever.  Shutdown makes
+        # the blocked read return EOF, releasing the lock.
         try:
             self.sock.shutdown(socket.SHUT_RDWR)
         except OSError:
+            pass
+        try:
+            self._rfile.close()
+        except Exception:
             pass
         self.sock.close()
 

@@ -106,6 +106,7 @@ class Engine:
         self.decorated = decorated
         self._tables: Dict[str, ColumnBlock] = {}
         self._lock = threading.Lock()
+        self._append_hooks: Dict[str, List[Any]] = {}
 
     # -- storage API (engine-internal representation is subclass business) ----
     def put_block(self, table: str, block: ColumnBlock) -> None:
@@ -121,6 +122,42 @@ class Engine:
     @property
     def tables(self) -> List[str]:
         return sorted(self._tables)
+
+    # -- delta capture (continuous pipes, repro.core.subscribe) ----------------
+    def append(self, table: str, block: ColumnBlock) -> ColumnBlock:
+        """Extend ``table`` with ``block`` and hand the delta to every
+        :meth:`on_append` listener — the change-capture source a
+        :class:`repro.core.subscribe.Publication` commits epochs from.
+        Listeners run *after* the table lock is released (a listener is
+        free to read the engine or commit to a publication)."""
+        with self._lock:
+            cur = self._tables.get(table)
+            if cur is None or not len(cur):
+                self._tables[table] = block
+            else:
+                if cur.schema.names != block.schema.names:
+                    raise ValueError(
+                        f"append to {table!r}: schema mismatch "
+                        f"({cur.schema.names} vs {block.schema.names})")
+                self._tables[table] = ColumnBlock.concat([cur, block])
+            hooks = list(self._append_hooks.get(table, ()))
+        for fn in hooks:
+            fn(table, block)
+        return block
+
+    def on_append(self, table: str, fn: Any) -> Any:
+        """Register ``fn(table, delta_block)`` to observe appends; returns
+        an unsubscribe callable."""
+        with self._lock:
+            self._append_hooks.setdefault(table, []).append(fn)
+
+        def _unhook() -> None:
+            with self._lock:
+                hooks = self._append_hooks.get(table)
+                if hooks and fn in hooks:
+                    hooks.remove(fn)
+
+        return _unhook
 
     # -- decoration hooks (Algorithm 1 substitution points) --------------------
     def _s(self, v: Any):

@@ -23,7 +23,55 @@ import numpy as np
 
 from ..models import Model
 
-__all__ = ["ServeEngine", "GenerationResult"]
+__all__ = ["FeatureView", "ServeEngine", "GenerationResult"]
+
+
+class FeatureView:
+    """A continuously-fresh relation the serving path reads without ever
+    reloading it: epochs arrive through a :class:`repro.core.subscribe.
+    Subscription` and fold into one ColumnBlock on ``refresh()``.
+
+    The serving loop calls ``refresh()`` between decode steps (cheap:
+    non-blocking poll, usually empty), so feature freshness is bounded by
+    the publisher's commit cadence, not by any re-export schedule.  When
+    the publisher dies the view keeps serving its last image and flags
+    ``ended`` — the owner resubscribes at ``watermark`` once the
+    publisher is back (the crash-heal path the fault tests exercise).
+    """
+
+    def __init__(self, subscription: Any):
+        self._sub = subscription
+        self.block: Optional[Any] = None    # latest folded ColumnBlock
+        self.epoch = 0                      # epoch of that image
+        self.refreshes = 0                  # polls that brought new epochs
+        self.ended = False
+
+    @property
+    def watermark(self) -> int:
+        return self._sub.watermark
+
+    def refresh(self) -> int:
+        """Drain pending epochs into the view; returns how many applied."""
+        if self.ended:
+            return 0
+        try:
+            deltas = self._sub.poll(timeout=0.0)
+        except BrokenPipeError:
+            self.ended = True
+            return 0
+        for delta in deltas:
+            if delta.kind == "snapshot" or self.block is None:
+                self.block = delta.block
+            else:
+                from ..core.types import ColumnBlock
+                self.block = ColumnBlock.concat([self.block, delta.block])
+            self.epoch = delta.epoch
+        if deltas:
+            self.refreshes += 1
+        return len(deltas)
+
+    def close(self) -> None:
+        self._sub.close()
 
 
 # One jitted decode step per (model, mesh): engines over the same model reuse
@@ -90,6 +138,17 @@ class ServeEngine:
         self._tokens = np.zeros((batch_size, 1), np.int32)
         self._step = _shared_decode_step(model, mesh)
         self.steps_run = 0
+        self.features: Optional[FeatureView] = None
+
+    def attach_feature_source(self, subscription: Any) -> FeatureView:
+        """Serve against a continuously-updated feature relation: wrap the
+        subscription in a :class:`FeatureView` refreshed at the top of
+        every :meth:`run` iteration (instead of reloading the relation
+        per batch).  Returns the view; ``self.features.block`` is the
+        current image."""
+        self.features = FeatureView(subscription)
+        self.features.refresh()
+        return self.features
 
     # -- client API -------------------------------------------------------------
     def submit(self, prompt: List[int], max_new_tokens: int = 16) -> int:
@@ -104,6 +163,8 @@ class ServeEngine:
         """Decode until queue + slots drain (or max_steps)."""
         done: List[GenerationResult] = []
         for _ in range(max_steps):
+            if self.features is not None:
+                self.features.refresh()
             self._fill_slots()
             if not any(s.request for s in self._slots):
                 break

@@ -65,6 +65,25 @@ def _tenant_rows(stats: Dict[str, Any]) -> List[str]:
     return rows
 
 
+def _subscription_rows(stats: Dict[str, Any]) -> List[str]:
+    """Continuous-pipe publications table: one row per live publication
+    (see :func:`repro.core.subscribe.publications_snapshot`)."""
+    subs = stats.get("subscriptions") or []
+    rows = [f"  {'name':<18} {'subs':>5} {'head':>8} {'min wm':>8} "
+            f"{'lag':>6} {'log':>10} {'fallbacks':>10}"]
+    for s in subs:
+        head = s.get("head_epoch", 0)
+        wm = s.get("min_watermark", 0)
+        rows.append(
+            f"  {str(s.get('name', '?')):<18} {s.get('subscribers', 0):>5} "
+            f"{head:>8} {wm:>8} {max(0, head - wm):>6} "
+            f"{_fmt_bytes(s.get('retained_bytes', 0)):>10} "
+            f"{s.get('snapshot_fallbacks', 0):>10}")
+    if len(rows) == 1:
+        rows.append("  (no publications)")
+    return rows
+
+
 def render(stats: Dict[str, Any], now: float = 0.0) -> str:
     """One dashboard frame from a broker ``stats`` snapshot.  Pure —
     takes the dict, returns the text — so tests can feed it canned or
@@ -89,6 +108,9 @@ def render(stats: Dict[str, Any], now: float = 0.0) -> str:
         "",
         "tenants",
         *_tenant_rows(stats),
+        "",
+        "subscriptions",
+        *_subscription_rows(stats),
     ]
     qos = stats.get("active_by_qos") or {}
     if qos:

@@ -356,3 +356,119 @@ def test_sweep_removes_fifos_whose_segment_is_already_gone():
                 os.unlink(f)
             except FileNotFoundError:
                 pass
+
+
+# -- continuous pipes: exporter crash + watermark resume ----------------------------
+
+
+def _crash_publisher_child(port, name, start_epoch, n_epochs, ready):
+    from repro.core.directory import DirectoryClient
+    from repro.core.subscribe import Publication
+
+    client = DirectoryClient("127.0.0.1", port)
+    schema = make_paper_block(1).schema
+    pub = Publication(name, schema, directory=client,
+                      start_epoch=start_epoch)
+    for e in range(start_epoch + 1, start_epoch + n_epochs + 1):
+        pub.commit([make_paper_block(BLOCK_ROWS, seed=1000 + e)])
+    ready.set()
+    time.sleep(JOIN_S)  # parked: the parent SIGKILLs (crash) or reaps us
+
+
+def test_dead_requester_query_does_not_eat_registration():
+    """The endpoint-pop handoff must survive a requester that dies between
+    asking and hearing the answer.  A SIGKILLed publisher leaves exactly
+    such a query parked in a directory handler; when a new subscriber
+    registers, that dead query pops the endpoint and writes the response
+    into a void.  Without the ack/restitution handshake the registration
+    is consumed forever and the live subscriber starves."""
+    import json as _json
+    import socket
+
+    from repro.core.directory import DirectoryClient, DirectoryServer
+
+    server = DirectoryServer().start()
+    try:
+        # park a query server-side, then "die" without reading the answer
+        s = socket.create_connection(("127.0.0.1", server.port), timeout=10)
+        s.sendall(_json.dumps(
+            {"op": "query", "dataset": "ds", "query_id": "q",
+             "timeout": 30.0}).encode() + b"\n")
+        time.sleep(0.3)  # let the handler park in the rendezvous wait
+        s.close()
+
+        client = DirectoryClient("127.0.0.1", server.port)
+        client.register("ds", Endpoint(host="127.0.0.1", port=12345), "q")
+        # the dead query races us to the pop; whether it wins or not, the
+        # endpoint must end up with the live query below
+        ep = client.query("ds", "q", timeout=JOIN_S)
+        assert ep.port == 12345
+    finally:
+        server.stop()
+
+
+def test_publisher_sigkill_watermark_resume_over_socket():
+    """Exporter crash + restart heals via re-publish + resubscribe: a
+    publisher process is SIGKILLed mid-stream; its successor re-publishes
+    the same name starting at the crashed head, and the subscriber —
+    resubscribing at its watermark — receives exactly the missing epochs
+    as replayed deltas (no snapshot, no duplicates), folding to the full
+    relation bit-identically."""
+    from repro.core.directory import DirectoryClient, DirectoryServer
+    from repro.core.subscribe import Subscription
+    from repro.core.types import ColumnBlock
+
+    server = DirectoryServer().start()
+    name = f"crash.pub{os.getpid():x}"
+    p1 = p2 = None
+    try:
+        ready1 = _mp.Event()
+        p1 = _mp.Process(target=_crash_publisher_child,
+                         args=(server.port, name, 0, 3, ready1))
+        p1.start()
+        assert ready1.wait(JOIN_S)
+        client = DirectoryClient("127.0.0.1", server.port)
+        sub = Subscription(name, watermark=0, directory=client,
+                           transport="socket", timeout=JOIN_S)
+        got = []
+        deadline = time.monotonic() + JOIN_S
+        while len(got) < 3 and time.monotonic() < deadline:
+            got.extend(sub.poll(timeout=0.2))
+        assert [e.epoch for e in got] == [1, 2, 3]
+        p1.kill()  # SIGKILL: no EOF courtesy, no unpublish, no lease release
+        p1.join(JOIN_S)
+        with pytest.raises(BrokenPipeError):
+            deadline = time.monotonic() + JOIN_S
+            while time.monotonic() < deadline:
+                got.extend(sub.poll(timeout=0.2))
+        wm = sub.watermark
+        assert wm == 3  # the watermark survives the wreck
+        sub.close()
+
+        ready2 = _mp.Event()
+        p2 = _mp.Process(target=_crash_publisher_child,
+                         args=(server.port, name, wm, 2, ready2))
+        p2.start()
+        assert ready2.wait(JOIN_S)
+        sub2 = Subscription(name, watermark=wm, directory=client,
+                            transport="socket", timeout=JOIN_S)
+        try:
+            more = []
+            deadline = time.monotonic() + JOIN_S
+            while len(more) < 2 and time.monotonic() < deadline:
+                more.extend(sub2.poll(timeout=0.2))
+            assert [e.epoch for e in more] == [4, 5]
+            assert all(e.kind == "delta" for e in more)  # replay, no snapshot
+        finally:
+            sub2.close()
+        folded = ColumnBlock.concat([e.block for e in got + more])
+        expect = ColumnBlock.concat(
+            [make_paper_block(BLOCK_ROWS, seed=1000 + e)
+             for e in range(1, 6)])
+        assert_blocks_equal(folded, expect)
+    finally:
+        for p in (p1, p2):
+            if p is not None and p.is_alive():
+                p.kill()
+                p.join(JOIN_S)
+        server.stop()

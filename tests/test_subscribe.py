@@ -1,0 +1,558 @@
+"""Continuous pipes (repro.core.subscribe): epochs, the replay log,
+broadcast fan-out with one encode per epoch, late-joiner replay vs
+snapshot fallback, slow-subscriber retention eviction, the named
+publication registry (in-process AND over the directory RPC), renewer
+leak-freedom, the plan subscribe() verb, pipetop's subscriptions table,
+and the serving-path FeatureView."""
+
+import threading
+import time
+
+import pytest
+
+from repro.core import subscribe as subm
+from repro.core.directory import (
+    DirectoryClient,
+    DirectoryServer,
+    LeaseRenewer,
+    WorkerDirectory,
+    live_renewers,
+)
+from repro.core.plan import PlanError, plan
+from repro.core.subscribe import (
+    PublicationEnded,
+    ReplayLog,
+    _EpochRecord,
+    publications_snapshot,
+    publish,
+    subscribe,
+)
+from repro.engines import (
+    ColStore,
+    RowStore,
+    assert_blocks_equal,
+    make_paper_block,
+)
+
+JOIN_S = 30
+
+
+def _drain(sub, want, timeout=15.0):
+    """Poll until ``want`` epochs arrived (or fail the test)."""
+    out = []
+    deadline = time.monotonic() + timeout
+    while len(out) < want and time.monotonic() < deadline:
+        out.extend(sub.poll(timeout=0.2))
+    assert len(out) >= want, f"got {len(out)} of {want} epochs"
+    return out
+
+
+# -- replay log ------------------------------------------------------------------
+
+
+def test_replay_log_epoch_cap_evicts_oldest():
+    log = ReplayLog(retain_epochs=3, retain_bytes=1 << 30)
+    for e in range(1, 6):
+        log.append(_EpochRecord(e, "delta", [b"x" * 10], 1, 10, 0.0))
+    assert len(log) == 3
+    assert log.floor == 3
+    assert log.get(2) is None and log.get(5) is not None
+    assert log.evicted == 2
+
+
+def test_replay_log_byte_cap_keeps_newest():
+    log = ReplayLog(retain_epochs=100, retain_bytes=25)
+    for e in range(1, 5):
+        log.append(_EpochRecord(e, "delta", [b"x" * 10], 1, 10, 0.0))
+    # 4 x 10B under a 25B cap -> two retained; newest always kept
+    assert log.get(4) is not None
+    assert log.nbytes <= 25
+    # one oversized record still lands (the live path never starves)
+    log.append(_EpochRecord(9, "delta", [b"y" * 100], 1, 100, 0.0))
+    assert log.get(9) is not None
+
+
+# -- single-subscriber basics ----------------------------------------------------
+
+
+def test_publish_subscribe_initial_snapshot_then_deltas():
+    d = WorkerDirectory()
+    base = make_paper_block(64, seed=1)
+    pub = publish("t.basic", initial=base, directory=d)
+    sub = subscribe("t.basic", directory=d, transport="shm")
+    try:
+        first = _drain(sub, 1)
+        assert first[0].kind == "snapshot" and first[0].epoch == 1
+        assert_blocks_equal(first[0].block, base)
+        deltas = [make_paper_block(8, seed=10 + i) for i in range(3)]
+        for b in deltas:
+            pub.append(b)
+        got = _drain(sub, 3)
+        assert [e.epoch for e in got] == [2, 3, 4]
+        for e, b in zip(got, deltas):
+            assert e.kind == "delta"
+            assert_blocks_equal(e.block, b)
+        assert sub.watermark == 4 and sub.lag_epochs == 0
+    finally:
+        sub.close()
+        pub.close()
+
+
+@pytest.mark.parametrize("transport", ["channel", "socket"])
+def test_transport_matrix_delivers_epochs(transport):
+    d = WorkerDirectory()
+    pub = publish(f"t.{transport}", initial=make_paper_block(32, seed=2),
+                  directory=d)
+    sub = subscribe(f"t.{transport}", directory=d, transport=transport)
+    try:
+        pub.append(make_paper_block(8, seed=3))
+        got = _drain(sub, 2)
+        assert [e.epoch for e in got] == [1, 2]
+    finally:
+        sub.close()
+        pub.close()
+
+
+def test_striped_subscription_preserves_epoch_order():
+    d = WorkerDirectory()
+    pub = publish("t.striped", initial=make_paper_block(64, seed=4),
+                  directory=d)
+    sub = subscribe("t.striped", directory=d, transport="socket", streams=3)
+    try:
+        blocks = [make_paper_block(16, seed=20 + i) for i in range(10)]
+        for b in blocks:
+            pub.append(b)
+        got = _drain(sub, 11)
+        assert [e.epoch for e in got] == list(range(1, 12))
+        for e, b in zip(got[1:], blocks):
+            assert_blocks_equal(e.block, b)
+    finally:
+        sub.close()
+        pub.close()
+
+
+def test_poll_raises_publication_ended_after_drain():
+    d = WorkerDirectory()
+    pub = publish("t.ended", initial=make_paper_block(16, seed=5),
+                  directory=d)
+    sub = subscribe("t.ended", directory=d, transport="shm")
+    try:
+        _drain(sub, 1)
+        pub.append(make_paper_block(4, seed=6))
+        pub.close()  # graceful: drains epoch 2, then EOF
+        got = _drain(sub, 1)
+        assert got[-1].epoch == 2
+        with pytest.raises(PublicationEnded) as ei:
+            deadline = time.monotonic() + 10
+            while time.monotonic() < deadline:
+                sub.poll(timeout=0.2)
+        assert ei.value.watermark == 2  # resubscribe point
+    finally:
+        sub.close()
+
+
+# -- broadcast fan-out (acceptance: 50 epochs x 3 subscribers, 1 encode) ---------
+
+
+def test_broadcast_3sub_50_epochs_bit_identical_one_encode():
+    d = WorkerDirectory()
+    pub = publish("t.bc", schema=make_paper_block(1).schema, directory=d,
+                  retain_epochs=128)
+    subs = [subscribe("t.bc", directory=d, transport="shm", broadcast=3)
+            for _ in range(3)]
+    try:
+        blocks = [make_paper_block(32, seed=i) for i in range(50)]
+        for b in blocks:
+            pub.append(b)
+        got = [[] for _ in subs]
+        deadline = time.monotonic() + 30
+        while (any(len(g) < 50 for g in got)
+               and time.monotonic() < deadline):
+            for g, s in zip(got, subs):
+                g.extend(s.poll(timeout=0.1))
+        for g in got:
+            assert len(g) == 50
+            assert [e.epoch for e in g] == list(range(1, 51))
+            for e, b in zip(g, blocks):
+                assert_blocks_equal(e.block, b)  # bit-identical fan-out
+        # the broadcast path encodes each epoch exactly once
+        assert pub.stats.encodes == 50
+        assert pub.stats.snapshot_fallbacks == 0
+        assert pub.subscribers == 3
+    finally:
+        for s in subs:
+            s.close()
+        pub.close()
+
+
+# -- late joiners: replay vs snapshot fallback -----------------------------------
+
+
+def test_late_joiner_at_epoch_30_replays_without_snapshot():
+    d = WorkerDirectory()
+    pub = publish("t.late", schema=make_paper_block(1).schema, directory=d,
+                  retain_epochs=100)
+    try:
+        blocks = [make_paper_block(16, seed=i) for i in range(50)]
+        for b in blocks:
+            pub.append(b)
+        sub = subscribe("t.late", directory=d, transport="shm",
+                        watermark=30)
+        try:
+            got = _drain(sub, 20)
+            assert [e.epoch for e in got] == list(range(31, 51))
+            assert all(e.kind == "delta" for e in got)
+            for e, b in zip(got, blocks[30:]):
+                assert_blocks_equal(e.block, b)
+            # replayed from the log — never a full snapshot
+            assert pub.stats.snapshot_fallbacks == 0
+            assert pub.stats.replayed_epochs == 20
+        finally:
+            sub.close()
+    finally:
+        pub.close()
+
+
+def test_late_joiner_below_retention_gets_snapshot_fallback():
+    d = WorkerDirectory()
+    pub = publish("t.snap", schema=make_paper_block(1).schema, directory=d,
+                  retain_epochs=5)
+    try:
+        blocks = [make_paper_block(16, seed=i) for i in range(40)]
+        for b in blocks:
+            pub.append(b)
+        assert pub._log.floor == 36  # epochs 1..35 evicted
+        sub = subscribe("t.snap", directory=d, transport="shm",
+                        watermark=10)
+        try:
+            got = _drain(sub, 1)
+            snap = got[0]
+            assert snap.kind == "snapshot"
+            assert snap.epoch == 40  # stamped with the image's epoch
+            assert len(snap.block) == sum(len(b) for b in blocks)
+            assert pub.stats.snapshot_fallbacks == 1
+            assert pub.stats.fallback_encodes == 1
+            # live deltas continue after the snapshot
+            pub.append(make_paper_block(4, seed=99))
+            nxt = _drain(sub, 1)
+            assert nxt[0].epoch == 41 and nxt[0].kind == "delta"
+            assert sub.watermark == 41
+        finally:
+            sub.close()
+    finally:
+        pub.close()
+
+
+def test_slow_subscriber_retention_eviction_heals_via_snapshot():
+    """A subscriber that stops polling stops draining its ring (bounded
+    receive queue -> the publisher's sender blocks); the publisher keeps
+    committing and the log evicts past the stalled watermark.  When the
+    subscriber resumes, the sender heals it with a snapshot instead of
+    wedging — and the folded result is complete."""
+    from repro.core.types import ColumnBlock
+
+    d = WorkerDirectory()
+    pub = publish("t.slow", schema=make_paper_block(1).schema, directory=d,
+                  retain_epochs=4)
+    # small ring + 2-epoch receive queue: backpressure builds immediately
+    sub = subscribe("t.slow", directory=d, transport="shm",
+                    shm_capacity=1 << 16, queue_max=2)
+    try:
+        blocks = [make_paper_block(512, seed=i) for i in range(30)]
+        for b in blocks:
+            pub.append(b)
+        deadline = time.monotonic() + 15
+        while pub._log.evicted == 0 and time.monotonic() < deadline:
+            time.sleep(0.05)
+        assert pub._log.evicted > 0  # retention dropped stalled epochs
+        got = []
+        deadline = time.monotonic() + 30
+        while time.monotonic() < deadline:
+            got.extend(sub.poll(timeout=0.2))
+            if got and got[-1].epoch >= 30:
+                break
+        assert got and got[-1].epoch == 30
+        assert any(e.kind == "snapshot" for e in got)
+        assert pub.stats.snapshot_fallbacks >= 1
+        # fold what arrived: the snapshot supersedes the gap, deltas
+        # extend it — the subscriber ends bit-complete anyway
+        folded = None
+        for e in got:
+            folded = (e.block if (e.kind == "snapshot" or folded is None)
+                      else ColumnBlock.concat([folded, e.block]))
+        assert folded is not None and len(folded) == 30 * 512
+        assert_blocks_equal(folded, ColumnBlock.concat(blocks))
+    finally:
+        sub.close()
+        pub.close()
+
+
+# -- renewer ownership (the satellite fix) ---------------------------------------
+
+
+def test_lease_renewer_owned_by_handle_no_leak_after_close():
+    d = WorkerDirectory(lease_ttl=0.5)
+    base = live_renewers()
+    pub = publish("t.lease", initial=make_paper_block(16, seed=7),
+                  directory=d, lease_s=0.5)
+    sub = subscribe("t.lease", directory=d, transport="shm", lease_s=0.5)
+    assert live_renewers() == base + 2  # one per handle, long-lived
+    _drain(sub, 1)
+    # renewal outlives any single transfer: the registration stays fresh
+    time.sleep(1.2)
+    assert d.renew_name("t.lease", lease_s=0.5) == 1
+    sub.close()
+    pub.close()
+    deadline = time.monotonic() + 5
+    while live_renewers() > base and time.monotonic() < deadline:
+        time.sleep(0.02)
+    assert live_renewers() == base  # no renewal leak after close
+
+
+def test_lease_renewer_on_lost_fires_and_thread_exits():
+    lost = threading.Event()
+    calls = []
+
+    def renew(lease_s):
+        calls.append(lease_s)
+        return 0  # gone on first heartbeat
+
+    r = LeaseRenewer(renew, 0.15, on_lost=lost.set).start()
+    assert lost.wait(5.0)
+    deadline = time.monotonic() + 5
+    while r.alive and time.monotonic() < deadline:
+        time.sleep(0.02)
+    assert not r.alive and r.lost.is_set() and calls
+    r.stop()
+
+
+# -- named publication registry --------------------------------------------------
+
+
+def test_publication_registry_in_process():
+    d = WorkerDirectory()
+    d.publish_name("reg.a", {"pid": 0, "k": "v"})
+    doc = d.lookup_name("reg.a", timeout=5.0)
+    assert doc["k"] == "v"
+    assert "reg.a" in d.list_names()
+    assert d.renew_name("reg.a", lease_s=1.0) in (0, 1)  # no-ttl registry
+    assert d.unpublish_name("reg.a")
+    with pytest.raises(TimeoutError):
+        d.lookup_name("reg.a", timeout=0.1)
+
+
+def test_publication_registry_lease_expiry_gc():
+    d = WorkerDirectory(lease_ttl=0.2)
+    d.publish_name("reg.exp", {"pid": 0}, lease_s=0.2)
+    time.sleep(0.5)
+    with pytest.raises(TimeoutError):
+        d.lookup_name("reg.exp", timeout=0.1)
+    assert d.renew_name("reg.exp") == 0  # strictly gone
+
+
+def test_publication_registry_over_directory_rpc():
+    d = WorkerDirectory()
+    server = DirectoryServer(directory=d)
+    server.start()
+    try:
+        client = DirectoryClient("127.0.0.1", server.port)
+        client.publish_name("reg.rpc", {"mode": "arrowcol"})
+        doc = client.lookup_name("reg.rpc", timeout=5.0)
+        assert doc["mode"] == "arrowcol"
+        assert client.renew_name("reg.rpc") in (0, 1)
+        assert "reg.rpc" in client.list_names()
+        assert client.unpublish_name("reg.rpc")
+        with pytest.raises(TimeoutError):
+            client.lookup_name("reg.rpc", timeout=0.1)
+    finally:
+        server.stop()
+
+
+def test_lookup_blocks_until_published():
+    d = WorkerDirectory()
+    out = {}
+
+    def waiter():
+        out["doc"] = d.lookup_name("reg.blk", timeout=10.0)
+
+    t = threading.Thread(target=waiter, daemon=True)
+    t.start()
+    time.sleep(0.1)
+    d.publish_name("reg.blk", {"pid": 0, "x": 1})
+    t.join(JOIN_S)
+    assert not t.is_alive() and out["doc"]["x"] == 1
+
+
+def test_restarted_publisher_replaces_entry_pid_owned_unpublish():
+    d = WorkerDirectory()
+    d.publish_name("reg.own", {"pid": 0, "gen": 1})
+    d.publish_name("reg.own", {"pid": 0, "gen": 2})  # restart re-publishes
+    assert d.lookup_name("reg.own", timeout=1.0)["gen"] == 2
+    # an unpublish from a pid that does not own the entry is a no-op
+    assert not d.unpublish_name("reg.own", pid=999999)
+    assert d.lookup_name("reg.own", timeout=1.0)["gen"] == 2
+
+
+# -- observability ---------------------------------------------------------------
+
+
+def test_publications_snapshot_and_pipetop_row():
+    from repro.tools.pipetop import render
+
+    d = WorkerDirectory()
+    pub = publish("t.top", initial=make_paper_block(32, seed=8),
+                  directory=d)
+    sub = subscribe("t.top", directory=d, transport="shm")
+    try:
+        _drain(sub, 1)
+        rows = publications_snapshot()
+        mine = [r for r in rows if r["name"] == "t.top"]
+        assert mine and mine[0]["head_epoch"] == 1
+        assert mine[0]["subscribers"] == 1
+        assert mine[0]["retained_bytes"] > 0
+        frame = render({"subscriptions": rows})
+        assert "subscriptions" in frame and "t.top" in frame
+    finally:
+        sub.close()
+        pub.close()
+    assert all(r["name"] != "t.top" for r in publications_snapshot())
+
+
+def test_lag_gauges_update_and_drop_on_close():
+    from repro.core import telemetry
+
+    d = WorkerDirectory()
+    pub = publish("t.lag", initial=make_paper_block(16, seed=9),
+                  directory=d)
+    sub = subscribe("t.lag", directory=d, transport="shm")
+    try:
+        _drain(sub, 1)
+        snap = telemetry.registry().snapshot()["gauges"]
+        assert any(k.startswith("pipe.subscription.lag_epochs")
+                   and "pub=t.lag" in k for k in snap)
+    finally:
+        sub.close()
+        pub.close()
+    snap = telemetry.registry().snapshot()["gauges"]
+    assert not any(k.startswith("pipe.subscription.lag_epochs")
+                   and "pub=t.lag" in k for k in snap)
+
+
+# -- plan verb -------------------------------------------------------------------
+
+
+def test_plan_subscribe_verb_lifecycle():
+    d = WorkerDirectory()
+    src, dst1, dst2 = RowStore(), ColStore(), ColStore()
+    base = make_paper_block(64, seed=11)
+    src.put_block("feat", base)
+    cp = (plan(directory=d)
+          .subscribe(src, "feat", dst1, "feat_live")
+          .subscribe(src, "feat", dst2, "feat_live")
+          .compile())
+    assert "subscription edge(s)" in cp.explain()
+    with pytest.raises(PlanError):
+        cp.execute()  # long-lived edges need start()
+    handle = cp.start()
+    try:
+        assert handle.wait_caught_up(15.0), handle.watermarks
+        assert_blocks_equal(dst1.get_block("feat_live"), base)
+        # engine.append() drives delta capture -> epochs -> both targets
+        delta = make_paper_block(16, seed=12)
+        src.append("feat", delta)
+        deadline = time.monotonic() + 15
+        while (min(handle.watermarks.values()) < 2
+               and time.monotonic() < deadline):
+            handle.poll(timeout=0.2)
+        got = dst1.get_block("feat_live")
+        assert len(got) == len(base) + len(delta)
+        assert_blocks_equal(dst2.get_block("feat_live"), got)
+        # two shm subscribers share one broadcast conn: 2 epochs, 2 encodes
+        pub = next(iter(handle.publications.values()))
+        assert pub.stats.encodes == 2
+        assert pub.subscribers == 2
+    finally:
+        handle.close()
+
+
+def test_plan_subscribe_rejects_unknown_options_and_empty_source():
+    d = WorkerDirectory()
+    src, dst = RowStore(), ColStore()
+    with pytest.raises(PlanError):
+        plan(directory=d).subscribe(src, "t", dst, "t2", bogus=1)
+    cp = plan(directory=d).subscribe(src, "missing", dst, "t2").compile()
+    with pytest.raises(PlanError):
+        cp.start()  # empty source table and no schema=
+
+
+# -- serving path (flagship demo) ------------------------------------------------
+
+
+def test_feature_view_serves_fresh_relation_without_reload():
+    from repro.serve.engine import FeatureView
+
+    d = WorkerDirectory()
+    base = make_paper_block(64, seed=13)
+    pub = publish("serve.features", initial=base, directory=d)
+    sub = subscribe("serve.features", directory=d, transport="shm")
+    view = FeatureView(sub)
+    try:
+        deadline = time.monotonic() + 15
+        while view.epoch < 1 and time.monotonic() < deadline:
+            view.refresh()
+            time.sleep(0.02)
+        assert view.epoch == 1
+        assert_blocks_equal(view.block, base)
+        pub.append(make_paper_block(8, seed=14))
+        deadline = time.monotonic() + 15
+        while view.epoch < 2 and time.monotonic() < deadline:
+            view.refresh()
+            time.sleep(0.02)
+        assert view.epoch == 2 and len(view.block) == 72
+        # publisher goes away: the view keeps serving its last image
+        pub.close()
+        deadline = time.monotonic() + 15
+        while not view.ended and time.monotonic() < deadline:
+            view.refresh()
+            time.sleep(0.02)
+        assert view.ended and len(view.block) == 72
+        assert view.watermark == 2  # the resubscribe point
+    finally:
+        view.close()
+
+
+def test_publisher_restart_subscriber_resubscribes_at_watermark():
+    """The crash-heal loop, in-process: close + re-publish at the old
+    head, subscriber resubscribes at its watermark, deltas continue with
+    no snapshot and no gap."""
+    d = WorkerDirectory()
+    blocks = [make_paper_block(16, seed=30 + i) for i in range(4)]
+    pub = publish("t.heal", schema=blocks[0].schema, directory=d)
+    sub = subscribe("t.heal", directory=d, transport="shm")
+    pub.append(blocks[0])
+    pub.append(blocks[1])
+    got = _drain(sub, 2)
+    pub.close()
+    with pytest.raises(PublicationEnded) as ei:
+        deadline = time.monotonic() + 10
+        while time.monotonic() < deadline:
+            sub.poll(timeout=0.2)
+    sub.close()
+    wm = ei.value.watermark
+    assert wm == 2
+    # restart: same name, head continues where the old publisher stopped
+    pub2 = publish("t.heal", schema=blocks[0].schema, directory=d,
+                   start_epoch=wm)
+    sub2 = subscribe("t.heal", directory=d, transport="shm", watermark=wm)
+    try:
+        pub2.append(blocks[2])
+        pub2.append(blocks[3])
+        got += _drain(sub2, 2)
+        assert [e.epoch for e in got] == [1, 2, 3, 4]
+        assert all(e.kind == "delta" for e in got)
+        for e, b in zip(got, blocks):
+            assert_blocks_equal(e.block, b)
+        assert pub2.stats.snapshot_fallbacks == 0
+    finally:
+        sub2.close()
+        pub2.close()
