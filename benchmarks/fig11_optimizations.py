@@ -391,6 +391,150 @@ def _broker_probe(n_rows: int) -> dict:
             "peak_fds": peak[0]}
 
 
+def _serve_failover_broker(port: int, journal: str, recover: bool) -> None:
+    """Spawn-child body for the failover rung: a served broker that
+    journals to disk and lives until SIGKILLed."""
+    from repro.core.broker import PipeBroker
+
+    b = PipeBroker(serve=True, host="127.0.0.1", port=port, hub=False,
+                   journal_path=journal, max_rings=16, lease_ttl=10.0,
+                   sweep_every=1.0, admit_timeout=120.0)
+    b.start(recover=recover)
+    while True:
+        time.sleep(3600.0)
+
+
+def _failover_probe(n_rows: int) -> dict:
+    """Broker failover rung: the same 200-plan stress as the broker
+    rung, but through a SERVED broker (its own OS process, journal on
+    disk) that is SIGKILLed mid-run and restarted from the journal —
+    measured against the identical stress left uninterrupted.  The
+    figure is the interrupted wall clock; the gate is the ratio: one
+    kill+recover may cost at most 1.5x the uninterrupted run, i.e. the
+    client ladder (bounded retry -> degraded rendezvous -> re-attach)
+    must keep the fleet draining while the control plane is down."""
+    import multiprocessing
+    import os
+    import shutil
+    import signal
+    import tempfile
+
+    from repro.core.broker import BrokerClient
+    from repro.core.plan import plan
+
+    mp = multiprocessing.get_context("spawn")
+    rows = 32
+    n_plans = 200
+    # connect_timeout bounds how long an attempt wedged at rendezvous
+    # (its exporter died with the broker) can hold the retry hostage —
+    # the knob IS part of the recovery story, so the rung pins it tight
+    cfg = PipeConfig(mode="arrowcol", block_rows=32, transport="shm",
+                     shm_capacity=1 << 16, connect_timeout=1.0)
+
+    def wait_port(port: int, timeout: float = 15.0) -> None:
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            try:
+                socket.create_connection(("127.0.0.1", port),
+                                         timeout=1.0).close()
+                return
+            except OSError:
+                time.sleep(0.05)
+        raise TimeoutError(f"broker child never listened on {port}")
+
+    dead = [0.0]  # measured broker-down window of the killed run
+
+    def run(kill: bool) -> float:
+        fresh()
+        s = socket.socket()
+        s.bind(("127.0.0.1", 0))
+        port = s.getsockname()[1]
+        s.close()
+        tmp = tempfile.mkdtemp(prefix="pipegen-failover-")
+        journal = os.path.join(tmp, "broker.journal")
+        child = mp.Process(target=_serve_failover_broker,
+                           args=(port, journal, False), daemon=True)
+        child.start()
+        wait_port(port)
+        client = BrokerClient("127.0.0.1", port, admit_timeout=120.0)
+        client.directory.probe_every = 0.2
+        client.install()
+        child2 = None
+        src = make_engine("colstore")
+        dst = make_engine("colstore")
+        for i in range(n_plans):
+            src.put_block(f"t{i}", make_paper_block(rows, seed=i))
+        errors: list = []
+
+        def one(i: int) -> None:
+            try:
+                res = (plan(negotiate=False)
+                       .move(src, f"t{i}", dst, f"d{i}", config=cfg,
+                             dataset=f"fo{i}", timeout=10)
+                       .options(retries=3, backoff=0.1)
+                       .compile()
+                       .execute())
+                assert res.ok, res.errors
+            except Exception as e:  # noqa: BLE001 - aggregated below
+                errors.append((i, repr(e)))
+
+        threads = [threading.Thread(target=one, args=(i,), daemon=True)
+                   for i in range(n_plans)]
+        try:
+            t0 = time.perf_counter()
+            for th in threads:
+                th.start()
+            if kill:
+                time.sleep(0.4)  # grants out, queue deep, plans live
+                t_kill = time.perf_counter()
+                os.kill(child.pid, signal.SIGKILL)
+                child.join(10.0)
+                time.sleep(0.3)
+                child2 = mp.Process(target=_serve_failover_broker,
+                                    args=(port, journal, True), daemon=True)
+                child2.start()
+                wait_port(port)
+                dead[0] = time.perf_counter() - t_kill
+            for th in threads:
+                th.join(timeout=180)
+            wall = time.perf_counter() - t0
+            assert not errors, errors[:5]
+            assert all(len(dst.get_block(f"d{i}")) == rows
+                       for i in range(n_plans))
+        finally:
+            client.stop()
+            for p in (child, child2):
+                if p is not None and p.is_alive():
+                    p.terminate()
+                    p.join(5.0)
+            shutil.rmtree(tmp, ignore_errors=True)
+            fresh()
+        return wall
+
+    # one untimed pass so adapter codegen and spawn machinery are paid
+    # before either leg — otherwise the first-run tax dwarfs the outage.
+    # Interleaved best-of-2 pairs, like the other contended rungs: a
+    # 200-thread stress swings hard on small CI boxes.  The injected
+    # outage (kill -> new incarnation listening) is a test parameter,
+    # not recovery overhead, so the gate is on the wall clock BEYOND
+    # the dead window vs the clean run.
+    run(kill=False)
+    base, excess, hit, outage = float("inf"), float("inf"), 0.0, 0.0
+    for _ in range(2):
+        base = min(base, run(kill=False))
+        h = run(kill=True)
+        if h - dead[0] < excess:
+            excess, hit, outage = h - dead[0], h, dead[0]
+    ratio = max(excess, 0.0) / base
+    emit("fig11.broker_failover", hit,
+         f"n={n_plans} plans, uninterrupted={base:.3f}s, "
+         f"outage={outage:.3f}s, "
+         f"recover_ratio_excl_outage={ratio:.2f}x (gate <=1.5x)")
+    assert ratio <= 1.5, f"broker failover cost {ratio:.2f}x > 1.5x gate"
+    return {"broker_failover": hit, "broker_failover_base": base,
+            "outage": outage, "ratio": ratio}
+
+
 def _incremental_probe(n_rows: int) -> dict:
     """Continuous pipes: N epochs of small deltas (5% of the relation
     each) delivered through ONE long-lived subscription vs re-exporting
@@ -553,6 +697,9 @@ def main(n_rows: int = DEFAULT_ROWS, transports=None, streams_sweep=None) -> dic
     # broker stress: 200 concurrent plans through one resident broker
     # vs the per-transfer-directory sequential baseline
     out["broker"] = _broker_probe(n_rows)
+    # broker failover: the same stress through a served broker with a
+    # mid-run SIGKILL + journal recovery, gated at <=1.5x uninterrupted
+    out["failover"] = _failover_probe(n_rows)
     # continuous pipes: one subscription moving 20 small deltas vs 20
     # full re-exports of the growing relation
     out["incremental"] = _incremental_probe(n_rows)

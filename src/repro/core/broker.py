@@ -44,19 +44,22 @@ from __future__ import annotations
 import heapq
 import itertools
 import os
-import selectors
 import threading
 import time
+import selectors
 from contextlib import contextmanager
-from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from dataclasses import asdict, dataclass
+from typing import Any, Dict, List, Optional, Tuple
 
-from .directory import DirectoryServer, WorkerDirectory, set_directory
+from .directory import (DirectoryClient, DirectoryServer, WorkerDirectory,
+                        get_directory, set_directory)
+from . import journal as journal_mod
 from . import shm_ring
 from . import telemetry
 from .iobuf import default_pool
 
-__all__ = ["PipeBroker", "DoorbellHub", "TenantQuota", "BrokerBusy",
+__all__ = ["PipeBroker", "BrokerClient", "DoorbellHub", "TenantQuota",
+           "BrokerBusy", "Admission", "NullAdmission", "RemoteAdmission",
            "QOS_CLASSES", "get_broker", "set_broker", "process_fd_count"]
 
 #: admission classes, in scheduling priority order: a queued ``latency``
@@ -227,9 +230,10 @@ class TenantQuota:
 
 class _Ticket:
     __slots__ = ("prio", "seq", "tenant", "qos", "rings", "segments",
-                 "nbytes")
+                 "nbytes", "epoch", "rid", "holder", "deadline", "state")
 
-    def __init__(self, prio, seq, tenant, qos, rings, segments, nbytes):
+    def __init__(self, prio, seq, tenant, qos, rings, segments, nbytes,
+                 epoch=0, holder=0, deadline=0.0):
         self.prio = prio
         self.seq = seq
         self.tenant = tenant
@@ -237,6 +241,11 @@ class _Ticket:
         self.rings = rings
         self.segments = segments
         self.nbytes = nbytes
+        self.epoch = epoch          # broker incarnation that minted it
+        self.rid = f"{epoch}.{seq}"  # journal/RPC ticket id
+        self.holder = holder        # remote holder pid (reaper sweep)
+        self.deadline = deadline    # remote reservation expiry
+        self.state = "queued"       # remote: queued | granted | expired
 
     def __lt__(self, other):  # heap order: class priority, then FIFO
         return (self.prio, self.seq) < (other.prio, other.seq)
@@ -244,19 +253,80 @@ class _Ticket:
 
 class Admission:
     """A granted admission ticket; a context manager whose exit releases
-    the resources back to the broker."""
+    the resources back to the broker.
+
+    Release is **idempotent and thread-safe**: the flag flips under a
+    lock, so a double ``__exit__`` (or an explicit release racing the
+    context exit from another thread) can never credit the budget back
+    twice — the check-then-act race the naive boolean had."""
+
+    degraded = False
 
     def __init__(self, broker: "PipeBroker", ticket: _Ticket):
         self._broker = broker
         self._ticket = ticket
+        self._lock = threading.Lock()
         self._released = False
 
     def release(self) -> None:
-        if not self._released:
+        with self._lock:
+            if self._released:
+                return
             self._released = True
-            self._broker._release(self._ticket)
+        self._broker._release(self._ticket)
 
     def __enter__(self) -> "Admission":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+
+class NullAdmission:
+    """The no-op ticket handed out while the control plane is
+    unreachable (degraded mode): admission is suspended rather than
+    wedging the plans the degraded ladder exists to keep draining."""
+
+    degraded = True
+    ticket = None
+
+    def release(self) -> None:
+        pass
+
+    def __enter__(self) -> "NullAdmission":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        pass
+
+
+class RemoteAdmission:
+    """An admission granted by an out-of-process broker over RPC.
+
+    Same idempotence contract as :class:`Admission`, enforced twice: the
+    client-side flag stops double RPCs, and the broker drops the ticket
+    id on first release — a replayed or stale-epoch release is rejected
+    there, never double-credited."""
+
+    degraded = False
+
+    def __init__(self, client: DirectoryClient, ticket: str):
+        self._client = client
+        self.ticket = ticket
+        self._lock = threading.Lock()
+        self._released = False
+
+    def release(self) -> None:
+        with self._lock:
+            if self._released:
+                return
+            self._released = True
+        try:
+            self._client._rpc({"op": "release", "ticket": self.ticket})
+        except (OSError, ValueError):
+            pass  # broker gone: its recovery expires the grant
+
+    def __enter__(self) -> "RemoteAdmission":
         return self
 
     def __exit__(self, *exc) -> None:
@@ -290,8 +360,12 @@ class PipeBroker:
                  qos_concurrency: Optional[Dict[str, Optional[int]]] = None,
                  admit_timeout: float = 30.0,
                  pool_park_max: Optional[int] = 16,
-                 hub: bool = True):
+                 hub: bool = True,
+                 journal_path: Optional[str] = None,
+                 journal_fsync_batch: int = 8,
+                 checkpoint_bytes: int = 1 << 20):
         self.directory = WorkerDirectory(lease_ttl=lease_ttl)
+        self._hub_enabled = hub
         self.hub: Optional[DoorbellHub] = DoorbellHub() if hub else None
         self.server: Optional[DirectoryServer] = None
         self._serve = serve
@@ -326,6 +400,16 @@ class PipeBroker:
         self._grants_by: Dict[str, int] = {}     # "tenant/qos" -> grants
         self._rejects_by: Dict[str, int] = {}    # "tenant/qos" -> rejects
         self._grant_wait = telemetry.histogram("broker.grant_wait_s")
+        # crash tolerance: fencing epoch + durable journal
+        self.epoch = 0                  # bumped at every start (incarnation)
+        self.journal_path = journal_path
+        self.journal_fsync_batch = journal_fsync_batch
+        self.checkpoint_bytes = checkpoint_bytes
+        self.journal: Optional[journal_mod.Journal] = None
+        self.recovered: Dict[str, int] = {}
+        self.stale_releases = 0         # zombie tickets rejected, not credited
+        self.expired_tickets = 0        # grants expired at recovery/restart
+        self._remote: Dict[str, _Ticket] = {}  # rid -> remote reservation
         # lifecycle
         self._stop = threading.Event()
         self._reaper: Optional[threading.Thread] = None
@@ -334,19 +418,70 @@ class PipeBroker:
         self._started = False
 
     # -- lifecycle -------------------------------------------------------------
-    def start(self) -> "PipeBroker":
+    def start(self, recover: Optional[object] = None) -> "PipeBroker":
+        """Start (or restart) the broker as a **new incarnation**: the
+        fencing epoch is bumped, stamped into the directory, and carried
+        by every grant and registration from here on.
+
+        ``recover`` replays a journal first — ``True`` uses this
+        broker's ``journal_path``, a string names another file (the
+        crashed incarnation's).  Replay rebuilds leases (re-pinned with
+        fresh TTLs), re-publishes names at their committed heads, and
+        **expires** admission grants that were outstanding at the crash:
+        their budgets are not carried over, and their eventual releases
+        are rejected as stale-epoch rather than double-credited."""
         if self._started:
             return self
+        state: Optional[Dict[str, Any]] = None
+        if recover:
+            path = self.journal_path if recover is True else str(recover)
+            if not path:
+                raise ValueError("start(recover=...) needs a journal path "
+                                 "(set journal_path= or pass one)")
+            records, truncated = journal_mod.replay(path)
+            state = _fold_records(records)
+            if truncated:
+                telemetry.counter("broker.journal_truncated").inc()
+        self._stop = threading.Event()  # a restart needs a fresh latch
         self._started = True
+        self.directory.resume()  # undo a previous stop()'s interrupt
+        # admission state never survives an incarnation boundary: grants
+        # of the old epoch are expired, their releases fenced off
+        with self._cv:
+            leftover = len(self._remote)
+            self._remote.clear()
+            self._waiting.clear()
+            self._use = [0, 0, 0]
+            self._use_by_tenant.clear()
+            self._use_by_qos = {q: 0 for q in QOS_CLASSES}
+        self.epoch = max(self.epoch, state["epoch"] if state else 0) + 1
+        self.directory.epoch = self.epoch
+        if state is not None:
+            self._apply_recovered(state)
+            leftover += len(state.get("tickets") or {})
+        if leftover:
+            self.expired_tickets += leftover
+            telemetry.counter("broker.tickets_expired").inc(leftover)
+        if self._hub_enabled and (self.hub is None
+                                  or self.hub._stop.is_set()):
+            self.hub = DoorbellHub()  # hubs are one-shot: rebuild on restart
         if self.hub is not None:
             self.hub.start()
+        if self.journal_path:
+            self.journal = journal_mod.Journal(
+                self.journal_path, fsync_batch=self.journal_fsync_batch,
+                checkpoint_bytes=self.checkpoint_bytes)
+            self._checkpoint_now()  # compact: this incarnation's baseline
+            self.directory.observer = self._journal_event
         if self._serve:
             self.server = DirectoryServer(
                 self._host, self._port, handlers=self._handlers,
                 directory=self.directory)
             self.server.stats_provider = self.stats  # "stats" RPC / pipetop
+            self.server.admission_provider = self._admission_rpc
             self.server.start()
             self.host, self.port = self.server.host, self.server.port
+            self._port = self.port  # restarts rebind the same port
         self._reaper = threading.Thread(target=self._reap, daemon=True,
                                         name="pipegen-broker-reaper")
         self._reaper.start()
@@ -358,12 +493,28 @@ class PipeBroker:
                 self.directory.sweep(orphan_min_age_s=self.orphan_min_age_s)
             except Exception:  # pragma: no cover - sweeping must never die
                 pass
+            try:
+                self._sweep_remote()
+            except Exception:  # pragma: no cover
+                pass
+            j = self.journal
+            if j is not None and j.size > self.checkpoint_bytes:
+                try:
+                    self._checkpoint_now()
+                except Exception:  # pragma: no cover - disk full etc.
+                    pass
 
     def install(self) -> "PipeBroker":
         """Become the process-global control plane: rendezvous go through
         this broker's directory, doorbell waits through its hub, plan
         units through its admission gate, and the warm pools get the
         broker's (deeper) budget."""
+        prev = get_broker()
+        if prev is not None and prev is not self:
+            # a stale broker may still be registered process-globally (a
+            # crashed scope, a leaked fixture): displace it so its
+            # eventual stop() cannot clobber OUR globals back off
+            prev._installed = False
         self.start()
         self._installed = True
         set_directory(self.directory)
@@ -382,7 +533,8 @@ class PipeBroker:
                 set_broker(None)
             if shm_ring.get_doorbell_hub() is self.hub:
                 shm_ring.set_doorbell_hub(None)
-            if self._prev_pool_max is not None:
+            if (self._prev_pool_max is not None
+                    and shm_ring.set_pool_limits() == self.pool_park_max):
                 shm_ring.set_pool_limits(self._prev_pool_max)
         self._stop.set()
         self.directory.interrupt()
@@ -390,12 +542,22 @@ class PipeBroker:
             self._cv.notify_all()  # queued admissions fail fast
         if self.server is not None:
             self.server.stop()
+            self.server = None
         if self._reaper is not None and self._reaper.ident is not None:
             self._reaper.join(timeout=5.0)
+        self._reaper = None
+        if self.journal is not None:
+            self.directory.observer = None
+            try:
+                self.journal.close()
+            except OSError:  # pragma: no cover
+                pass
+            self.journal = None
         if drain_pools:
             shm_ring.drain_pools()
         if self.hub is not None:
             self.hub.stop()
+        self._started = False  # stop() -> start() restarts as a new epoch
 
     def __enter__(self) -> "PipeBroker":
         return self.start()
@@ -470,7 +632,7 @@ class PipeBroker:
         t = _Ticket(QOS_CLASSES.index(qos), next(self._seq), tenant, qos,
                     max(0, int(rings)),
                     max(0, int(rings if segments is None else segments)),
-                    max(0, int(nbytes)))
+                    max(0, int(nbytes)), epoch=self.epoch)
         timeout = self.admit_timeout if timeout is None else timeout
         t_enter = time.monotonic()
         with self._cv:
@@ -510,17 +672,12 @@ class PipeBroker:
                 heapq.heapify(self._waiting)
                 telemetry.gauge("broker.queue_depth").set(
                     len(self._waiting))
-            self._use[0] += t.rings
-            self._use[1] += t.segments
-            self._use[2] += t.nbytes
-            by = self._tenant_use(t.tenant)
-            by[0] += t.rings
-            by[1] += t.segments
-            by[2] += t.nbytes
-            self._use_by_qos[t.qos] += 1
-            self.admitted += 1
-            self._count_by(self._grants_by, tenant, qos)
-            self._cv.notify_all()  # another small ticket may also fit
+            self._grant_locked(t)
+            t.state = "granted"
+            pumped = self._pump_locked()
+        self._journal_grant(t)
+        for r in pumped:
+            self._journal_grant(r)
         self._grant_wait.observe(time.monotonic() - t_enter)
         telemetry.counter("broker.grants", tenant=tenant, qos=qos).inc()
         return Admission(self, t)
@@ -530,7 +687,67 @@ class PipeBroker:
         key = f"{tenant}/{qos}"
         table[key] = table.get(key, 0) + 1
 
+    def _grant_locked(self, t: _Ticket) -> None:
+        self._use[0] += t.rings
+        self._use[1] += t.segments
+        self._use[2] += t.nbytes
+        by = self._tenant_use(t.tenant)
+        by[0] += t.rings
+        by[1] += t.segments
+        by[2] += t.nbytes
+        self._use_by_qos[t.qos] += 1
+        self.admitted += 1
+        self._count_by(self._grants_by, t.tenant, t.qos)
+
+    def _pump_locked(self) -> List[_Ticket]:
+        """Grant every *remote* reservation that reaches head
+        eligibility, expire overdue ones, and wake local waiters.
+        Called (with the cv held) wherever capacity or the queue
+        changes; returns the newly granted remote tickets so callers
+        can journal them outside the lock."""
+        now = time.monotonic()
+        overdue = [t for t in self._waiting
+                   if t.holder and t.state == "queued"
+                   and t.deadline and now > t.deadline]
+        for t in overdue:
+            self._waiting.remove(t)
+            t.state = "expired"
+            self.rejected += 1
+            self._count_by(self._rejects_by, t.tenant, t.qos)
+            telemetry.counter("broker.rejects",
+                              tenant=t.tenant, qos=t.qos).inc()
+        if overdue:
+            heapq.heapify(self._waiting)
+        granted: List[_Ticket] = []
+        progress = True
+        while progress:
+            progress = False
+            for other in sorted(self._waiting):
+                if not self._fits_locked(other):
+                    continue
+                # `other` is the head-eligible waiter.  Remote: grant it
+                # here (nobody else will).  Local: its own thread grants
+                # on wakeup — stop pumping past it, it has priority.
+                if other.holder and other.state == "queued":
+                    self._waiting.remove(other)
+                    heapq.heapify(self._waiting)
+                    self._grant_locked(other)
+                    other.state = "granted"
+                    granted.append(other)
+                    progress = True
+                break
+        self._cv.notify_all()
+        telemetry.gauge("broker.queue_depth").set(len(self._waiting))
+        return granted
+
     def _release(self, t: _Ticket) -> None:
+        if t.epoch and t.epoch != self.epoch:
+            # a zombie: granted by a dead incarnation.  Its budget was
+            # never carried across recovery — crediting it back now
+            # would let one crash double-spend rings forever.
+            self.stale_releases += 1
+            telemetry.counter("broker.rejects", reason="stale_epoch").inc()
+            return
         with self._cv:
             self._use[0] -= t.rings
             self._use[1] -= t.segments
@@ -540,7 +757,212 @@ class PipeBroker:
             by[1] -= t.segments
             by[2] -= t.nbytes
             self._use_by_qos[t.qos] -= 1
+            pumped = self._pump_locked()
+        self._journal_event("release", {"ticket": t.rid})
+        for r in pumped:
+            self._journal_grant(r)
+
+    # -- remote admission (served over the directory's RPC socket) --------------
+    def _admission_rpc(self, req: Dict[str, Any]) -> Dict[str, Any]:
+        """The admit/admit_poll/release provider behind the
+        DirectoryServer.  Non-blocking by design: a queued admission is
+        held as a *reservation* in the same priority heap as local
+        waiters and granted by :meth:`_pump_locked`; the client polls.
+        Parking RPC handler threads here instead would deadlock the
+        bounded pool under a plan burst (queued admits starving the
+        query ops whose completion would release the rings)."""
+        op = req.get("op")
+        if op == "release":
+            rid = str(req.get("ticket") or "")
+            with self._cv:
+                t = self._remote.pop(rid, None)
+                if t is not None and t.state == "queued":
+                    # abandoned before grant: just unqueue it
+                    if t in self._waiting:
+                        self._waiting.remove(t)
+                        heapq.heapify(self._waiting)
+                    t = None
+            if t is None:
+                ep = rid.split(".", 1)[0]
+                if ep and ep != str(self.epoch):
+                    # a final verdict about the TICKET, not the caller's
+                    # epoch pin — "stale_ticket", not "stale_epoch", so
+                    # the client does not adopt-and-replay a release
+                    # that can never be credited
+                    self.stale_releases += 1
+                    telemetry.counter("broker.rejects",
+                                      reason="stale_epoch").inc()
+                    return {"ok": True, "stale_ticket": True,
+                            "bepoch": self.epoch,
+                            "error": f"ticket {rid} was granted by a dead "
+                                     f"broker incarnation"}
+                return {"ok": True, "unknown": True}
+            self._release(t)
+            return {"ok": True}
+        if op == "admit":
+            qos = req.get("qos", "bulk")
+            if qos not in QOS_CLASSES:
+                return {"ok": False, "busy": True,
+                        "error": f"unknown QoS class {qos!r}"}
+            tenant = str(req.get("tenant", "default"))
+            rings = max(0, int(req.get("rings", 1)))
+            segments = req.get("segments")
+            timeout = req.get("timeout")
+            timeout = self.admit_timeout if timeout is None else float(timeout)
+            t = _Ticket(QOS_CLASSES.index(qos), next(self._seq), tenant, qos,
+                        rings,
+                        max(0, int(rings if segments is None else segments)),
+                        max(0, int(req.get("nbytes", 0))),
+                        epoch=self.epoch,
+                        holder=int(req.get("holder") or 0) or -1,
+                        deadline=time.monotonic() + timeout)
+            with self._cv:
+                if self._stop.is_set():
+                    return {"ok": False, "busy": True,
+                            "error": "broker is shutting down"}
+                if not self._can_ever_fit(t):
+                    self.rejected += 1
+                    self._count_by(self._rejects_by, tenant, qos)
+                    telemetry.counter("broker.rejects",
+                                      tenant=tenant, qos=qos).inc()
+                    return {"ok": False, "busy": True,
+                            "error": f"admission for tenant={tenant!r} "
+                                     f"qos={qos!r} exceeds its quota "
+                                     f"outright"}
+                heapq.heappush(self._waiting, t)
+                self._remote[t.rid] = t
+                pumped = self._pump_locked()
+                queued = t.state == "queued"
+                if queued:
+                    self.queued += 1
+            for r in pumped:
+                self._journal_grant(r)
+            if not queued:
+                telemetry.counter("broker.grants",
+                                  tenant=tenant, qos=qos).inc()
+            return {"ok": True, "granted": not queued, "ticket": t.rid}
+        if op == "admit_poll":
+            rid = str(req.get("ticket") or "")
+            with self._cv:
+                t = self._remote.get(rid)
+                if t is None:
+                    ep = rid.split(".", 1)[0]
+                    stale = bool(ep and ep != str(self.epoch))
+                    return {"ok": False, "gone": True, "stale_ticket": stale,
+                            "bepoch": self.epoch,
+                            "error": f"no reservation {rid!r} (broker "
+                                     f"restarted or it expired)"}
+                pumped = self._pump_locked()
+                state = t.state
+                if state == "expired":
+                    self._remote.pop(rid, None)
+            for r in pumped:
+                self._journal_grant(r)
+            if state == "expired":
+                return {"ok": False, "busy": True,
+                        "error": "admission queued past its timeout "
+                                 "(over quota)"}
+            if state == "granted":
+                telemetry.counter("broker.grants",
+                                  tenant=t.tenant, qos=t.qos).inc()
+                return {"ok": True, "granted": True, "ticket": rid}
+            return {"ok": True, "granted": False, "ticket": rid}
+        return {"ok": False, "error": f"bad admission op {op!r}"}
+
+    def _sweep_remote(self) -> None:
+        """Reaper duty: a remote holder that died without releasing must
+        not pin budget forever — release its grants, drop its queue."""
+        dead: List[_Ticket] = []
+        with self._cv:
+            for rid, t in list(self._remote.items()):
+                if t.holder and t.holder > 0 \
+                        and not shm_ring._pid_alive(t.holder):
+                    self._remote.pop(rid, None)
+                    if t.state == "queued" and t in self._waiting:
+                        self._waiting.remove(t)
+                        heapq.heapify(self._waiting)
+                    elif t.state == "granted":
+                        dead.append(t)
+        for t in dead:
+            telemetry.counter("broker.tickets_reaped").inc()
+            self._release(t)
+
+    # -- durable journal --------------------------------------------------------
+    def _journal_event(self, kind: str, doc: Dict[str, Any]) -> None:
+        """The directory's observer hook + the broker's own append path.
+        Best-effort: a full disk must degrade durability, not wedge the
+        RPC that triggered the append."""
+        j = self.journal
+        if j is not None:
+            try:
+                j.append(kind, doc)
+            except OSError:  # pragma: no cover - disk trouble
+                pass
+
+    def _journal_grant(self, t: _Ticket) -> None:
+        self._journal_event("admit", {
+            "ticket": t.rid, "tenant": t.tenant, "qos": t.qos,
+            "rings": t.rings, "segments": t.segments, "nbytes": t.nbytes,
+            "holder": t.holder})
+
+    def _config_doc(self) -> Dict[str, Any]:
+        return {
+            "max_rings": self.max_rings,
+            "max_segments": self.max_segments,
+            "max_bytes": self.max_bytes,
+            "admit_timeout": self.admit_timeout,
+            "default_quota": asdict(self.default_quota),
+            "tenants": {k: asdict(v) for k, v in self.tenants.items()},
+            "qos_concurrency": dict(self.qos_concurrency),
+        }
+
+    def set_quota(self, tenant: str, quota: TenantQuota) -> None:
+        """Install/replace a tenant's quota at runtime (journaled, so a
+        recovered broker enforces the same budgets)."""
+        with self._cv:
+            self.tenants[tenant] = quota
             self._cv.notify_all()
+        self._journal_event("quota", {"tenant": tenant, **asdict(quota)})
+
+    def _checkpoint_now(self) -> None:
+        """Fold live state into one checkpoint record and truncate the
+        journal to it (atomic rewrite) — replay cost stays proportional
+        to live state, not to lease-heartbeat history."""
+        with self._cv:
+            tickets = {rid: {"ticket": rid, "tenant": t.tenant,
+                             "qos": t.qos, "rings": t.rings,
+                             "segments": t.segments, "nbytes": t.nbytes,
+                             "holder": t.holder}
+                       for rid, t in self._remote.items()
+                       if t.state == "granted"}
+        state = {"epoch": self.epoch,
+                 "config": self._config_doc(),
+                 "tickets": tickets,
+                 **self.directory.export_state()}
+        self.journal.checkpoint([("checkpoint", {"state": state})])
+
+    def _apply_recovered(self, state: Dict[str, Any]) -> None:
+        cfg = state.get("config") or None
+        if cfg:
+            self.max_rings = cfg.get("max_rings", self.max_rings)
+            self.max_segments = cfg.get("max_segments", self.max_segments)
+            self.max_bytes = cfg.get("max_bytes", self.max_bytes)
+            self.admit_timeout = cfg.get("admit_timeout", self.admit_timeout)
+            if cfg.get("default_quota") is not None:
+                self.default_quota = TenantQuota(**cfg["default_quota"])
+            self.tenants = {k: TenantQuota(**v)
+                            for k, v in (cfg.get("tenants") or {}).items()}
+            qc = cfg.get("qos_concurrency")
+            if qc is not None:
+                self.qos_concurrency = {k: v for k, v in qc.items()
+                                        if k in QOS_CLASSES}
+        self.directory.restore_state(state)
+        self.recovered = {
+            "entries": len(state.get("entries") or ()),
+            "popped": len(state.get("popped") or ()),
+            "names": len(state.get("names") or {}),
+            "expired_tickets": len(state.get("tickets") or {}),
+        }
 
     # -- observability ----------------------------------------------------------
     def stats(self) -> Dict[str, object]:
@@ -556,8 +978,16 @@ class PipeBroker:
             by_tenant = {k: list(v) for k, v in self._use_by_tenant.items()}
             grants_by = dict(self._grants_by)
             rejects_by = dict(self._rejects_by)
+            remote = len(self._remote)
         gw = self._grant_wait
         out: Dict[str, object] = {
+            "epoch": self.epoch,
+            "stale_releases": self.stale_releases,
+            "expired_tickets": self.expired_tickets,
+            "remote_tickets": remote,
+            "recovered": dict(self.recovered),
+            "journal": (self.journal.info()
+                        if self.journal is not None else None),
             "admitted": self.admitted,
             "queued": self.queued,
             "rejected": self.rejected,
@@ -596,18 +1026,181 @@ class PipeBroker:
         return out
 
 
+def _fold_records(records: List[Tuple[str, Dict[str, Any]]]
+                  ) -> Dict[str, Any]:
+    """Fold a replayed journal into the recoverable broker state: the
+    last checkpoint (if any) plus every delta after it.  Pops net out
+    registrations; released tickets net out grants; renews carry no
+    fold-time information (recovery re-stamps every lease fresh)."""
+    state: Dict[str, Any] = {"epoch": 0, "config": None, "entries": [],
+                             "popped": [], "names": {}, "tickets": {}}
+    for kind, doc in records:
+        if kind == "checkpoint":
+            st = doc.get("state") or {}
+            state = {"epoch": int(st.get("epoch") or 0),
+                     "config": st.get("config"),
+                     "entries": list(st.get("entries") or ()),
+                     "popped": list(st.get("popped") or ()),
+                     "names": dict(st.get("names") or {}),
+                     "tickets": dict(st.get("tickets") or {})}
+        elif kind == "incarnation":
+            state["epoch"] = max(state["epoch"], int(doc.get("epoch") or 0))
+            if doc.get("config"):
+                state["config"] = doc["config"]
+        elif kind == "register":
+            state["entries"].append(doc)
+        elif kind == "pop":
+            for i, rec in enumerate(state["entries"]):
+                if (rec.get("dataset") == doc.get("dataset")
+                        and rec.get("query_id") == doc.get("query_id")
+                        and rec.get("ep") == doc.get("ep")):
+                    state["popped"].append(state["entries"].pop(i))
+                    break
+        elif kind == "renew":
+            pass  # leases are re-stamped wholesale at recovery
+        elif kind == "publish_name":
+            state["names"][doc["name"]] = {"doc": doc.get("doc") or {},
+                                           "pid": doc.get("pid", 0)}
+        elif kind == "unpublish_name":
+            state["names"].pop(doc.get("name"), None)
+        elif kind == "quota":
+            cfg = state.setdefault("config", None) or {}
+            tenants = cfg.setdefault("tenants", {})
+            tenants[doc["tenant"]] = {k: doc.get(k) for k in
+                                      ("max_rings", "max_segments",
+                                       "max_bytes")}
+            state["config"] = cfg
+        elif kind == "admit":
+            state["tickets"][doc["ticket"]] = doc
+        elif kind == "release":
+            state["tickets"].pop(doc.get("ticket"), None)
+    return state
+
+
+# -- out-of-process broker handle ----------------------------------------------------
+
+
+class BrokerClient:
+    """Executor-facing handle to a :class:`PipeBroker` served in another
+    process: rendezvous rides a degraded-capable
+    :class:`~repro.core.directory.DirectoryClient`, admission rides the
+    broker's reservation RPC (admit → poll → release), and
+    :meth:`install` makes this the process-global control plane exactly
+    like an in-process broker would.
+
+    Failure ladder (see ``DirectoryClient``): while the broker is
+    unreachable, :meth:`admit` returns :class:`NullAdmission` (a no-op
+    under the ``broker.degraded`` gauge) and rendezvous falls back to a
+    process-local directory; when the broker returns — same or new
+    incarnation — the client re-attaches and new work flows through it
+    again."""
+
+    def __init__(self, host: str, port: int, degraded_ok: bool = True,
+                 admit_timeout: float = 30.0, poll_interval: float = 0.05):
+        self.directory = DirectoryClient(host, port, degraded_ok=degraded_ok)
+        self.admit_timeout = admit_timeout
+        self.poll_interval = poll_interval
+        self._prev_dir = None
+        self._installed = False
+
+    @property
+    def epoch(self) -> int:
+        return self.directory.epoch
+
+    @property
+    def degraded(self) -> bool:
+        return self.directory.degraded
+
+    def admit(self, tenant: str = "default", qos: str = "bulk",
+              rings: int = 1, segments: Optional[int] = None,
+              nbytes: int = 0, timeout: Optional[float] = None):
+        """Same contract as :meth:`PipeBroker.admit`, minus the parked
+        thread: a queued admission is a broker-side reservation this
+        client polls (bounded backoff), so 200 queued plans cost the
+        broker zero handler threads."""
+        timeout = self.admit_timeout if timeout is None else timeout
+        deadline = time.monotonic() + (timeout if timeout else 30.0)
+        req = {"op": "admit", "tenant": tenant, "qos": qos,
+               "rings": int(rings),
+               "segments": int(rings if segments is None else segments),
+               "nbytes": int(nbytes), "timeout": timeout,
+               "holder": os.getpid()}
+        resp = self.directory._rpc(req)
+        pause = self.poll_interval
+        while True:
+            if resp.get("degraded"):
+                telemetry.counter("broker.admit_degraded").inc()
+                return NullAdmission()
+            if resp.get("busy"):
+                raise BrokerBusy(resp.get("error", "admission refused"))
+            if resp.get("granted"):
+                return RemoteAdmission(self.directory, str(resp["ticket"]))
+            if resp.get("gone") or not resp.get("ok"):
+                # the broker restarted under our queued reservation: it
+                # died with the old incarnation — re-submit to the new one
+                if time.monotonic() >= deadline:
+                    raise BrokerBusy(resp.get(
+                        "error", "admission lost to a broker restart and "
+                                 "the re-queue timed out"))
+                resp = self.directory._rpc(req)
+                continue
+            if time.monotonic() >= deadline + 5.0:
+                # backstop: the broker expires reservations itself, but a
+                # wedged one must not spin this loop forever
+                raise BrokerBusy(f"admission for tenant={tenant!r} "
+                                 f"qos={qos!r} queued past {timeout}s")
+            time.sleep(pause)
+            pause = min(pause * 2.0, 0.25)
+            resp = self.directory._rpc({"op": "admit_poll",
+                                        "ticket": resp.get("ticket")})
+
+    def stats(self) -> Dict[str, Any]:
+        return self.directory.stats()
+
+    def install(self) -> "BrokerClient":
+        prev = get_broker()
+        if prev is not None and prev is not self \
+                and isinstance(prev, PipeBroker):
+            prev._installed = False  # displace a stale in-process broker
+        self._prev_dir = get_directory()
+        set_directory(self.directory)
+        set_broker(self)
+        self._installed = True
+        return self
+
+    def stop(self) -> None:
+        """Uninstall (the broker itself lives in another process)."""
+        if not self._installed:
+            return
+        self._installed = False
+        if get_broker() is self:
+            set_broker(None)
+        if self._prev_dir is not None \
+                and get_directory() is self.directory:
+            set_directory(self._prev_dir)
+
+    close = stop
+
+    def __enter__(self) -> "BrokerClient":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+
 # -- process-global broker ----------------------------------------------------------
 
-_GLOBAL: Optional[PipeBroker] = None
+_GLOBAL: Optional[Any] = None  # PipeBroker or BrokerClient
 
 
-def get_broker() -> Optional[PipeBroker]:
-    """The installed process-global broker, if any (the plan executor's
-    admission + rendezvous hook)."""
+def get_broker() -> Optional[Any]:
+    """The installed process-global broker — an in-process
+    :class:`PipeBroker` or a :class:`BrokerClient` handle to one served
+    elsewhere (the plan executor's admission + rendezvous hook)."""
     return _GLOBAL
 
 
-def set_broker(broker: Optional[PipeBroker]) -> None:
+def set_broker(broker: Optional[Any]) -> None:
     global _GLOBAL
     _GLOBAL = broker
 

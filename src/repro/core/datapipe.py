@@ -1016,6 +1016,7 @@ class DataPipeInput:
         resume: Optional[str] = None,
         attempt: int = 0,
         lease_s: float = 0.0,
+        connect_timeout: float = 30.0,
         trace: bool = False,
         trace_ctx: str = "",
         flight_depth: int = 64,
@@ -1043,6 +1044,7 @@ class DataPipeInput:
         if self._trace_on:
             self._reg_ctx = self._trace_ctx or telemetry.new_trace_ctx()
         directory = directory or get_directory()
+        self._connect_timeout = float(connect_timeout) or 30.0
         if transport is None:
             transport = "channel" if channel is not None else "socket"
         if transport not in ("socket", "channel", "shm"):
@@ -1117,6 +1119,13 @@ class DataPipeInput:
             self._tspans.append(("import.rendezvous", _t_rdv,
                                  time.monotonic(), None))
         self._recorder.note("import.connected")
+        if getattr(directory, "degraded", False):
+            # the rendezvous went through the directory client's local
+            # fallback: the broker is down and both ends of this pipe
+            # must live in this process for the exporter to find us
+            self._recorder.note("import.degraded_rendezvous",
+                                dataset=rn.dataset, query=rn.query_id)
+            telemetry.counter("pipe.degraded_rendezvous").inc()
         # leased registration: keep re-stamping the directory entry while
         # this importer is alive; if it dies (thread or process), renewals
         # stop and the lease expires into the directory's dead-peer GC.
@@ -1342,7 +1351,24 @@ class DataPipeInput:
             return
         self._check_lease()
         t0 = time.monotonic()
-        kind, payload = self._transport.recv_frame()
+        if isinstance(self._transport, ShmRingTransport):
+            # the handshake is not done until the schema frame lands: an
+            # exporter that died at (or never reached) rendezvous would
+            # otherwise park this importer on the ring forever — a shm
+            # ring with no writer yet attached cannot distinguish "slow"
+            # from "never coming" (socket importers get the same bound
+            # from their accept/read timeouts)
+            try:
+                kind, payload = self._transport.recv_frame(
+                    timeout=self._connect_timeout)
+            except TimeoutError:
+                raise attach_flight(TimeoutError(
+                    f"no exporter wrote to {self.reserved.dataset!r} "
+                    f"(query {self.reserved.query_id!r}) within "
+                    f"{self._connect_timeout:g}s of rendezvous — it died "
+                    f"or abandoned the attempt"), self._recorder) from None
+        else:
+            kind, payload = self._transport.recv_frame()
         if self._trace_on:
             self._tspans.append(("import.wait_schema", t0,
                                  time.monotonic(), None))

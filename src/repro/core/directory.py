@@ -55,6 +55,7 @@ from dataclasses import dataclass, field, replace as _dc_replace
 from typing import Any, Dict, List, Optional, Tuple, Union
 
 from . import faults
+from . import telemetry
 from .transport import (
     FRAME_EOF,
     Channel,
@@ -111,6 +112,7 @@ class Endpoint:
     resume_epoch: int = 0              # attempt number of this registration
     lease_deadline: float = 0.0        # directory-stamped TTL (0 = no lease)
     trace: str = ""                    # importer's "trace_id:span_id" ctx
+    bepoch: int = 0                    # broker incarnation that granted it
 
     @property
     def is_channel(self) -> bool:
@@ -163,6 +165,22 @@ class WorkerDirectory:
         self._all_popped: Dict[Tuple[str, str], List[Endpoint]] = {}
         self._names: Dict[str, Dict[str, Any]] = {}  # named publications
         self._closing = False
+        # broker fencing epoch: 0 = plain directory (no fencing).  A
+        # broker stamps its incarnation here; every registration then
+        # carries it (Endpoint.bepoch) and the DirectoryServer rejects
+        # RPCs pinned to a different incarnation.
+        self.epoch = 0
+        # state-delta hook: callable(kind, doc) invoked OUTSIDE the lock
+        # after each journalable mutation (the broker's journal feed)
+        self.observer: Optional[Any] = None
+
+    def _notify(self, kind: str, doc: Dict[str, Any]) -> None:
+        obs = self.observer
+        if obs is not None:
+            try:
+                obs(kind, doc)
+            except Exception:  # pragma: no cover - journal must never wedge RPCs
+                pass
 
     def interrupt(self) -> None:
         """Permanently wake every blocked rendezvous wait so it raises
@@ -172,6 +190,12 @@ class WorkerDirectory:
         with self._lock:
             self._closing = True
             self._lock.notify_all()
+
+    def resume(self) -> None:
+        """Undo :meth:`interrupt` — a restarted broker reuses its
+        directory object, and new rendezvous must be able to block."""
+        with self._lock:
+            self._closing = False
 
     def _check_closing_locked(self) -> None:
         if self._closing:
@@ -200,6 +224,8 @@ class WorkerDirectory:
         _rpc_fault("register")
         if endpoint.pid == 0:
             endpoint = _dc_replace(endpoint, pid=os.getpid())
+        if self.epoch and endpoint.bepoch != self.epoch:
+            endpoint = _dc_replace(endpoint, bepoch=self.epoch)
         endpoint = self._stamp_lease(endpoint, lease_s)
         with self._lock:
             st = self._state(dataset, query_id)
@@ -209,6 +235,11 @@ class WorkerDirectory:
                 st.import_workers = import_workers
             self._lock.notify_all()
             self._maybe_stub_locked(dataset, query_id)
+        if self.observer is not None and not _has_channel(endpoint):
+            self._notify("register", {
+                "dataset": dataset, "query_id": query_id,
+                "import_workers": import_workers, "lease_s": lease_s,
+                "ep": _ep_to_doc(endpoint)})
 
     # -- exporter side ---------------------------------------------------------
     def query(
@@ -251,7 +282,10 @@ class WorkerDirectory:
             st.popped += 1
             self._all_popped.setdefault((dataset, query_id), []).append(ep)
             self._maybe_stub_locked(dataset, query_id)
-            return ep
+        if self.observer is not None and not _has_channel(ep):
+            self._notify("pop", {"dataset": dataset, "query_id": query_id,
+                                 "ep": _ep_to_doc(ep)})
+        return ep
 
     def query_all(
         self,
@@ -398,6 +432,8 @@ class WorkerDirectory:
         with self._lock:
             self._names[name] = rec
             self._lock.notify_all()
+        self._notify("publish_name", {"name": name, "doc": dict(doc),
+                                      "pid": rec["pid"], "lease_s": lease_s})
 
     def lookup_name(self, name: str, timeout: float = 30.0) -> Dict[str, Any]:
         """Block until the publication ``name`` exists (with a live,
@@ -425,12 +461,15 @@ class WorkerDirectory:
         left alone, so a restarted publisher's re-publication is never
         torn down by its dead predecessor's close path)."""
         pid = pid or os.getpid()
+        removed = False
         with self._lock:
             rec = self._names.get(name)
             if rec is not None and rec["pid"] == pid:
                 del self._names[name]
-                return True
-            return False
+                removed = True
+        if removed:
+            self._notify("unpublish_name", {"name": name, "pid": pid})
+        return removed
 
     def renew_name(self, name: str, pid: Optional[int] = None,
                    lease_s: Optional[float] = None) -> int:
@@ -499,6 +538,12 @@ class WorkerDirectory:
         with self._lock:
             st = self._queries.get((dataset, query_id))
             if st is None:
+                # no live query state, but the endpoint may have been
+                # popped (rendezvous done) — including by a pre-crash
+                # incarnation whose journal restored only the popped pool
+                for ep in self._all_popped.get((dataset, query_id), ()):
+                    if ep.pid == pid:
+                        return 1
                 return 0
             for i, ep in enumerate(st.entries):
                 if ep.pid == pid and ep.lease_deadline:
@@ -512,6 +557,9 @@ class WorkerDirectory:
                 for ep in self._all_popped.get((dataset, query_id), ()):
                     if ep.pid == pid:
                         return 1  # popped: the transfer is past rendezvous
+        if renewed and self.observer is not None:
+            self._notify("renew", {"dataset": dataset, "query_id": query_id,
+                                   "pid": pid, "lease_s": lease_s})
         return renewed
 
     def sweep(self, orphan_min_age_s: float = 30.0) -> List[str]:
@@ -577,6 +625,50 @@ class WorkerDirectory:
                       if dataset is None or k[0] == dataset]:
                 del self._all_popped[k]
 
+    # -- journal snapshot (broker checkpoints) -----------------------------------
+    def export_state(self) -> Dict[str, Any]:
+        """JSON-serializable snapshot of the journalable directory state:
+        live registrations, popped endpoints (so post-recovery renews of
+        completed rendezvous keep returning 1), and named publications.
+        Channel endpoints are process-local by definition and skipped —
+        they cannot survive the process they point into."""
+        entries: List[Dict[str, Any]] = []
+        popped: List[Dict[str, Any]] = []
+        with self._lock:
+            for (ds, qid), st in self._queries.items():
+                for ep in st.entries:
+                    if not _has_channel(ep):
+                        entries.append({"dataset": ds, "query_id": qid,
+                                        "import_workers": st.import_workers,
+                                        "ep": _ep_to_doc(ep)})
+            for (ds, qid), pool in self._all_popped.items():
+                for ep in pool:
+                    if not _has_channel(ep):
+                        popped.append({"dataset": ds, "query_id": qid,
+                                       "ep": _ep_to_doc(ep)})
+            names = {n: {"doc": dict(rec["doc"]), "pid": rec["pid"]}
+                     for n, rec in self._names.items()}
+        return {"entries": entries, "popped": popped, "names": names}
+
+    def restore_state(self, state: Dict[str, Any]) -> None:
+        """Re-pin a journal-recovered snapshot: registrations come back
+        with *fresh* leases (their registrants get a full TTL to notice
+        the new incarnation and start renewing), popped endpoints go
+        back to the popped pool, publications are re-published."""
+        for rec in state.get("entries", []):
+            self.register(rec["dataset"], _ep_from_doc(rec["ep"]),
+                          rec.get("query_id", "0"),
+                          import_workers=rec.get("import_workers"))
+        with self._lock:
+            for rec in state.get("popped", []):
+                key = (rec["dataset"], rec.get("query_id", "0"))
+                self._all_popped.setdefault(key, []).append(
+                    _ep_from_doc(rec["ep"]))
+        for name, rec in (state.get("names") or {}).items():
+            doc = dict(rec.get("doc") or {})
+            doc.setdefault("pid", rec.get("pid", 0))
+            self.publish_name(name, doc)
+
 
 def _rpc_fault(op: str) -> None:
     """Fault hook shared by the in-process directory and the RPC client:
@@ -584,6 +676,12 @@ def _rpc_fault(op: str) -> None:
     if faults._ACTIVE is not None:
         if faults.fire("directory.rpc", op=op) == "drop":
             raise ConnectionResetError(f"injected: directory {op} dropped")
+
+
+def _has_channel(ep: Endpoint) -> bool:
+    """True when the endpoint (or any striped member) is an in-process
+    channel — non-serializable, so never journaled or sent over RPC."""
+    return ep.is_channel or any(_has_channel(m) for m in ep.members)
 
 
 def _registrant_alive(ep: Endpoint) -> bool:
@@ -723,6 +821,7 @@ def _ep_to_doc(ep: Endpoint) -> dict:
         "resume_seq": ep.resume_seq,
         "resume_epoch": ep.resume_epoch,
         "trace": ep.trace,
+        "bepoch": ep.bepoch,
         "members": [_ep_to_doc(m) for m in ep.members],
     }
 
@@ -739,6 +838,7 @@ def _ep_from_doc(doc: dict) -> Endpoint:
         resume_seq=int(doc.get("resume_seq", 0)),
         resume_epoch=int(doc.get("resume_epoch", 0)),
         trace=str(doc.get("trace", "")),
+        bepoch=int(doc.get("bepoch", 0)),
         members=tuple(_ep_from_doc(m) for m in doc.get("members", [])),
     )
 
@@ -790,6 +890,14 @@ class DirectoryServer:
         # dict, answered by the "stats" op (the broker installs its own
         # stats() here; repro.tools.pipetop polls it)
         self.stats_provider: Optional[Any] = None
+        # admission gate: a callable(req) -> resp dict answering the
+        # admit/admit_poll/release ops (the broker installs its
+        # reservation-based remote admission here).  All three are
+        # non-blocking on the broker side — queued admissions are held
+        # as reservations the client polls, never as parked handler
+        # threads — so they ride the fast inline lane and a burst of
+        # 200 queued plans cannot starve the pool that query waits on.
+        self.admission_provider: Optional[Any] = None
 
     def start(self) -> "DirectoryServer":
         for i in range(self.handlers):
@@ -813,6 +921,15 @@ class DirectoryServer:
     def stop(self) -> None:
         self._stop.set()
         self.directory.interrupt()  # unblock parked query waits
+        try:
+            # close() alone does NOT wake a thread already parked in
+            # accept() — the kernel keeps the open file description (and
+            # the LISTEN port!) alive until the syscall returns, so the
+            # join below would time out and a same-port restart would
+            # die with EADDRINUSE.  shutdown() aborts the parked accept.
+            self._sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
         try:
             self._sock.close()
         except OSError:
@@ -865,6 +982,25 @@ class DirectoryServer:
             self._dispatch(*item)
 
     def _dispatch(self, conn: socket.socket, f, req: dict) -> None:
+        # fencing: a client pinned to a dead incarnation's epoch is told
+        # so loudly — its leases, tickets, and registrations died with
+        # that incarnation, and acting on its RPCs as if nothing
+        # happened is how zombie tickets double-spend budgets.  The
+        # reject carries the live epoch so the client can re-attach.
+        depoch = getattr(self.directory, "epoch", 0)
+        bepoch = int(req.get("bepoch") or 0)
+        if depoch and bepoch and bepoch != depoch:
+            telemetry.counter("broker.rejects", reason="stale_epoch").inc()
+            resp = {"ok": False, "stale_epoch": True, "bepoch": depoch,
+                    "error": (f"stale broker epoch {bepoch} "
+                              f"(live incarnation is {depoch})")}
+            try:
+                f.write(json.dumps(resp).encode() + b"\n")
+                f.flush()
+            except OSError:
+                pass
+            _close_quietly(conn)
+            return
         try:
             if req["op"] == "register":
                 self.directory.register(
@@ -966,6 +1102,14 @@ class DirectoryServer:
                 provider = self.stats_provider
                 resp = {"ok": True,
                         "stats": provider() if provider is not None else {}}
+            elif req["op"] in ("admit", "admit_poll", "release"):
+                provider = self.admission_provider
+                if provider is None:
+                    resp = {"ok": False,
+                            "error": "no broker admission behind this "
+                                     "directory"}
+                else:
+                    resp = provider(req)
             else:
                 resp = {"ok": False, "error": f"bad op {req['op']!r}"}
         except OSError:
@@ -973,6 +1117,8 @@ class DirectoryServer:
             return
         except Exception as e:  # a bad request must not kill a pooled worker
             resp = {"ok": False, "error": f"{type(e).__name__}: {e}"}
+        if depoch and "bepoch" not in resp:
+            resp["bepoch"] = depoch  # clients pin the live incarnation
         try:
             f.write(json.dumps(resp).encode() + b"\n")
             f.flush()
@@ -991,9 +1137,11 @@ class DirectoryServer:
         client vanished (dead socket, EOF, silence) re-register the
         endpoint so the next live query can still claim it."""
         acked = False
+        depoch = getattr(self.directory, "epoch", 0)
         try:
             f.write(json.dumps(
-                {"ok": True, **_ep_to_doc(ep)}).encode() + b"\n")
+                {"ok": True, "bepoch": depoch,
+                 **_ep_to_doc(ep)}).encode() + b"\n")
             f.flush()
             conn.settimeout(self.QUERY_ACK_S)
             acked = f.readline().strip() == b"ack"
@@ -1017,28 +1165,297 @@ def _close_quietly(conn: socket.socket) -> None:
 
 
 class DirectoryClient:
-    """Client with the WorkerDirectory API, speaking to a DirectoryServer."""
+    """Client with the WorkerDirectory API, speaking to a DirectoryServer.
 
-    def __init__(self, host: str, port: int):
+    Beyond the plain RPC shim, this is the *degraded-mode ladder* of the
+    control plane's failure model (see docs/architecture.md):
+
+    1. **Retry** — idempotent ops (renew, stats, register, name ops) get
+       one bounded reconnect-and-retry on ECONNRESET/EPIPE, so a broker
+       restart mid-RPC surfaces as recovery, not a raw socket error.
+    2. **Degrade** — with ``degraded_ok=True``, persistent broker death
+       steps the client down instead of failing the plan: new rendezvous
+       go to a process-local fallback :class:`WorkerDirectory` (the
+       pre-broker per-transfer model), renews of broker-held leases are
+       *suspended* (return 1, keeping in-flight frames alive), and
+       admission becomes a no-op — all under a ``broker.degraded`` gauge.
+    3. **Re-attach** — the client probes the broker every
+       ``probe_every`` seconds; the first RPC that lands pins the new
+       incarnation's epoch, re-uploads names published while degraded,
+       and clears the gauge.  Edges that started on the fallback stay
+       *sticky* to it (per (dataset, query) / per name), so a mid-edge
+       re-attach cannot split a rendezvous across two directories.
+
+    Epoch fencing: every response from a broker-backed server carries
+    its incarnation (``bepoch``); the client pins it into subsequent
+    requests.  A ``stale_epoch`` reject means the broker restarted —
+    the client adopts the new epoch and retries the op once.
+    """
+
+    # safe to re-send after a connection died mid-flight: either
+    # naturally idempotent or an at-least-once upsert
+    _RETRYABLE_OPS = frozenset({
+        "renew", "stats", "register", "renew_name", "publish_name",
+        "unpublish_name", "list_names", "publish_broadcast",
+        "admit_poll", "release"})
+
+    def __init__(self, host: str, port: int, degraded_ok: bool = False,
+                 rpc_retries: int = 1, probe_every: float = 1.0):
         self.addr = (host, port)
+        self.degraded_ok = degraded_ok
+        self.rpc_retries = max(0, int(rpc_retries))
+        self.probe_every = float(probe_every)
+        self.epoch = 0          # pinned broker incarnation (0 = unpinned)
+        self.degraded = False
+        self.reattaches = 0     # recoveries: degraded -> broker regained
+        self._fallback: Optional[WorkerDirectory] = None
+        self._probe_at = 0.0    # next broker probe while degraded
+        self._state_lock = threading.Lock()
+
+    # -- transport ------------------------------------------------------------
+    def _rpc_once(self, req: dict, ack: bool = False) -> dict:
+        if self.epoch:
+            req = {**req, "bepoch": self.epoch}
+        s = socket.create_connection(self.addr, timeout=60.0)
+        try:
+            f = s.makefile("rwb")
+            f.write(json.dumps(req).encode() + b"\n")
+            f.flush()
+            line = f.readline()
+            if not line:
+                raise ConnectionResetError(
+                    "directory server closed the connection mid-RPC")
+            resp = json.loads(line)
+            if ack and resp.get("ok"):
+                # endpoint-pop handoff: confirm receipt so the server
+                # knows the endpoint reached a live process (no ack ->
+                # restitution)
+                try:
+                    f.write(b"ack\n")
+                    f.flush()
+                except OSError:
+                    pass
+            return resp
+        finally:
+            _close_quietly(s)
 
     def _rpc(self, req: dict, ack: bool = False) -> dict:
-        _rpc_fault(req.get("op", "?"))
-        s = socket.create_connection(self.addr, timeout=60.0)
-        f = s.makefile("rwb")
-        f.write(json.dumps(req).encode() + b"\n")
-        f.flush()
-        resp = json.loads(f.readline())
-        if ack and resp.get("ok"):
-            # endpoint-pop handoff: confirm receipt so the server knows
-            # the endpoint reached a live process (no ack -> restitution)
+        op = req.get("op", "?")
+        _rpc_fault(op)
+        if faults._ACTIVE is not None:
             try:
-                f.write(b"ack\n")
-                f.flush()
-            except OSError:
-                pass
-        s.close()
+                injected = faults.fire("broker.rpc", op=op)
+            except faults.InjectedPeerDeath as e:
+                # broker_crash rule: the control plane just "died" under
+                # this RPC — walk the same ladder a real death would
+                if not self.degraded_ok:
+                    raise
+                self._enter_degraded(e)
+                return self._fallback_call(req)
+            if injected == "stale":
+                # broker_restart rule: answer as a new incarnation would
+                return self._on_response(
+                    req, {"ok": False, "stale_epoch": True,
+                          "bepoch": self.epoch + 1}, ack)
+        if self._fallback_owns(req):
+            return self._fallback_call(req)
+        if self.degraded and not self._should_probe():
+            return self._fallback_call(req)
+        attempts = 1 + (self.rpc_retries if op in self._RETRYABLE_OPS else 0)
+        err: Optional[BaseException] = None
+        resp: dict = {}
+        for _ in range(attempts):
+            try:
+                resp = self._rpc_once(req, ack)
+                err = None
+                break
+            except (OSError, ValueError) as e:  # conn reset/refused, torn JSON
+                err = e
+                telemetry.counter("broker.rpc_errors", op=op).inc()
+        if err is not None:
+            if not self.degraded_ok:
+                raise err
+            self._enter_degraded(err)
+            return self._fallback_call(req)
+        return self._on_response(req, resp, ack)
+
+    def _on_response(self, req: dict, resp: dict, ack: bool) -> dict:
+        if resp.get("stale_epoch"):
+            # the broker restarted under us: adopt the live incarnation
+            # and replay the op.  Two rounds bound the recovery: the
+            # first reject can carry a since-superseded epoch (a crash
+            # loop, an injected restart), the second is authoritative —
+            # anything past that is epoch ping-pong, give up loudly.
+            telemetry.counter("broker.stale_epoch_seen").inc()
+            for _ in range(2):
+                with self._state_lock:
+                    self.epoch = (int(resp.get("bepoch") or 0)
+                                  or self.epoch + 1)
+                try:
+                    resp = self._rpc_once(req, ack)
+                except (OSError, ValueError) as e:
+                    if not self.degraded_ok:
+                        raise
+                    self._enter_degraded(e)
+                    return self._fallback_call(req)
+                if not resp.get("stale_epoch"):
+                    break
+            if resp.get("stale_epoch"):
+                with self._state_lock:
+                    self.epoch = int(resp.get("bepoch") or 0) or self.epoch
+                return resp
+        bep = int(resp.get("bepoch") or 0)
+        if bep:
+            with self._state_lock:
+                self.epoch = bep
+        if self.degraded:
+            self._leave_degraded()
         return resp
+
+    # -- the degraded-mode ladder ----------------------------------------------
+    def _should_probe(self) -> bool:
+        return time.monotonic() >= self._probe_at
+
+    def _ensure_fallback(self) -> WorkerDirectory:
+        with self._state_lock:
+            if self._fallback is None:
+                self._fallback = WorkerDirectory()
+            return self._fallback
+
+    def _enter_degraded(self, err: BaseException) -> None:
+        first = False
+        with self._state_lock:
+            self._probe_at = time.monotonic() + self.probe_every
+            if self._fallback is None:
+                self._fallback = WorkerDirectory()
+            if not self.degraded:
+                self.degraded = True
+                first = True
+        if first:
+            telemetry.gauge("broker.degraded").set(1)
+            telemetry.counter("broker.degradations",
+                              error=type(err).__name__).inc()
+
+    def _leave_degraded(self) -> None:
+        with self._state_lock:
+            if not self.degraded:
+                return
+            self.degraded = False
+            self.reattaches += 1
+            fb = self._fallback
+        telemetry.gauge("broker.degraded").set(0)
+        telemetry.counter("broker.reattach").inc()
+        # best effort: names published while degraded are re-uploaded so
+        # other processes can find them at the broker again; rendezvous
+        # state stays sticky to the fallback until those edges drain
+        if fb is not None:
+            try:
+                for name, doc in fb.list_names().items():
+                    self._rpc_once({"op": "publish_name", "name": name,
+                                    "doc": doc})
+            except (OSError, ValueError):
+                pass
+
+    def _fallback_owns(self, req: dict) -> bool:
+        """Stickiness: once an edge (or name) has state on the fallback,
+        every later op for it stays there — a rendezvous split across
+        the fallback and a re-attached broker would never meet."""
+        fb = self._fallback
+        if fb is None:
+            return False
+        op = req.get("op")
+        if op in ("query", "query_all", "join_broadcast",
+                  "publish_broadcast", "next_sender", "renew", "register"):
+            key = (req.get("dataset"), req.get("query_id", "0"))
+            with fb._lock:
+                return key in fb._queries
+        if op in ("lookup_name", "renew_name", "unpublish_name"):
+            with fb._lock:
+                return req.get("name") in fb._names
+        return False
+
+    def _fallback_call(self, req: dict) -> dict:
+        """Serve the op from the process-local fallback directory (the
+        broker-less per-transfer rendezvous model).  Admission becomes a
+        no-op — enforcing a dead broker's budgets would just wedge the
+        plans the ladder exists to keep draining."""
+        fb = self._ensure_fallback()
+        op = req.get("op")
+        telemetry.counter("broker.fallback_ops", op=str(op)).inc()
+        try:
+            if op == "register":
+                fb.register(req["dataset"], _ep_from_doc(req),
+                            req.get("query_id", "0"),
+                            req.get("import_workers"),
+                            lease_s=req.get("lease_s"))
+                return {"ok": True, "degraded": True}
+            if op == "renew":
+                n = fb.renew(req["dataset"], req.get("query_id", "0"),
+                             pid=req.get("pid"), lease_s=req.get("lease_s"))
+                if n == 0 and not self._fallback_owns(req):
+                    # the lease lives at the unreachable broker: suspend
+                    # enforcement instead of aborting in-flight frames
+                    n = 1
+                return {"ok": True, "renewed": n, "degraded": True}
+            if op == "query":
+                ep = fb.query(req["dataset"], req.get("query_id", "0"),
+                              req.get("export_workers"),
+                              timeout=float(req.get("timeout", 30.0)))
+                return {"ok": True, "degraded": True, **_ep_to_doc(ep)}
+            if op == "query_all":
+                eps = fb.query_all(req["dataset"], req.get("query_id", "0"),
+                                   timeout=float(req.get("timeout", 30.0)))
+                return {"ok": True, "degraded": True,
+                        "endpoints": [_ep_to_doc(e) for e in eps]}
+            if op == "join_broadcast":
+                slot, ep = fb.join_broadcast(
+                    req["dataset"], req.get("query_id", "0"),
+                    int(req.get("readers", 0)),
+                    timeout=float(req.get("timeout", 30.0)))
+                return {"ok": True, "degraded": True, "slot": slot,
+                        "endpoint": _ep_to_doc(ep) if ep else None}
+            if op == "publish_broadcast":
+                fb.publish_broadcast(req["dataset"],
+                                     _ep_from_doc(req["endpoint"]),
+                                     req.get("query_id", "0"),
+                                     req.get("import_workers"))
+                return {"ok": True, "degraded": True}
+            if op == "next_sender":
+                return {"ok": True, "degraded": True,
+                        "sender": fb.next_sender(req["dataset"],
+                                                 req.get("query_id", "0"))}
+            if op == "publish_name":
+                fb.publish_name(req["name"], req.get("doc") or {},
+                                lease_s=req.get("lease_s"))
+                return {"ok": True, "degraded": True}
+            if op == "lookup_name":
+                doc = fb.lookup_name(req["name"],
+                                     timeout=float(req.get("timeout", 30.0)))
+                return {"ok": True, "degraded": True, "doc": doc}
+            if op == "unpublish_name":
+                return {"ok": True, "degraded": True,
+                        "removed": fb.unpublish_name(req["name"],
+                                                     pid=req.get("pid"))}
+            if op == "renew_name":
+                n = fb.renew_name(req["name"], pid=req.get("pid"),
+                                  lease_s=req.get("lease_s"))
+                if n == 0 and not self._fallback_owns(req):
+                    n = 1  # suspended: the name lives at the dead broker
+                return {"ok": True, "renewed": n, "degraded": True}
+            if op == "list_names":
+                return {"ok": True, "degraded": True,
+                        "names": fb.list_names()}
+            if op in ("admit", "admit_poll"):
+                return {"ok": True, "degraded": True, "granted": True,
+                        "ticket": None}
+            if op == "release":
+                return {"ok": True, "degraded": True}
+            if op == "stats":
+                return {"ok": True, "degraded": True, "stats": {}}
+            return {"ok": False, "degraded": True,
+                    "error": f"bad op {op!r}"}
+        except (TimeoutError, IOError) as e:
+            return {"ok": False, "degraded": True, "error": str(e)}
 
     def register(
         self,

@@ -18,6 +18,9 @@ Hook sites (``site`` strings, with the context keys each supplies):
     shm.doorbell.open   (action "break" -> waiter falls back to polling)
     shm.doorbell.ring   (action "drop" skips the ring; "delay" sleeps)
     directory.rpc       op=register|query|renew|... (client side)
+    broker.rpc          op=... (DirectoryClient only: "kill" = broker
+                        death -> degraded ladder; "stale" = restart ->
+                        stale_epoch reject + epoch re-attach)
 
 The hot path stays cheap: every hook site checks ``faults._ACTIVE is
 None`` inline before calling in.  With no plan active the cost is one
@@ -66,8 +69,10 @@ class InjectedPeerDeath(BrokenPipeError):
 
 
 # actions a site must cooperate with (returned from fire()); "kill",
-# "errno" and "delay" are handled inside fire() itself
-_SITE_ACTIONS = frozenset({"drop", "dup", "corrupt", "break"})
+# "errno" and "delay" are handled inside fire() itself.  "stale" is the
+# broker-restart verdict: the directory client answers the RPC as a new
+# broker incarnation would (stale_epoch reject), driving its re-attach.
+_SITE_ACTIONS = frozenset({"drop", "dup", "corrupt", "break", "stale"})
 
 
 @dataclass
@@ -149,6 +154,25 @@ class FaultPlan:
         where = {"op": op} if op is not None else {}
         return self.add(FaultRule("directory.rpc", "drop", at=at,
                                   count=count, where=where))
+
+    def broker_crash(self, at: int = 0, count: int = 1,
+                     op: Optional[str] = None) -> "FaultPlan":
+        """The control plane dies under a client RPC: the directory
+        client sees a peer death and must walk its degraded-mode ladder
+        (fall back to local rendezvous, no-op admission, re-attach when
+        probes land)."""
+        where = {"op": op} if op is not None else {}
+        return self.add(FaultRule("broker.rpc", "kill", at=at, count=count,
+                                  where=where))
+
+    def broker_restart(self, at: int = 0, count: int = 1,
+                       op: Optional[str] = None) -> "FaultPlan":
+        """The broker comes back as a *new incarnation*: the client's
+        next RPC is answered with a ``stale_epoch`` reject, forcing it
+        to adopt the bumped fencing epoch and replay the op."""
+        where = {"op": op} if op is not None else {}
+        return self.add(FaultRule("broker.rpc", "stale", at=at, count=count,
+                                  where=where))
 
     # -- introspection --------------------------------------------------------
     def fired(self, site: Optional[str] = None) -> int:

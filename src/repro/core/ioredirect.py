@@ -228,6 +228,7 @@ def pipegen_open(
                              resume=cfg.resume,
                              attempt=cfg.attempt,
                              lease_s=cfg.lease_s,
+                             connect_timeout=cfg.connect_timeout,
                              trace=cfg.trace,
                              trace_ctx=cfg.trace_ctx,
                              flight_depth=cfg.flight_depth,

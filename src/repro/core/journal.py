@@ -1,0 +1,187 @@
+"""Append-only broker journal (control-plane crash tolerance).
+
+The :class:`~repro.core.broker.PipeBroker` is the sole owner of leases,
+admission tickets, and the publication registry — state that, before
+this module, lived only in its process memory.  A SIGKILL therefore
+wiped the control plane: every in-flight edge lost its lease, every
+publication its name, every granted ticket its budget accounting.  The
+journal makes that state durable the same way *Mainlining Databases*
+makes storage recoverable: a compact append-only log of state deltas,
+periodically folded into a checkpoint so replay cost is bounded by the
+*live* state, not the history.
+
+Format: one record per line, ``{crc32:08x} {json}\n`` — the CRC covers
+the JSON bytes, so a torn write (power cut / SIGKILL mid-append) is
+detectable.  Records are ``(kind, doc)`` pairs; the journal itself is
+agnostic to kinds (the broker defines register/pop/renew/publish_name/
+admit/release/… and folds them in ``broker._fold_records``).
+
+Durability knobs:
+
+* ``fsync_batch`` — records are flushed on every append but fsync'd
+  once per batch (default 8): the crash window is bounded without
+  paying a disk flush per lease heartbeat.
+* ``checkpoint_bytes`` — when the file grows past this, the owner calls
+  :meth:`Journal.checkpoint` with a snapshot record set; the journal is
+  rewritten atomically (tmp file + fsync + ``os.replace``) so a crash
+  mid-checkpoint leaves the *old* journal intact.
+
+Replay tolerates a truncated or corrupt **tail** record — the one a
+crash can legitimately tear — by recovering to the last intact record.
+Corruption *before* intact records is a different animal (bit rot, a
+concurrent writer) and raises :class:`JournalError` loudly instead of
+silently dropping committed state.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+import zlib
+from typing import Any, Dict, Iterable, List, Tuple
+
+__all__ = ["Journal", "JournalError", "replay"]
+
+Record = Tuple[str, Dict[str, Any]]
+
+
+class JournalError(RuntimeError):
+    """The journal is damaged beyond the tail-truncation a crash can
+    cause; recovering from it would silently drop committed records."""
+
+
+def _encode(kind: str, doc: Dict[str, Any]) -> bytes:
+    payload = json.dumps({"k": kind, **doc}, separators=(",", ":"),
+                         sort_keys=True).encode()
+    return b"%08x %s\n" % (zlib.crc32(payload), payload)
+
+
+def _decode(line: bytes) -> Record:
+    crc_hex, _, payload = line.rstrip(b"\n").partition(b" ")
+    if len(crc_hex) != 8 or not payload:
+        raise ValueError("malformed journal line")
+    if zlib.crc32(payload) != int(crc_hex, 16):
+        raise ValueError("journal record CRC mismatch")
+    doc = json.loads(payload)
+    kind = doc.pop("k")
+    return str(kind), doc
+
+
+def replay(path: str) -> Tuple[List[Record], bool]:
+    """Read every intact record from ``path``.
+
+    Returns ``(records, truncated)`` where ``truncated`` flags a
+    torn/corrupt tail that was dropped (the normal crash signature).  A
+    missing or empty file replays to ``([], False)``.  Corruption that
+    is *followed by* intact records raises :class:`JournalError`: that
+    cannot be explained by a crashed appender, and recovering past it
+    would resurrect a state the later records contradict.
+    """
+    try:
+        with open(path, "rb") as fh:
+            lines = fh.readlines()
+    except FileNotFoundError:
+        return [], False
+    records: List[Record] = []
+    bad_at = None
+    for i, line in enumerate(lines):
+        if not line.strip():
+            continue
+        try:
+            rec = _decode(line)
+        except (ValueError, json.JSONDecodeError, KeyError):
+            if bad_at is None:
+                bad_at = i
+            continue
+        if bad_at is not None:
+            raise JournalError(
+                f"{path}: corrupt record at line {bad_at + 1} is followed "
+                f"by intact records — refusing to silently drop committed "
+                f"state (a crash can only tear the tail)")
+        records.append(rec)
+    return records, bad_at is not None
+
+
+class Journal:
+    """Append-side handle.  Thread-safe; owned by one broker process."""
+
+    def __init__(self, path: str, fsync_batch: int = 8,
+                 checkpoint_bytes: int = 1 << 20):
+        self.path = path
+        self.fsync_batch = max(1, int(fsync_batch))
+        self.checkpoint_bytes = int(checkpoint_bytes)
+        self._lock = threading.Lock()
+        self._fh = open(path, "ab")
+        self._unsynced = 0
+        self.records = 0
+        self.syncs = 0
+        self.checkpoints = 0
+
+    @property
+    def size(self) -> int:
+        """Bytes in the journal file (the checkpoint trigger)."""
+        with self._lock:
+            if self._fh.closed:
+                return 0
+            return self._fh.tell()
+
+    def append(self, kind: str, doc: Dict[str, Any]) -> None:
+        with self._lock:
+            if self._fh.closed:
+                return
+            self._fh.write(_encode(kind, doc))
+            self._fh.flush()
+            self.records += 1
+            self._unsynced += 1
+            if self._unsynced >= self.fsync_batch:
+                self._fsync_locked()
+
+    def _fsync_locked(self) -> None:
+        try:
+            os.fsync(self._fh.fileno())
+        except OSError:  # pragma: no cover - e.g. journal on a pipe/tmpfs oddity
+            pass
+        self._unsynced = 0
+        self.syncs += 1
+
+    def sync(self) -> None:
+        with self._lock:
+            if not self._fh.closed and self._unsynced:
+                self._fsync_locked()
+
+    def checkpoint(self, records: Iterable[Record]) -> None:
+        """Atomically replace the journal with ``records`` (the owner's
+        folded snapshot).  Crash-safe: the old journal stays intact
+        until the new one is fully on disk (tmp + fsync + replace)."""
+        tmp = f"{self.path}.ckpt.{os.getpid()}"
+        with self._lock:
+            if self._fh.closed:
+                return
+            with open(tmp, "wb") as out:
+                n = 0
+                for kind, doc in records:
+                    out.write(_encode(kind, doc))
+                    n += 1
+                out.flush()
+                os.fsync(out.fileno())
+            os.replace(tmp, self.path)
+            self._fh.close()
+            self._fh = open(self.path, "ab")
+            self._unsynced = 0
+            self.records = n
+            self.checkpoints += 1
+
+    def info(self) -> Dict[str, Any]:
+        with self._lock:
+            size = 0 if self._fh.closed else self._fh.tell()
+        return {"path": self.path, "bytes": size, "records": self.records,
+                "checkpoints": self.checkpoints, "syncs": self.syncs}
+
+    def close(self) -> None:
+        with self._lock:
+            if self._fh.closed:
+                return
+            if self._unsynced:
+                self._fsync_locked()
+            self._fh.close()

@@ -951,6 +951,11 @@ class CompiledPlan:
                 for ep in unit:
                     outs[ep.edge_id] = (None, [e])
                 return
+            if getattr(ticket, "degraded", False):
+                # control plane unreachable: admission suspended (the
+                # degraded ladder), the unit proceeds un-gated
+                recorder.note("admission.degraded")
+                telemetry.counter("plan.admit_degraded").inc()
             recorder.note("admission.granted",
                           wait_s=round(time.monotonic() - t0, 6))
         try:

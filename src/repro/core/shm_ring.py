@@ -1454,12 +1454,13 @@ class ShmRingTransport(Transport):
         self.frames_sent += 1
         self.shm_spans += 1
 
-    def recv_frame(self) -> Tuple[bytes, bytes]:
+    def recv_frame(self, timeout: Optional[float] = None
+                   ) -> Tuple[bytes, bytes]:
         if faults._ACTIVE is not None:
             if faults.fire("transport.recv", transport="shm") == "drop":
                 with faults.suppressed():
                     self.recv_frame()  # swallow one frame
-        item = self.ring.recv()
+        item = self.ring.recv(timeout=timeout)
         if item is None:
             return FRAME_EOF, b""
         kind_byte, view = item

@@ -354,12 +354,17 @@ class Publication:
             "mode": mode, "codec": codec, "pid": os.getpid(),
             "schema": schema.to_dict(), "start_epoch": int(start_epoch),
         }
+        self._pub_doc = doc
+        self._lease_s = lease_s
+        self._head_published = int(start_epoch)
+        self._head_pub_at = time.monotonic()
         self._directory.publish_name(name, doc, lease_s=lease_s)
         self._renewer: Optional[LeaseRenewer] = None
         if lease_s and hasattr(self._directory, "renew_name"):
             self._renewer = LeaseRenewer(
                 lambda ls: self._directory.renew_name(self.name, lease_s=ls),
-                lease_s, name=f"pipegen-pub-renew-{name}").start()
+                lease_s, on_lost=self._republish,
+                name=f"pipegen-pub-renew-{name}").start()
 
         _register_publication(self)
         # in-process directories block cheaply on a condvar; a
@@ -406,7 +411,49 @@ class Publication:
                 self.stats.bytes_logged += nbytes
                 self._cv.notify_all()
         self._update_gauges()
+        self._maybe_publish_head()
         return epoch
+
+    def _maybe_publish_head(self) -> None:
+        """Re-stamp the published name doc with the committed head,
+        throttled to one RPC per half second.  A journaling broker logs
+        every ``publish_name``, so after a control-plane crash the
+        recovered registry re-pins this publication at (close to) its
+        committed head instead of the head it had at publish time."""
+        now = time.monotonic()
+        with self._cv:
+            if (self._closing or self.head == self._head_published
+                    or now - self._head_pub_at < 0.5):
+                return
+            self._head_published = self.head
+            self._head_pub_at = now
+            doc = dict(self._pub_doc, head=self.head)
+        try:
+            self._directory.publish_name(self.name, doc,
+                                         lease_s=self._lease_s)
+        except (OSError, ValueError):  # pragma: no cover - broker flap
+            pass
+
+    def _republish(self) -> None:
+        """Name-lease ``on_lost``: the published name expired under us
+        (broker restart without a journal, or a GC race) while the
+        publication itself is alive and committing.  Self-heal: publish
+        again at the current head and restart the heartbeat."""
+        with self._cv:
+            if self._closing:
+                return
+            doc = dict(self._pub_doc, head=self.head)
+            self._head_published = self.head
+        try:
+            self._directory.publish_name(self.name, doc,
+                                         lease_s=self._lease_s)
+        except (OSError, ValueError):  # pragma: no cover - broker gone
+            return
+        telemetry.counter("subscribe.name_republished").inc()
+        self._renewer = LeaseRenewer(
+            lambda ls: self._directory.renew_name(self.name, lease_s=ls),
+            self._lease_s, on_lost=self._republish,
+            name=f"pipegen-pub-renew-{self.name}").start()
 
     def append(self, block: ColumnBlock) -> int:
         return self.commit(block, kind="delta")
@@ -467,6 +514,13 @@ class Publication:
                     if self._closing:
                         return
                 time.sleep(0.2)
+                continue
+            if ep.resume_seq < 0:
+                # wake sentinel — ours, or one a closed predecessor of
+                # this name never popped; never a real subscriber
+                with self._cv:
+                    if self._closing:
+                        return
                 continue
             with self._cv:
                 closing = self._closing
@@ -608,8 +662,13 @@ class Publication:
         # DirectoryClient polls out within _attach_wait on its own
         try:
             if hasattr(self._directory, "_queries"):
+                # resume_seq=-1 marks it as a sentinel: if the attach
+                # loop exits before popping it, a successor publication
+                # under the same name must not mistake it for a real
+                # subscriber and serve a snapshot into the void
                 self._directory.register(
-                    self._dataset, Endpoint(channel=Channel()), _SUB_QUERY)
+                    self._dataset, Endpoint(channel=Channel(),
+                                            resume_seq=-1), _SUB_QUERY)
         except Exception:
             pass
 

@@ -84,6 +84,28 @@ def _subscription_rows(stats: Dict[str, Any]) -> List[str]:
     return rows
 
 
+def _broker_health(stats: Dict[str, Any]) -> List[str]:
+    """Crash-tolerance row: incarnation epoch, journal footprint, and
+    the fencing/degraded-mode counters an operator checks first after a
+    control-plane flap.  Hidden on pre-journal snapshots."""
+    if "epoch" not in stats:
+        return []
+    j = stats.get("journal") or {}
+    jtxt = (f"journal={_fmt_bytes(j.get('bytes', 0))}"
+            f"/{j.get('records', 0)}rec"
+            f" ckpts={j.get('checkpoints', 0)}" if j else "journal=off")
+    rec = stats.get("recovered") or {}
+    rtxt = (f" recovered(leases={rec.get('entries', 0)} "
+            f"names={rec.get('names', 0)} "
+            f"expired_tickets={rec.get('expired_tickets', 0)})"
+            if rec else "")
+    return [
+        f"broker      epoch={stats.get('epoch', 0)} {jtxt} "
+        f"stale_rejects={stats.get('stale_releases', 0)} "
+        f"remote_tickets={stats.get('remote_tickets', 0)}" + rtxt,
+    ]
+
+
 def render(stats: Dict[str, Any], now: float = 0.0) -> str:
     """One dashboard frame from a broker ``stats`` snapshot.  Pure —
     takes the dict, returns the text — so tests can feed it canned or
@@ -105,6 +127,7 @@ def render(stats: Dict[str, Any], now: float = 0.0) -> str:
         f"segments={stats.get('active_segments', 0)} "
         f"bytes={_fmt_bytes(stats.get('active_bytes', 0))} "
         f"fds={stats.get('fds', -1)}",
+        *_broker_health(stats),
         "",
         "tenants",
         *_tenant_rows(stats),

@@ -1,0 +1,598 @@
+"""Control-plane crash tolerance: the broker journal, fencing epochs,
+and the degraded-mode client ladder.
+
+The contract under test (docs/architecture.md, "Control-plane failure
+model"): SIGKILL the broker and (a) no committed control-plane state is
+lost — the journal replays leases, publications and quota config into
+the next incarnation; (b) no *un*committed grant survives — outstanding
+admission tickets are expired at recovery and their eventual releases
+are fenced off as ``stale_epoch`` instead of double-crediting budgets;
+(c) clients never wedge — they walk the degraded ladder (bounded retry
+-> process-local fallback rendezvous + no-op admission -> re-attach)
+and a 200-plan stress drains green across the kill.
+"""
+
+import errno
+import multiprocessing
+import os
+import signal
+import socket
+import tempfile
+import threading
+import time
+
+import pytest
+
+from repro.core import faults, telemetry
+from repro.core.broker import (
+    BrokerClient,
+    NullAdmission,
+    PipeBroker,
+    TenantQuota,
+    _fold_records,
+    get_broker,
+    process_fd_count,
+)
+from repro.core.datapipe import PipeConfig
+from repro.core.directory import (
+    DirectoryClient,
+    Endpoint,
+    get_directory,
+)
+from repro.core.journal import Journal, JournalError, replay
+from repro.core.plan import plan
+from repro.core.shm_ring import _SHM_DIR, doorbell_supported
+from repro.engines import make_engine, make_paper_block
+from repro.engines.base import assert_blocks_equal
+
+_mp = multiprocessing.get_context("spawn")
+
+needs_doorbell = pytest.mark.skipif(
+    not doorbell_supported(), reason="platform has no eventfd/fifo doorbell")
+
+
+def _free_port() -> int:
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    return port
+
+
+def _edge_cfg(**kw):
+    kw.setdefault("shm_capacity", 1 << 16)
+    return PipeConfig(mode="arrowcol", block_rows=32, transport="shm", **kw)
+
+
+# -- the journal itself --------------------------------------------------------------
+
+
+def test_journal_roundtrip(tmp_path):
+    path = str(tmp_path / "j")
+    j = Journal(path, fsync_batch=2)
+    j.append("register", {"dataset": "t", "query_id": "0"})
+    j.append("publish_name", {"name": "n", "doc": {"head": 3}})
+    j.append("admit", {"ticket": "1.0", "rings": 2})
+    j.close()
+    records, truncated = replay(path)
+    assert not truncated
+    assert [k for k, _ in records] == ["register", "publish_name", "admit"]
+    assert records[1][1] == {"name": "n", "doc": {"head": 3}}
+
+
+def test_journal_replay_missing_file_is_empty(tmp_path):
+    assert replay(str(tmp_path / "nope")) == ([], False)
+
+
+def test_journal_replay_tolerates_torn_tail(tmp_path):
+    """A crash mid-append tears at most the LAST record: replay drops it,
+    keeps everything before it, and flags the truncation."""
+    path = str(tmp_path / "j")
+    j = Journal(path)
+    j.append("register", {"dataset": "a"})
+    j.append("register", {"dataset": "b"})
+    j.close()
+    with open(path, "ab") as fh:  # a torn write: half a record, no CRC
+        fh.write(b'deadbeef {"k": "regist')
+    records, truncated = replay(path)
+    assert truncated
+    assert [doc["dataset"] for _, doc in records] == ["a", "b"]
+
+
+def test_journal_mid_file_corruption_is_loud(tmp_path):
+    """Corruption FOLLOWED by intact records cannot be a crash artifact;
+    recovering past it would silently drop committed state."""
+    path = str(tmp_path / "j")
+    j = Journal(path)
+    for ds in ("a", "b", "c"):
+        j.append("register", {"dataset": ds})
+    j.close()
+    with open(path, "rb") as fh:
+        lines = fh.readlines()
+    lines[1] = b"00000000 " + lines[1].split(b" ", 1)[1]  # break the CRC
+    with open(path, "wb") as fh:
+        fh.writelines(lines)
+    with pytest.raises(JournalError):
+        replay(path)
+
+
+def test_journal_checkpoint_is_atomic_and_truncating(tmp_path):
+    path = str(tmp_path / "j")
+    j = Journal(path, fsync_batch=1)
+    for i in range(100):
+        j.append("renew", {"dataset": "t", "i": i})
+    grew = j.size
+    j.checkpoint([("checkpoint", {"state": {"epoch": 7}})])
+    assert j.size < grew
+    j.append("register", {"dataset": "after"})
+    j.close()
+    records, truncated = replay(path)
+    assert not truncated
+    assert [k for k, _ in records] == ["checkpoint", "register"]
+    assert records[0][1]["state"]["epoch"] == 7
+
+
+def test_fold_nets_out_pops_and_releases():
+    records = [
+        ("register", {"dataset": "t", "query_id": "0", "ep": {"pid": 1}}),
+        ("register", {"dataset": "u", "query_id": "0", "ep": {"pid": 2}}),
+        ("pop", {"dataset": "t", "query_id": "0", "ep": {"pid": 1}}),
+        ("admit", {"ticket": "1.0", "rings": 1}),
+        ("admit", {"ticket": "1.1", "rings": 2}),
+        ("release", {"ticket": "1.0"}),
+        ("publish_name", {"name": "n", "doc": {"head": 1}, "pid": 9}),
+        ("publish_name", {"name": "n", "doc": {"head": 5}, "pid": 9}),
+    ]
+    state = _fold_records(records)
+    assert [e["dataset"] for e in state["entries"]] == ["u"]
+    assert [e["dataset"] for e in state["popped"]] == ["t"]
+    assert set(state["tickets"]) == {"1.1"}  # released grant netted out
+    assert state["names"]["n"]["doc"]["head"] == 5  # last write wins
+
+
+# -- recovery: journal -> next incarnation -------------------------------------------
+
+
+def test_broker_recovers_leases_names_and_quota(tmp_path):
+    path = str(tmp_path / "broker.journal")
+    b1 = PipeBroker(journal_path=path, hub=False, lease_ttl=30.0)
+    b1.start()
+    b1.directory.register("t", Endpoint("h", 1), "q1")
+    b1.directory.publish_name("pub", {"head": 12}, lease_s=30.0)
+    b1.set_quota("acme", TenantQuota(max_rings=3))
+    epoch1 = b1.epoch
+    b1.stop()
+
+    b2 = PipeBroker(journal_path=path, hub=False, lease_ttl=30.0)
+    b2.start(recover=True)
+    try:
+        assert b2.epoch > epoch1
+        assert b2.directory.epoch == b2.epoch
+        # the lease came back (re-stamped fresh), the name at its head
+        assert b2.directory.renew("t", "q1", pid=os.getpid()) == 1
+        assert b2.directory.lookup_name("pub", timeout=1.0)["head"] == 12
+        assert b2.tenants["acme"].max_rings == 3
+        assert b2.recovered["entries"] == 1
+        assert b2.recovered["names"] == 1
+    finally:
+        b2.stop()
+
+
+def test_recovery_treats_popped_endpoints_as_popped(tmp_path):
+    """An endpoint handed to an exporter before the crash must not be
+    re-offered after it — but its renewals still succeed (the transfer
+    is live; renew of a popped entry is not lease loss)."""
+    path = str(tmp_path / "broker.journal")
+    b1 = PipeBroker(journal_path=path, hub=False)
+    b1.start()
+    b1.directory.register("t", Endpoint("h", 1, pid=os.getpid()), "q1")
+    assert b1.directory.query("t", "q1", timeout=1.0).port == 1
+    b1.stop()
+
+    b2 = PipeBroker(journal_path=path, hub=False)
+    b2.start(recover=True)
+    try:
+        assert b2.recovered["entries"] == 0
+        assert b2.recovered["popped"] == 1
+        assert b2.directory.renew("t", "q1", pid=os.getpid()) == 1
+        with pytest.raises(TimeoutError):
+            b2.directory.query("t", "q1", timeout=0.1)
+    finally:
+        b2.stop()
+
+
+def test_recovery_expires_outstanding_grants(tmp_path):
+    """Grants outstanding at the crash do NOT carry their budgets into
+    the next incarnation — they are expired, counted, and their rings
+    are available again immediately."""
+    path = str(tmp_path / "broker.journal")
+    b1 = PipeBroker(journal_path=path, hub=False, max_rings=2)
+    b1.start()
+    b1.admit(rings=2)  # never released: the holder "dies" with b1
+    b1.stop()
+
+    b2 = PipeBroker(journal_path=path, hub=False, max_rings=2)
+    b2.start(recover=True)
+    try:
+        assert b2.expired_tickets >= 1
+        with b2.admit(rings=2, timeout=1.0):  # budget was not leaked
+            pass
+    finally:
+        b2.stop()
+
+
+def test_stale_epoch_release_is_fenced():
+    """A release of a ticket granted by a dead incarnation must not be
+    credited — one crash would otherwise double-spend rings forever."""
+    b = PipeBroker(hub=False, max_rings=4)
+    b.start()
+    adm = b.admit(rings=2)
+    b.stop()
+    b.start()  # same object, new incarnation: epoch bumped
+    try:
+        use_before = list(b._use)
+        adm.release()  # zombie from the previous epoch
+        assert b.stale_releases == 1
+        assert list(b._use) == use_before  # nothing un-credited
+        adm.release()  # idempotent: second call is a no-op, not a double
+        assert b.stale_releases == 1
+    finally:
+        b.stop()
+
+
+def test_truncated_tail_recovery_is_counted(tmp_path):
+    path = str(tmp_path / "broker.journal")
+    b1 = PipeBroker(journal_path=path, hub=False)
+    b1.start()
+    b1.directory.register("t", Endpoint("h", 1), "q")
+    b1.stop()
+    with open(path, "ab") as fh:
+        fh.write(b"12345678 {torn")  # the crash signature
+    before = telemetry.counter("broker.journal_truncated").value
+    b2 = PipeBroker(journal_path=path, hub=False)
+    b2.start(recover=True)
+    try:
+        assert telemetry.counter("broker.journal_truncated").value \
+            == before + 1
+        assert b2.directory.renew("t", "q", pid=os.getpid()) == 1
+    finally:
+        b2.stop()
+
+
+# -- lifecycle: restart + install over a stale broker --------------------------------
+
+
+def test_served_broker_restarts_on_same_port():
+    b = PipeBroker(serve=True, hub=False)
+    b.start()
+    port = b.port
+    c = DirectoryClient("127.0.0.1", port)
+    epoch_a = c.stats()["epoch"]
+    b.stop()
+    b.start()
+    try:
+        assert b.port == port  # clients reconnect where they left off
+        st = c.stats()
+        assert st["epoch"] == epoch_a + 1
+        assert c.epoch == st["epoch"]  # pinned from the response
+    finally:
+        b.stop()
+
+
+def test_install_displaces_stale_broker():
+    """A crashed scope or leaked fixture can leave a dead broker
+    registered process-globally; installing a new one must displace it
+    AND survive the stale one's eventual stop()."""
+    b1 = PipeBroker(hub=False).install()
+    b2 = PipeBroker(hub=False).install()
+    try:
+        assert get_broker() is b2
+        assert get_directory() is b2.directory
+        b1.stop()  # the stale broker's cleanup fires late
+        assert get_broker() is b2
+        assert get_directory() is b2.directory
+    finally:
+        b2.stop()
+        b1.stop()
+
+
+# -- fencing epochs over the wire ----------------------------------------------------
+
+
+def test_server_fences_stale_epoch_and_client_adopts():
+    b = PipeBroker(serve=True, hub=False)
+    b.start()
+    try:
+        c = DirectoryClient("127.0.0.1", b.port)
+        c.stats()
+        assert c.epoch == b.epoch
+        rejects = telemetry.counter("broker.rejects",
+                                    reason="stale_epoch").value
+        c.epoch = b.epoch + 5  # a pin from a parallel-universe broker
+        st = c.stats()  # rejected once, adopted, replayed
+        assert st["epoch"] == b.epoch
+        assert c.epoch == b.epoch
+        assert telemetry.counter("broker.rejects",
+                                 reason="stale_epoch").value > rejects
+    finally:
+        b.stop()
+
+
+def test_remote_release_of_dead_incarnations_ticket_is_fenced():
+    b = PipeBroker(serve=True, hub=False, max_rings=4)
+    b.start()
+    port = b.port
+    client = BrokerClient("127.0.0.1", port)
+    adm = client.admit(rings=2)
+    b.stop()
+    b.start()  # new incarnation on the same port
+    try:
+        assert b.port == port
+        adm.release()  # ticket "1.x" against epoch 2: fenced, swallowed
+        assert b.stale_releases == 1
+        assert b._use[0] == 0
+    finally:
+        b.stop()
+
+
+def test_broker_restart_fault_rule_drives_epoch_adoption():
+    """The seeded ``broker_restart`` rule makes the client see a
+    new-incarnation reject without restarting anything for real."""
+    b = PipeBroker(serve=True, hub=False)
+    b.start()
+    try:
+        c = DirectoryClient("127.0.0.1", b.port)
+        c.stats()
+        seen = telemetry.counter("broker.stale_epoch_seen").value
+        with faults.FaultPlan().broker_restart(op="stats"):
+            c.stats()
+        assert telemetry.counter("broker.stale_epoch_seen").value \
+            == seen + 1
+        assert c.epoch == b.epoch  # settled back on the live incarnation
+        assert c.stats()["epoch"] == b.epoch
+    finally:
+        b.stop()
+
+
+# -- the degraded-mode ladder --------------------------------------------------------
+
+
+def test_client_retries_idempotent_rpc_once_on_reset():
+    b = PipeBroker(serve=True, hub=False)
+    b.start()
+    try:
+        c = DirectoryClient("127.0.0.1", b.port)
+        calls = {"n": 0}
+        real = c._rpc_once
+
+        def flaky(req, ack=False):
+            if calls["n"] == 0:
+                calls["n"] += 1
+                raise ConnectionResetError(errno.ECONNRESET,
+                                           "broker restarted mid-RPC")
+            return real(req, ack)
+
+        c._rpc_once = flaky
+        assert "epoch" in c.stats()  # retried: recovery, not an error
+        assert calls["n"] == 1
+
+        calls["n"] = 0
+        c.register("t", Endpoint("h", 1), "q")  # register is an upsert
+        assert calls["n"] == 1
+        assert b.directory.renew("t", "q", pid=os.getpid()) == 1
+
+        # a non-retryable op surfaces the error instead (query pops)
+        def always(req, ack=False):
+            raise ConnectionResetError(errno.ECONNRESET, "down")
+
+        c._rpc_once = always
+        with pytest.raises(OSError):
+            c.query("t", "q", timeout=0.1)
+    finally:
+        b.stop()
+
+
+def test_dead_broker_degrades_to_local_rendezvous():
+    port = _free_port()  # nobody listening: every connect is refused
+    c = DirectoryClient("127.0.0.1", port, degraded_ok=True,
+                        probe_every=3600.0)
+    c.register("t", Endpoint("h", 7, pid=os.getpid()), "q")
+    assert c.degraded
+    assert telemetry.gauge("broker.degraded").value == 1
+    # the fallback serves the whole rendezvous surface in-process
+    assert c.query("t", "q", timeout=1.0).port == 7
+    assert c.renew("t", "q", lease_s=5.0) == 1
+    c.publish_name("n", {"head": 1})
+    assert c.lookup_name("n", timeout=1.0)["head"] == 1
+    # a lease the dead broker holds is SUSPENDED, not lost: renew says 1
+    assert c.renew("elsewhere", "q9") == 1
+    assert c.renew_name("elsewhere") == 1
+
+
+def test_degraded_client_reattaches_and_reuploads_names():
+    b = PipeBroker(serve=True, hub=False)
+    b.start()
+    try:
+        c = DirectoryClient("127.0.0.1", b.port, degraded_ok=True,
+                            probe_every=0.05)
+        with faults.FaultPlan().broker_crash(op="publish_name"):
+            c.publish_name("pub", {"head": 4})  # the broker "dies" here
+        assert c.degraded
+        time.sleep(0.06)  # past the probe interval
+        st = c.stats()  # the probe lands: re-attach
+        assert not c.degraded
+        assert c.reattaches == 1
+        assert st["epoch"] == b.epoch
+        # the name published while degraded is visible at the broker now
+        assert b.directory.lookup_name("pub", timeout=1.0)["head"] == 4
+    finally:
+        b.stop()
+
+
+def test_degraded_admission_is_noop_and_counted():
+    port = _free_port()
+    client = BrokerClient("127.0.0.1", port, degraded_ok=True)
+    before = telemetry.counter("broker.admit_degraded").value
+    adm = client.admit(rings=8)
+    assert isinstance(adm, NullAdmission)
+    assert adm.degraded
+    adm.release()
+    adm.release()  # idempotent no-op
+    assert telemetry.counter("broker.admit_degraded").value == before + 1
+
+
+def test_admission_release_is_idempotent_under_threads():
+    b = PipeBroker(hub=False, max_rings=2)
+    b.start()
+    try:
+        adm = b.admit(rings=2)
+        threads = [threading.Thread(target=adm.release) for _ in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(5.0)
+        assert b._use == [0, 0, 0]  # released exactly once
+        with b.admit(rings=2, timeout=1.0):
+            pass
+    finally:
+        b.stop()
+
+
+# -- the acceptance bar: SIGKILL mid-stress ------------------------------------------
+
+
+def _serve_broker(port: int, journal: str, recover: bool) -> None:
+    """Child process: a served broker that lives until SIGKILLed."""
+    b = PipeBroker(serve=True, host="127.0.0.1", port=port, hub=False,
+                   journal_path=journal, max_rings=16, lease_ttl=10.0,
+                   sweep_every=1.0, admit_timeout=120.0)
+    b.start(recover=recover)
+    while True:
+        time.sleep(3600.0)
+
+
+def _wait_for_port(port: int, timeout: float = 15.0) -> None:
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        try:
+            socket.create_connection(("127.0.0.1", port), timeout=1.0).close()
+            return
+        except OSError:
+            time.sleep(0.05)
+    raise TimeoutError(f"broker child never listened on {port}")
+
+
+def _orphan_snapshot():
+    shm = {n for n in os.listdir(_SHM_DIR) if n.startswith("pgring-")} \
+        if os.path.isdir(_SHM_DIR) else set()
+    fifos = {n for n in os.listdir(tempfile.gettempdir()) if ".pgdb-" in n}
+    return shm, fifos
+
+
+@needs_doorbell
+def test_sigkill_broker_mid_stress_drains_green(tmp_path):
+    """SIGKILL the broker under a 200-plan stress, restart it from the
+    journal on the same port: every plan drains bit-identical, the new
+    incarnation fences the old epoch's zombies, and nothing leaks."""
+    n_plans = 200
+    journal = str(tmp_path / "broker.journal")
+    port = _free_port()
+    shm_before, fifo_before = _orphan_snapshot()
+    child = _mp.Process(target=_serve_broker, args=(port, journal, False),
+                        daemon=True)
+    child.start()
+    _wait_for_port(port)
+
+    client = BrokerClient("127.0.0.1", port, admit_timeout=120.0)
+    client.directory.probe_every = 0.2
+    client.install()
+    child2 = None
+    try:
+        src, dst = make_engine("colstore"), make_engine("colstore")
+        blocks = {}
+        for i in range(n_plans):
+            blocks[i] = make_paper_block(32, seed=i)
+            src.put_block(f"t{i}", blocks[i])
+        base_fds = process_fd_count()
+        failures = []
+        started = threading.Semaphore(0)
+
+        def one(i):
+            started.release()
+            try:
+                res = (plan(negotiate=False)
+                       .move(src, f"t{i}", dst, f"d{i}",
+                             config=_edge_cfg(), timeout=10)
+                       .options(retries=3, backoff=0.1)
+                       .compile()
+                       .execute())
+                assert res.ok, res.errors
+            except Exception as e:  # noqa: BLE001 - aggregated below
+                failures.append((i, repr(e)))
+
+        threads = [threading.Thread(target=one, args=(i,))
+                   for i in range(n_plans)]
+        for t in threads:
+            t.start()
+        for _ in range(n_plans):
+            started.acquire()
+        time.sleep(0.4)  # mid-stress: grants out, queue deep, plans live
+
+        os.kill(child.pid, signal.SIGKILL)
+        child.join(10.0)
+        time.sleep(0.3)
+        child2 = _mp.Process(target=_serve_broker,
+                             args=(port, journal, True), daemon=True)
+        child2.start()
+        _wait_for_port(port)
+
+        for t in threads:
+            t.join(timeout=300.0)
+        assert not any(t.is_alive() for t in threads)
+        assert not failures, failures[:5]
+        for i in range(n_plans):
+            assert_blocks_equal(blocks[i], dst.get_block(f"d{i}"),
+                                check_names=False)
+
+        # give stragglers (stale releases, re-attach probes) a beat
+        deadline = time.monotonic() + 10.0
+        stale = 0
+        while time.monotonic() < deadline:
+            st = client.stats()
+            counters = st["metrics"]["counters"]
+            stale = (counters.get("broker.rejects{reason=stale_epoch}", 0)
+                     + st.get("stale_releases", 0))
+            if stale and st["epoch"] == 2 and not client.degraded:
+                break
+            time.sleep(0.2)
+        assert st["epoch"] == 2  # recovered incarnation, fenced
+        assert stale > 0  # old-epoch zombies were rejected, not credited
+        assert not client.degraded  # the ladder stepped back up
+        assert client.directory.reattaches >= 1
+    finally:
+        client.stop()
+        for p in (child, child2):
+            if p is not None and p.is_alive():
+                p.terminate()
+                p.join(5.0)
+
+    # abandoned attempt sides (exporter died at rendezvous) time out on
+    # their own connect_timeout and release their rings — wait them out
+    deadline = time.monotonic() + 60.0
+    while time.monotonic() < deadline and any(
+            t.name.startswith(("pipegen-import", "pipegen-export"))
+            for t in threading.enumerate()):
+        time.sleep(0.2)
+    from repro.core.shm_ring import drain_pools
+    drain_pools()
+    shm_after, fifo_after = _orphan_snapshot()
+    assert not (shm_after - shm_before)  # no orphaned rings
+    assert not (fifo_after - fifo_before)  # no orphaned doorbells
+    # fds from just-reaped straggler threads close asynchronously —
+    # give the count a moment to settle before calling it a leak
+    deadline = time.monotonic() + 15.0
+    after_fds = process_fd_count()
+    while after_fds > base_fds + 8 and time.monotonic() < deadline:
+        time.sleep(0.25)
+        after_fds = process_fd_count()
+    assert after_fds <= base_fds + 8, (base_fds, after_fds)
